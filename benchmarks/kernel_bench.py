@@ -1,0 +1,69 @@
+"""Kernel micro-benchmarks (CPU wall time of interpret/jnp paths + the
+structural VMEM/bandwidth accounting that motivates each kernel on TPU).
+
+On this CPU container wall-clock numbers only sanity-check the harness;
+the meaningful output is the bytes model: lif_scan's state-traffic saving
+and ternary_matmul's 8x weight-byte reduction, both derived from shapes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lif import LIFParams
+from repro.kernels import (lif_scan, lif_scan_ref, pack_ternary_weights,
+                           ternary_matmul, ternary_matmul_ref)
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def lif_rows():
+    p = LIFParams()
+    rows = []
+    for (t, n) in [(16, 32 * 32 * 16), (16, 2048), (32, 8 * 8 * 32)]:
+        cur = jax.random.normal(jax.random.PRNGKey(0), (t, n)) * 0.8
+        us_ref = _time(jax.jit(lambda c: lif_scan_ref(c, p)[0]), cur)
+        us_k = _time(jax.jit(lambda c: lif_scan(c, p)[0]), cur)
+        # HBM traffic model: reference scan writes/reads V (f32) every
+        # step; fused kernel keeps V in VMEM.
+        bytes_ref = t * n * (4 + 4 + 2 * 4)       # I read, S write, V rw
+        bytes_fused = t * n * (4 + 4)             # I read, S write
+        rows.append((f"lif_scan_T{t}_N{n}", us_k,
+                     f"ref_us={us_ref:.0f};state_traffic_saving="
+                     f"{bytes_ref / bytes_fused:.2f}x"))
+    return rows
+
+
+def ternary_rows():
+    rows = []
+    for (m, k, n) in [(1, 2048, 8192), (16, 4096, 4096)]:
+        w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+        x = jax.random.normal(jax.random.PRNGKey(2), (m, k))
+        wp, sc = pack_ternary_weights(w)
+        us_ref = _time(jax.jit(ternary_matmul_ref), x, wp, sc)
+        us_k = _time(ternary_matmul, x, wp, sc)
+        w_bytes_bf16 = k * n * 2
+        w_bytes_packed = (k // 4) * n + n * 4
+        rows.append((f"ternary_mm_{m}x{k}x{n}", us_k,
+                     f"ref_us={us_ref:.0f};weight_bytes="
+                     f"{w_bytes_bf16 / w_bytes_packed:.2f}x_smaller"))
+    return rows
+
+
+def main():
+    for name, us, derived in lif_rows() + ternary_rows():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper Table I: ColibriES vs neuromorphic-platform prior work.
+
+Reproduces the ColibriES column from our modelled pipeline (power during
+inference, idle power, energy/inference normalized to 6 inf/s as in the
+paper's note d) and prints the published comparison rows for context.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import KRAKEN_DOMAINS, KrakenModel, NOMINAL
+
+# Published rows (platform, app, accuracy %, P_inf mW, P_idle mW, E_inf mJ)
+PRIOR = [
+    ("Loihi [7]", "KWS", 95.9, 110.0, 29.2, 0.371),
+    ("TrueNorth [8]", "KWS", 92.9, 26.5, 21.2, 29.2),
+    ("Loihi [9]", "GR", 96.0, 141.9, 29.2, 5.9),
+    ("Loihi [10]", "GR", 90.5, float("nan"), 29.2, float("nan")),
+    ("TrueNorth [11]", "GR", 90.6, 133.7, 101.6, 29.8),
+]
+PAPER_COLIBRIES = ("Kraken/SNE (paper)", "GR", 83.0, 35.6, 17.7, 7.7)
+
+
+def colibries_row():
+    m = KrakenModel()
+    acct = m.closed_loop(events=NOMINAL.events,
+                         layer_in_spikes=NOMINAL.layer_in_spikes,
+                         layer_fanout=NOMINAL.layer_fanout,
+                         layer_passes=NOMINAL.layer_passes)
+    # Energy normalized to 6 inf/s (paper note d): one inference per
+    # 1/6 s; idle power covers the gap between latency and period.
+    period_ms = 1000.0 / 6.0
+    idle_gap_ms = max(period_ms - acct["total_time_ms"], 0.0)
+    e_norm = acct["total_energy_mj"] + acct["p_idle_mw"] * idle_gap_ms * 1e-3
+    return ("Kraken/SNE (ours)", "GR", 83.0,
+            acct["p_avg_active_mw"], acct["p_idle_mw"], e_norm)
+
+
+def main():
+    print("platform, app, accuracy_pct, P_inf_mW, P_idle_mW, E_inf_mJ")
+    for row in PRIOR + [PAPER_COLIBRIES, colibries_row()]:
+        name, app, acc, p, pi, e = row
+        print(f"{name}, {app}, {acc}, {p:.1f}, {pi:.1f}, {e:.3f}")
+    ours = colibries_row()
+    ref = PAPER_COLIBRIES
+    print(f"# model vs paper: P {ours[3] / ref[3]:.3f}x, "
+          f"Pidle {ours[4] / ref[4]:.3f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro: ColibriES (Rutishauser et al., 2023) as a production-scale JAX
+framework -- event-driven SNN + ternary accelerator analogues, a model zoo
+of 10 assigned architectures, multi-pod distribution, and a calibrated
+energy/latency model of the Kraken SoC."""
+__version__ = "0.1.0"

@@ -1,0 +1,43 @@
+"""Architecture registry: exact published configs + reduced smoke variants.
+
+``get_config(arch, smoke=False)`` returns the ModelConfig (or SNNConfig for
+'colibries'). ``ARCHS`` lists the 10 assigned LM-family architectures.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any
+
+ARCHS = [
+    "h2o-danube-1.8b",
+    "glm4-9b",
+    "nemotron-4-340b",
+    "llama3.2-1b",
+    "rwkv6-7b",
+    "llama4-scout-17b-a16e",
+    "deepseek-moe-16b",
+    "zamba2-1.2b",
+    "seamless-m4t-medium",
+    "qwen2-vl-2b",
+]
+
+_MODULES = {
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "glm4-9b": "glm4_9b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "llama3.2-1b": "llama3_2_1b",
+    "rwkv6-7b": "rwkv6_7b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "colibries": "colibries",
+}
+
+
+def get_config(arch: str, smoke: bool = False) -> Any:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.SMOKE if smoke else mod.CONFIG

@@ -1,0 +1,27 @@
+"""ColibriES core: the paper's contribution as composable JAX modules.
+
+Submodules:
+  events   -- DVS event windows, voxelization (acquisition + preprocessing)
+  lif      -- LIF neuron dynamics with STBP surrogate gradients (SNE model)
+  snn      -- the Table II DVS-Gesture spiking CNN + STBP loss
+  ternary  -- TWN ternary quantization + 2-bit packing (CUTIE model)
+  tiling   -- capacity-constrained TDM tiling planner (SNE tiled execution)
+  pipeline -- the closed acquisition->preprocess->infer->actuate loop
+  energy   -- calibrated Kraken power/latency model (Tables I & III)
+"""
+from repro.core.lif import LIFParams, lif_scan_reference, lif_step, spike_surrogate
+from repro.core.snn import SNNConfig, init_snn, snn_apply, snn_logits, snn_loss
+from repro.core.ternary import pack2bit, ternarize, ternary_ste, unpack2bit
+from repro.core.tiling import SNE_NEURON_CAPACITY, TilePlan, plan_layer_tiles, plan_network
+from repro.core.energy import KRAKEN_DOMAINS, KrakenModel, NOMINAL, StageExecution, pipeline_energy
+from repro.core.pipeline import ClosedLoopPipeline, ClosedLoopResult, pwm_from_logits
+
+__all__ = [
+    "LIFParams", "lif_scan_reference", "lif_step", "spike_surrogate",
+    "SNNConfig", "init_snn", "snn_apply", "snn_logits", "snn_loss",
+    "pack2bit", "ternarize", "ternary_ste", "unpack2bit",
+    "SNE_NEURON_CAPACITY", "TilePlan", "plan_layer_tiles", "plan_network",
+    "KRAKEN_DOMAINS", "KrakenModel", "NOMINAL", "StageExecution",
+    "pipeline_energy",
+    "ClosedLoopPipeline", "ClosedLoopResult", "pwm_from_logits",
+]

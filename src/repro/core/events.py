@@ -1,0 +1,188 @@
+"""Event-stream handling: the ColibriES acquisition + preprocessing stages.
+
+ColibriES streams DVS events (x, y, t, polarity) from the camera through a
+dedicated uDMA interface into L2, then the 8-core RISC-V cluster assembles
+the spike streams for the SNE (and re-tiles streams between layers when the
+network is executed in SNE's time-domain-multiplexed tiled mode).
+
+TPU-native adaptation: per-event DMA has no analogue on a synchronous dense
+accelerator, so acquisition becomes a host-side pipeline that delivers
+fixed-duration event windows, and preprocessing becomes *event
+voxelization*: sorted segment-sums binning events into a dense
+(T, P, H, W) spike tensor -- the format the fused LIF scan kernel consumes.
+The information content matches what SNE receives (time-binned spikes at the
+training time resolution); only the us-level asynchronicity is coarsened to
+the bin width, exactly as the paper's own 300 ms window batching does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "EventWindow",
+    "voxelize",
+    "voxelize_batch",
+    "synthetic_gesture_events",
+    "DVS_SENSOR_H",
+    "DVS_SENSOR_W",
+]
+
+# DVS128 sensor geometry (IBM DVS-Gesture dataset).
+DVS_SENSOR_H = 128
+DVS_SENSOR_W = 128
+
+
+@dataclasses.dataclass
+class EventWindow:
+    """A fixed-duration window of DVS events (the acquisition unit).
+
+    Attributes:
+      x, y: int32 pixel coordinates, shape (N,).
+      t: int32 microsecond timestamps relative to window start, shape (N,).
+      p: int32 polarity in {0, 1}, shape (N,).
+      duration_us: window length in microseconds (paper: 300 ms windows).
+      label: optional int class label (11 classes for DVS-Gesture).
+    """
+
+    x: np.ndarray
+    y: np.ndarray
+    t: np.ndarray
+    p: np.ndarray
+    duration_us: int
+    label: int = -1
+
+    @property
+    def num_events(self) -> int:
+        return int(self.x.shape[0])
+
+
+def voxelize(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    t: jnp.ndarray,
+    p: jnp.ndarray,
+    *,
+    duration_us: int,
+    time_bins: int,
+    height: int = DVS_SENSOR_H,
+    width: int = DVS_SENSOR_W,
+    valid: jnp.ndarray | None = None,
+    binary: bool = True,
+) -> jnp.ndarray:
+    """Bin an event stream into a dense (T, 2, H, W) spike tensor.
+
+    This is the cluster preprocessing step of the paper mapped to TPU idiom:
+    a scatter-add implemented as ``segment_sum`` over linearized voxel
+    indices (sorted-segment form is TPU-friendly; no per-event control
+    flow).
+
+    Args:
+      x, y, t, p: event arrays, shape (N,). May be padded; see ``valid``.
+      duration_us: window duration; timestamps are clipped to it.
+      time_bins: number of temporal bins T (the SNN simulation steps).
+      valid: optional bool mask (N,) marking real events in a padded batch.
+      binary: if True the result is clipped to {0,1} spikes (SNE consumes
+        unary spike trains); otherwise event counts are preserved.
+
+    Returns:
+      float32 tensor of shape (time_bins, 2, height, width).
+    """
+    n = x.shape[0]
+    t = jnp.clip(t, 0, duration_us - 1)
+    # Integer-divide by the bin width (avoids 64-bit t*time_bins overflow).
+    bin_width = max(duration_us // time_bins, 1)
+    tb = jnp.minimum(t // bin_width, time_bins - 1).astype(jnp.int32)
+    flat = ((tb * 2 + p) * height + y) * width + x
+    num_voxels = time_bins * 2 * height * width
+    if valid is None:
+        weights = jnp.ones((n,), jnp.float32)
+    else:
+        weights = valid.astype(jnp.float32)
+        flat = jnp.where(valid, flat, num_voxels - 1)  # park padding in last voxel
+        # padded events contribute weight 0, so parking is harmless
+    counts = jax.ops.segment_sum(weights, flat, num_segments=num_voxels)
+    vox = counts.reshape(time_bins, 2, height, width)
+    if binary:
+        vox = jnp.clip(vox, 0.0, 1.0)
+    return vox
+
+
+def voxelize_batch(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    t: jnp.ndarray,
+    p: jnp.ndarray,
+    valid: jnp.ndarray,
+    *,
+    duration_us: int,
+    time_bins: int,
+    height: int = DVS_SENSOR_H,
+    width: int = DVS_SENSOR_W,
+    binary: bool = True,
+) -> jnp.ndarray:
+    """Vectorized voxelization over a padded batch: (B, N) -> (B, T, 2, H, W)."""
+    fn = lambda xx, yy, tt, pp, vv: voxelize(
+        xx, yy, tt, pp,
+        duration_us=duration_us, time_bins=time_bins,
+        height=height, width=width, valid=vv, binary=binary,
+    )
+    return jax.vmap(fn)(x, y, t, p, valid)
+
+
+def synthetic_gesture_events(
+    rng: np.random.Generator,
+    label: int,
+    *,
+    duration_us: int = 300_000,
+    mean_events: int = 60_000,
+    height: int = DVS_SENSOR_H,
+    width: int = DVS_SENSOR_W,
+    num_classes: int = 11,
+) -> EventWindow:
+    """Generate a synthetic DVS-Gesture-like event window.
+
+    The DVS-Gesture classes are hand/arm motions (waves, circles, ...); a
+    DVS camera reports events along moving edges. We synthesize a class-
+    dependent parametric motion (distinct angular frequency / orbit / phase
+    per class) of a small edge cluster plus uniform background noise, which
+    yields event windows whose spatio-temporal statistics (event rate,
+    spatial locality, motion coherence) are DVS-like and which a
+    spatio-temporal classifier must integrate over time to separate.
+    """
+    assert 0 <= label < num_classes
+    n = int(rng.poisson(mean_events))
+    n = max(n, 1024)
+    # Class-dependent motion parameters: deterministic per label.
+    w0 = 2.0 * np.pi * (1.0 + 0.7 * label)           # angular frequency
+    radius = 20.0 + 3.0 * (label % 4)                 # orbit radius
+    cx = width / 2.0 + 12.0 * np.cos(2.0 * np.pi * label / num_classes)
+    cy = height / 2.0 + 12.0 * np.sin(2.0 * np.pi * label / num_classes)
+    phase = 2.0 * np.pi * label / num_classes
+    vertical = label % 2 == 0                          # motion axis flavour
+
+    t = np.sort(rng.integers(0, duration_us, size=n)).astype(np.int64)
+    tau = t.astype(np.float64) / duration_us
+    ang = w0 * tau + phase
+    px = cx + radius * np.cos(ang)
+    py = cy + radius * (np.sin(2 * ang) if vertical else np.sin(ang))
+    # Events scatter around the moving edge.
+    sx = rng.normal(0.0, 3.0, size=n)
+    sy = rng.normal(0.0, 3.0, size=n)
+    x = np.clip(np.round(px + sx), 0, width - 1).astype(np.int32)
+    y = np.clip(np.round(py + sy), 0, height - 1).astype(np.int32)
+    # Polarity follows the direction of intensity change along the motion.
+    p = ((np.cos(ang) + rng.normal(0, 0.35, size=n)) > 0).astype(np.int32)
+    # ~10% uniform background noise events.
+    noise = rng.random(n) < 0.10
+    x = np.where(noise, rng.integers(0, width, size=n), x).astype(np.int32)
+    y = np.where(noise, rng.integers(0, height, size=n), y).astype(np.int32)
+    p = np.where(noise, rng.integers(0, 2, size=n), p).astype(np.int32)
+    return EventWindow(
+        x=x, y=y, t=t.astype(np.int32), p=p,
+        duration_us=duration_us, label=label,
+    )

@@ -1,0 +1,110 @@
+"""Ternary weight quantization -- the CUTIE wing of Kraken.
+
+CUTIE (Scherer et al., 2022) is Kraken's ternary-weight ({-1, 0, +1}) CNN
+accelerator. We reproduce its numerical contract in JAX:
+
+  * TWN-style quantization (Li & Liu, 2016): per-output-channel threshold
+    delta = 0.7 * mean|W|, ternarize, per-channel fp scale = mean |W| over
+    the surviving weights.
+  * Straight-through-estimator QAT so networks can be trained ternary.
+  * 2-bit packing (4 weights/byte) -- the storage format consumed by the
+    ``kernels/ternary_matmul`` Pallas kernel.
+
+TPU adaptation (see DESIGN.md): CUTIE wins on *compute* by unrolling
+ternary MACs in silicon; the MXU is fixed-function dense bf16, so the win
+that transfers is *weight bandwidth*: 2-bit packed weights cut HBM->VMEM
+weight traffic 8x vs bf16, which is exactly the bottleneck of memory-bound
+LM decode. ``quantize``/``pack`` here are shared by the paper-faithful TNN
+path and the beyond-paper LM serving path (``quant=ternary``).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ternarize",
+    "ternary_ste",
+    "pack2bit",
+    "unpack2bit",
+    "TERNARY_DELTA_FACTOR",
+]
+
+TERNARY_DELTA_FACTOR = 0.7  # TWN threshold heuristic
+
+
+def ternarize(
+    w: jnp.ndarray, axis: int | None = -1
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Ternarize weights. Returns (q, scale) with q in {-1, 0, +1} int8.
+
+    Args:
+      w: float weights, any shape.
+      axis: axis treated as the output channel (per-channel scale). ``None``
+        gives a single per-tensor scale.
+    """
+    absw = jnp.abs(w)
+    if axis is None:
+        delta = TERNARY_DELTA_FACTOR * absw.mean()
+        mask = absw > delta
+        denom = jnp.maximum(mask.sum(), 1)
+        scale = jnp.where(mask, absw, 0.0).sum() / denom
+    else:
+        reduce_axes = tuple(i for i in range(w.ndim) if i != axis % w.ndim)
+        delta = TERNARY_DELTA_FACTOR * absw.mean(axis=reduce_axes,
+                                                 keepdims=True)
+        mask = absw > delta
+        denom = jnp.maximum(mask.sum(axis=reduce_axes, keepdims=True), 1)
+        scale = jnp.where(mask, absw, 0.0).sum(
+            axis=reduce_axes, keepdims=True) / denom
+    q = jnp.where(mask, jnp.sign(w), 0.0).astype(jnp.int8)
+    return q, scale.astype(w.dtype)
+
+
+@jax.custom_vjp
+def ternary_ste(w: jnp.ndarray) -> jnp.ndarray:
+    """Fake-quantized ternary weights with straight-through gradients (QAT)."""
+    q, scale = ternarize(w)
+    return q.astype(w.dtype) * scale
+
+
+def _ste_fwd(w):
+    return ternary_ste(w), None
+
+
+def _ste_bwd(_, g):
+    return (g,)  # straight-through
+
+
+ternary_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def pack2bit(q: jnp.ndarray) -> jnp.ndarray:
+    """Pack int8 ternary values {-1,0,1} 4-per-byte along the LAST axis.
+
+    Encoding: value + 1 in {0,1,2}, 2 bits each, little-endian within the
+    byte. The last axis length must be a multiple of 4.
+
+    Returns a uint8 array with last axis shrunk 4x.
+    """
+    if q.shape[-1] % 4 != 0:
+        raise ValueError(f"last axis {q.shape[-1]} not a multiple of 4")
+    enc = (q.astype(jnp.int32) + 1).astype(jnp.uint8)  # {0,1,2}
+    enc = enc.reshape(*q.shape[:-1], q.shape[-1] // 4, 4)
+    packed = (enc[..., 0]
+              | (enc[..., 1] << 2)
+              | (enc[..., 2] << 4)
+              | (enc[..., 3] << 6))
+    return packed.astype(jnp.uint8)
+
+
+def unpack2bit(packed: jnp.ndarray, *, out_dtype=jnp.int8) -> jnp.ndarray:
+    """Inverse of :func:`pack2bit`: uint8 -> ternary values, last axis x4."""
+    p = packed.astype(jnp.uint8)
+    parts = [(p >> (2 * i)) & 0x3 for i in range(4)]
+    enc = jnp.stack(parts, axis=-1)  # (..., n/4, 4)
+    q = enc.astype(jnp.int32) - 1
+    return q.reshape(*packed.shape[:-1], packed.shape[-1] * 4).astype(out_dtype)

@@ -1,0 +1,4 @@
+"""Data pipelines: deterministic synthetic LM + DVS-gesture streams."""
+from repro.data.synthetic import (DVSBatch, TokenTaskConfig,
+                                  dvs_gesture_batch, token_batch,
+                                  token_stream)

@@ -1,0 +1,4 @@
+"""Distribution: sharding rules (FSDP/TP/EP/CP), in-model annotations."""
+from repro.distributed.sharding import (batch_pspecs, cache_pspecs,
+                                        opt_pspecs, param_pspecs, shardings)
+from repro.distributed.annotate import constrain, current_mesh

@@ -1,0 +1,135 @@
+"""In-model sharding annotations that degrade to no-ops off-mesh.
+
+``constrain(x, spec)`` applies ``with_sharding_constraint`` when a mesh
+context is active (pjit under ``with mesh:``), and is a no-op in plain
+single-device execution (unit tests, examples). The pseudo-axis
+``"batch"`` expands to every batch-carrying mesh axis present
+(("pod", "data") on the multi-pod mesh, ("data",) single-pod); axis names
+absent from the active mesh are dropped.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["constrain", "current_mesh", "unshard_fsdp",
+           "execution_mode", "get_execution_mode"]
+
+AxisLike = Union[None, str, Tuple[str, ...]]
+
+
+def current_mesh():
+    """The active (context) mesh, or None."""
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def _expand(axis: AxisLike, names) -> AxisLike:
+    if axis is None:
+        return None
+    if axis == "batch":
+        present = tuple(a for a in ("pod", "data") if a in names)
+        return present if present else None
+    if isinstance(axis, tuple):
+        kept = tuple(a for a in axis if a in names)
+        return kept if kept else None
+    return axis if axis in names else None
+
+
+def constrain(x, spec: Sequence[AxisLike]):
+    """Sharding-constrain ``x`` if a mesh is active; otherwise identity."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    resolved = P(*(_expand(a, names) for a in spec))
+    try:
+        return jax.lax.with_sharding_constraint(x, resolved)
+    except Exception:
+        return x
+
+
+def _sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+import contextlib
+import threading
+
+_MODE = threading.local()
+
+
+def get_execution_mode() -> str:
+    return getattr(_MODE, "mode", "train")
+
+
+@contextlib.contextmanager
+def execution_mode(mode: str):
+    """'train' (default): weights are gathered at use (FSDP gather-at-use,
+    right for high-arithmetic-intensity steps). 'serve': weights STAY 2-D
+    (data x model) sharded and the tiny decode activations are
+    partial-sum all-reduced instead -- at batch<=128 decode, per-device
+    weight reads are params/256 rather than params/16 (Perf cycle 7).
+    Read at trace time by unshard_fsdp."""
+    prev = get_execution_mode()
+    _MODE.mode = mode
+    try:
+        yield
+    finally:
+        _MODE.mode = prev
+
+
+def unshard_fsdp(w, *candidates: Sequence[AxisLike]):
+    """FSDP gather-at-use: re-constrain a weight so only TP ('model') dims
+    stay sharded, forcing GSPMD to all-gather the small FSDP ('data')
+    shards instead of partial-sum all-reducing the huge activation output
+    of the contraction (the 150 GB/layer failure mode -- EXPERIMENTS.md
+    Perf cycle 1).
+
+    ``candidates`` are specs tried in order; the first whose named axes
+    all divide the corresponding dims wins (e.g. heads-on-model, falling
+    back to head_dim-on-model for llama4's 40 heads). No candidate valid
+    -> fully replicated use (still correct, still cheap vs activations).
+
+    In 'serve' execution mode this is a NO-OP: decode keeps weights fully
+    sharded and lets small activations carry the collectives.
+    """
+    if get_execution_mode() == "serve":
+        return w
+    mesh = current_mesh()
+    if mesh is None or not hasattr(w, "shape"):
+        return w
+    names = set(mesh.axis_names)
+    sizes = _sizes(mesh)
+    for cand in candidates + ((None,) * w.ndim,):
+        resolved = [_expand(a, names) for a in cand]
+        ok = True
+        for dim, axis in zip(w.shape, resolved):
+            if axis is None:
+                continue
+            n = (np.prod([sizes[a] for a in axis])
+                 if isinstance(axis, tuple) else sizes[axis])
+            if dim % n:
+                ok = False
+                break
+        if ok:
+            try:
+                return jax.lax.with_sharding_constraint(w, P(*resolved))
+            except Exception:
+                return w
+    return w

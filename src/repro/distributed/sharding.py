@@ -1,0 +1,248 @@
+"""Sharding rules: logical parameter axes -> mesh axes (FSDP + TP + EP/SP).
+
+Strategy (DESIGN.md):
+  * ``model`` axis: tensor parallelism -- vocab, heads (or head_dim
+    fallback), d_ff, experts.
+  * ``data`` axis: FSDP -- the ``embed`` (d_model) dim of every matrix, and
+    the optimizer moments with it. Batch is sharded over (pod, data).
+  * ``pod`` axis: pure DP. Only gradient all-reduces cross pods (DCN).
+  * Decode cells with global_batch < |data|: context parallelism -- the KV
+    cache/state is sharded over ``data`` (sequence or state-head dim).
+
+Every assignment is divisibility-checked with fallbacks (e.g. llama4's 40
+heads % 16 != 0 -> shard head_dim instead; seamless' vocab 256206 % 16
+!= 0 -> vocab unsharded). One mesh axis is used at most once per tensor.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+
+__all__ = [
+    "param_pspecs", "batch_pspecs", "cache_pspecs", "shardings",
+    "batch_axes", "opt_pspecs",
+]
+
+# Preferred mesh axis per logical axis, in priority order.
+_PREFS: Dict[str, Tuple[str, ...]] = {
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),            # fallback target only
+    "mlp": ("model",),
+    "experts": ("model",),
+    "heads_x": ("model",),     # rwkv fused-head projections (d_model-sized)
+    "conv": ("model",),
+    "embed": ("data",),        # FSDP
+    "embed_out": ("data",),
+    "lora": (),
+    "state": (),
+    "norm": (),
+    "layers": (),
+}
+# If the keyed logical axis could not take 'model', try these dims instead.
+_FALLBACKS = {
+    "heads": ("head_dim",),
+    "kv_heads": ("head_dim",),
+    "vocab": (),
+    "mlp": ("embed_out",),
+}
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def resolve_spec(shape: Sequence[int], axes: Sequence[Optional[str]],
+                 mesh: Mesh) -> P:
+    """Assign mesh axes to tensor dims honoring divisibility + uniqueness."""
+    assign: list[Optional[str]] = [None] * len(shape)
+    used = set()
+
+    def try_assign(dim: int, mesh_axis: str) -> bool:
+        if mesh_axis in used or mesh_axis not in mesh.axis_names:
+            return False
+        if shape[dim] % _axis_size(mesh, mesh_axis) != 0:
+            return False
+        assign[dim] = mesh_axis
+        used.add(mesh_axis)
+        return True
+
+    # First pass: direct preferences.
+    pending_fallback = []
+    for i, name in enumerate(axes):
+        if name is None:
+            continue
+        ok = False
+        for ma in _PREFS.get(name, ()):
+            if try_assign(i, ma):
+                ok = True
+                break
+        if not ok and name in _FALLBACKS:
+            pending_fallback.append(name)
+    # Second pass: fallbacks (e.g. heads failed -> shard head_dim).
+    for name in pending_fallback:
+        for fb in _FALLBACKS[name]:
+            done = False
+            for i, nm in enumerate(axes):
+                if nm == fb and assign[i] is None:
+                    # fallback inherits the original preference list
+                    for ma in _PREFS.get(name, ()):
+                        if try_assign(i, ma):
+                            done = True
+                            break
+                if done:
+                    break
+            if done:
+                break
+    return P(*assign)
+
+
+def param_pspecs(defs: Any, mesh: Mesh, mode: str = "train") -> Any:
+    """PartitionSpec tree matching a ParamDef tree.
+
+    mode="serve": drop the FSDP ('data') sharding so weights are resident
+    per device (TP only) -- decode must not all-gather weights every step
+    (Perf cycle 5). Memory check: the biggest serve model (nemotron 340B)
+    is 341e9 * 2B / 16 TP shards = 42 GB/device > HBM, so serve mode keeps
+    FSDP for models over ``_SERVE_FSDP_THRESHOLD`` params and documents
+    the trade (weight gathers amortized over decode batches).
+    """
+    def one(d: ParamDef):
+        axes = d.axes
+        if mode == "serve":
+            axes = tuple(None if a in ("embed", "embed_out") else a
+                         for a in axes)
+        return resolve_spec(d.shape, axes, mesh)
+
+    if mode == "serve":
+        from repro.models.params import tree_num_params
+        if tree_num_params(defs) > _SERVE_FSDP_THRESHOLD:
+            mode = "train"      # fall back: weights don't fit replicated
+    return jax.tree.map(one, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ~2 bytes/param over 16-way TP must fit in ~12 GB usable HBM.
+_SERVE_FSDP_THRESHOLD = 96_000_000_000
+
+
+def opt_pspecs(defs: Any, mesh: Mesh) -> Any:
+    """Adam moment specs (same layout as params) -- see training.optimizer."""
+    ps = param_pspecs(defs, mesh)
+    return {"m": ps, "v": ps, "step": P()}
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes carrying the batch dim: (pod, data) when pods exist."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _batch_dim_spec(mesh: Mesh, global_batch: int):
+    """Largest prefix of (pod, data) that divides the batch."""
+    axes = []
+    prod = 1
+    for a in batch_axes(mesh):
+        if global_batch % (prod * _axis_size(mesh, a)) == 0:
+            axes.append(a)
+            prod *= _axis_size(mesh, a)
+    return tuple(axes) if axes else None
+
+
+def batch_pspecs(cfg: ModelConfig, mesh: Mesh, global_batch: int,
+                 kind: str) -> Dict[str, P]:
+    """Input-batch PartitionSpecs per family and step kind."""
+    b = _batch_dim_spec(mesh, global_batch)
+    specs: Dict[str, P] = {"tokens": P(b, None), "targets": P(b, None)}
+    if cfg.family == "encdec":
+        specs["frames"] = P(b, None, None)
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = P(b, None, None)
+    return specs
+
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, cache: Any,
+                 global_batch: int) -> Any:
+    """Decode-cache specs. Batch-sharded when possible; context-parallel
+    (sequence / state-head over 'data') when global_batch < |data|."""
+    b = _batch_dim_spec(mesh, global_batch)
+
+    def spec_for(path: str, x) -> P:
+        shape = x.shape
+        if path == "pos":
+            return P()
+        if cfg.family in ("dense", "moe", "vlm"):
+            # (L, B, S, KVH, hd)
+            return _kv_spec(shape, b, mesh)
+        if cfg.family == "encdec":
+            return _kv_spec(shape, b, mesh)
+        if cfg.family == "rwkv6":
+            if path == "state":        # (L, B, H, dk, dv)
+                return _state_spec(shape, b, mesh)
+            return P(None, b, None)     # tm_x / cm_x (L, B, D)
+        if cfg.family == "zamba2":
+            if path in ("attn_k", "attn_v"):
+                return _kv_spec(shape, b, mesh)
+            if path == "ssm":           # (L, B, H, P, N)
+                return _state_spec(shape, b, mesh)
+            return P(None, b, None, None)  # conv (L, B, k-1, cd)
+        return P()
+
+    flat = {}
+    for k, v in cache.items():
+        flat[k] = spec_for(k, v)
+    return flat
+
+
+def _kv_spec(shape, b, mesh) -> P:
+    """(L, B, S, KVH, hd) decode cache: batch over (pod,)data when
+    shardable, and the sequence dim over 'model' (flash-decoding style:
+    every device holds a contiguous KV stripe, attends locally, and only
+    the tiny softmax stats cross the TP axis -- Perf cycle 6; beats
+    sharding kv_heads/head_dim, whose contraction forces score
+    all-reduces or cache gathers). Falls back to kv-heads sharding when
+    the stripe does not divide."""
+    _, bsz, s, kvh, hd = shape
+    dsz = _axis_size(mesh, "data")
+    msz = _axis_size(mesh, "model")
+    if b is not None:
+        bdim, free_data = b, False
+    elif s % dsz == 0 and s >= dsz:
+        bdim, free_data = None, True   # context parallelism over 'data'
+    else:
+        bdim, free_data = None, False
+    if s % msz == 0 and s >= msz:
+        sdim = ("data", "model") if free_data and s % (dsz * msz) == 0 \
+            else "model"
+        return P(None, bdim, sdim, None, None)
+    if free_data:
+        return P(None, None, "data",
+                 "model" if kvh % msz == 0 else None, None)
+    kdim = "model" if kvh % msz == 0 else None
+    hdim = "model" if (kdim is None and hd % msz == 0) else None
+    return P(None, bdim, None, kdim, hdim)
+
+
+def _state_spec(shape, b, mesh) -> P:
+    """(L, B, H, x, y) recurrent state: heads over 'model'; if batch is not
+    shardable, also spread x over 'data'."""
+    _, bsz, h, x, y = shape
+    msz = _axis_size(mesh, "model")
+    dsz = _axis_size(mesh, "data")
+    hdim = "model" if h % msz == 0 else None
+    xdim = None
+    if b is None and x % dsz == 0:
+        xdim = "data"
+    return P(None, b, hdim, xdim, None)
+
+
+def shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,171 @@
+"""Fused LIF temporal-scan Pallas kernel -- the SNE analogue on TPU.
+
+SNE (Kraken's sparse neural engine) keeps neuron membrane state *inside the
+engine* while a spike train streams through; networks bigger than the
+engine's neuron capacity are executed in capacity-sized tiles,
+time-domain-multiplexed (paper Sec. III). The TPU mapping of that insight
+(DESIGN.md): membrane state stays resident in VMEM scratch for the entire
+temporal scan while input currents stream HBM->VMEM tile by tile. A naive
+jnp ``lax.scan`` materializes V to HBM every step (2x state traffic per
+step); the fused kernel touches HBM only for currents-in / spikes-out.
+
+Layout: currents are processed as (T, R, 128) -- neurons split into
+R = N/128 lane-rows, so each timestep's update is a full-width (R, 128)
+VPU operation (sublane-dim >= 8 keeps the VPU busy; a flat (N,) row per
+step would waste 7/8 sublanes).
+
+Grid: (R tiles, T chunks); the T-chunk axis is sequential ("arbitrary")
+and carries V in VMEM scratch across chunks -- exactly SNE's
+time-multiplexed pass structure with the neuron tile as the capacity unit
+(see ``repro.core.tiling``).
+
+Recurrence (reset-to-zero LIF, single carried state):
+    V[t] = alpha * V[t-1] * (V[t-1] < v_th) + I[t]
+    S[t] = V[t] >= v_th
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.lif import LIFParams
+
+__all__ = ["lif_scan_pallas", "choose_blocks", "LANES"]
+
+LANES = 128
+_DEF_VMEM_BUDGET = 4 * 1024 * 1024  # conservative per-call VMEM budget
+
+
+def choose_blocks(
+    t: int, r: int, dtype, vmem_budget: int = _DEF_VMEM_BUDGET
+) -> Tuple[int, int]:
+    """Pick (block_t, block_r) so currents+spikes+state tiles fit VMEM.
+
+    This is the SNE capacity computation with VMEM bytes as the capacity
+    (cf. ``repro.core.tiling.plan_layer_tiles(capacity_kind='vmem_bytes')``):
+    per neuron-row tile we hold block_t rows of currents and spikes plus
+    three f32 state planes.
+    """
+    esize = jnp.dtype(dtype).itemsize
+    block_r = min(r, 64)  # 64*128 f32 state = 32 KiB; >=8 sublanes
+    while True:
+        state_bytes = 3 * 4 * block_r * LANES
+        per_t = 2 * esize * block_r * LANES
+        block_t = max((vmem_budget - state_bytes) // per_t, 8)
+        block_t = int(min(block_t, t))
+        if state_bytes + block_t * per_t <= vmem_budget or block_r == 8:
+            return block_t, block_r
+        block_r //= 2
+
+
+def _kernel(cur_ref, v0_ref, spk_ref, vfin_ref, v_scr,
+            *, alpha: float, v_th: float, t_total: int, block_t: int):
+    tc = pl.program_id(1)
+    n_tc = pl.num_programs(1)
+
+    @pl.when(tc == 0)
+    def _init():
+        v_scr[...] = v0_ref[...].astype(jnp.float32)
+
+    def step(i, v):
+        # Global timestep; guards the T padding tail (padded steps must not
+        # advance the dynamics, or v_final would decay past the true T).
+        in_range = tc * block_t + i < t_total
+        cur = cur_ref[i, :, :].astype(jnp.float32)
+        live = (v < v_th).astype(jnp.float32)       # reset-to-zero mask
+        v_new = alpha * v * live + cur
+        s = (v_new >= v_th).astype(spk_ref.dtype)
+        spk_ref[i, :, :] = jnp.where(in_range, s, jnp.zeros_like(s))
+        return jnp.where(in_range, v_new, v)
+
+    v = jax.lax.fori_loop(0, block_t, step, v_scr[...])
+    v_scr[...] = v
+
+    @pl.when(tc == n_tc - 1)
+    def _fin():
+        vfin_ref[...] = v.astype(vfin_ref.dtype)
+
+
+def lif_scan_pallas(
+    currents: jnp.ndarray,
+    p: LIFParams,
+    v0: jnp.ndarray | None = None,
+    *,
+    block_t: int | None = None,
+    block_r: int | None = None,
+    interpret: bool | None = None,
+    vmem_budget: int = _DEF_VMEM_BUDGET,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused LIF scan over (T, ...) currents. Returns (spikes, v_final).
+
+    Forward-only (no AD rules); use ``repro.kernels.ops.lif_scan`` for the
+    differentiable (STBP surrogate) wrapper.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    orig_shape = currents.shape
+    t = orig_shape[0]
+    n = 1
+    for d in orig_shape[1:]:
+        n *= d
+    if v0 is None:
+        v0 = jnp.zeros(orig_shape[1:], currents.dtype)
+
+    cur = currents.reshape(t, n)
+    v0f = v0.reshape(n)
+    # Pad neurons to a whole number of 128-lane rows.
+    n_pad = (-n) % LANES
+    if n_pad:
+        cur = jnp.pad(cur, ((0, 0), (0, n_pad)))
+        v0f = jnp.pad(v0f, (0, n_pad))
+    r = (n + n_pad) // LANES
+    cur = cur.reshape(t, r, LANES)
+    v0r = v0f.reshape(r, LANES)
+
+    bt, br = choose_blocks(t, r, currents.dtype, vmem_budget)
+    if block_t is not None:
+        bt = block_t
+    if block_r is not None:
+        br = block_r
+    # Pad T and R to block multiples (T tail masked inside the kernel).
+    t_pad, r_pad = (-t) % bt, (-r) % br
+    if t_pad or r_pad:
+        cur = jnp.pad(cur, ((0, t_pad), (0, r_pad), (0, 0)))
+        v0r = jnp.pad(v0r, ((0, r_pad), (0, 0)))
+    tt, rr = t + t_pad, r + r_pad
+
+    grid = (rr // br, tt // bt)
+    kernel = functools.partial(
+        _kernel, alpha=float(p.alpha), v_th=float(p.v_th),
+        t_total=t, block_t=bt,
+    )
+    spikes, v_fin = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, br, LANES), lambda ri, ti: (ti, ri, 0)),
+            pl.BlockSpec((br, LANES), lambda ri, ti: (ri, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, br, LANES), lambda ri, ti: (ti, ri, 0)),
+            pl.BlockSpec((br, LANES), lambda ri, ti: (ri, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tt, rr, LANES), currents.dtype),
+            jax.ShapeDtypeStruct((rr, LANES), currents.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((br, LANES), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(cur, v0r)
+
+    spikes = spikes[:t].reshape(t, (n + n_pad))[:, :n].reshape(orig_shape)
+    v_fin = v_fin.reshape(rr * LANES)[:n].reshape(orig_shape[1:])
+    return spikes, v_fin

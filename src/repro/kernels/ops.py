@@ -1,0 +1,93 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``lif_scan``       -- differentiable fused LIF scan (STBP surrogate VJP).
+``ternary_matmul`` -- packed-ternary GEMM (serving path, fwd-only).
+``pack_ternary_weights`` -- float weights -> (packed uint8, scale) in the
+                            kernel's (K//4, N) layout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import LIFParams, lif_scan_reference
+from repro.core.ternary import pack2bit, ternarize
+from repro.kernels.lif_scan import lif_scan_pallas
+from repro.kernels.ternary_matmul import ternary_matmul_pallas
+
+__all__ = ["lif_scan", "ternary_matmul", "pack_ternary_weights"]
+
+
+# ----------------------------------------------------------------------
+# LIF scan: Pallas forward, STBP-surrogate backward (recompute-based, i.e.
+# the backward re-runs the cheap reference scan under jax.vjp -- a remat
+# policy, not an approximation; forward values are bit-identical).
+# ----------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _lif_scan_cv(currents, v0, p: LIFParams):
+    return lif_scan_pallas(currents, p, v0)
+
+
+def _lif_fwd(currents, v0, p):
+    out = _lif_scan_cv(currents, v0, p)
+    return out, (currents, v0)
+
+
+def _lif_bwd(p, res, cotangents):
+    currents, v0 = res
+    _, vjp = jax.vjp(lambda c, v: lif_scan_reference(c, p, v), currents, v0)
+    return vjp(cotangents)
+
+
+_lif_scan_cv.defvjp(_lif_fwd, _lif_bwd)
+
+
+def lif_scan(
+    currents: jnp.ndarray,
+    p: LIFParams = LIFParams(),
+    v0: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused LIF scan over (T, ...) currents -> (spikes, v_final).
+
+    Drop-in for :func:`repro.core.lif.lif_scan_reference` (same numerics,
+    same STBP surrogate gradients), with the temporal scan fused into a
+    single Pallas kernel (membrane state VMEM-resident; see
+    ``kernels/lif_scan.py``).
+    """
+    if v0 is None:
+        v0 = jnp.zeros(currents.shape[1:], currents.dtype)
+    return _lif_scan_cv(currents, v0, p)
+
+
+# ----------------------------------------------------------------------
+# Ternary GEMM (serving path).
+# ----------------------------------------------------------------------
+
+def pack_ternary_weights(
+    w: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize (K, N) float weights to the kernel's packed layout.
+
+    Returns (w_packed (K//4, N) uint8, scale (N,) f32). Per-output-channel
+    TWN quantization (axis=-1 of the (K, N) matrix = output channel N).
+    """
+    k, n = w.shape
+    if k % 4:
+        raise ValueError(f"K={k} must be a multiple of 4 for 2-bit packing")
+    q, scale = ternarize(w, axis=-1)          # q int8 (K, N); scale (1, N)
+    packed = pack2bit(q.T).T                  # pack along K -> (K//4, N)
+    return packed, scale.reshape(n).astype(jnp.float32)
+
+
+@jax.jit
+def ternary_matmul(
+    x: jnp.ndarray,
+    w_packed: jnp.ndarray,
+    scale: jnp.ndarray,
+) -> jnp.ndarray:
+    """x (M, K) @ ternary (K, N) with in-kernel dequant; f32 accumulation."""
+    return ternary_matmul_pallas(x, w_packed, scale)

@@ -1,0 +1,110 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` function is the numerical ground truth the kernels are
+validated against (tests sweep shapes/dtypes with assert_allclose). They are
+also the CPU/autodiff fallbacks used by the higher layers when the kernel
+path is disabled.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import LIFParams
+from repro.core.ternary import unpack2bit
+
+__all__ = ["lif_scan_ref", "ternary_matmul_ref", "wkv6_ref"]
+
+
+def lif_scan_ref(
+    currents: jnp.ndarray,
+    p: LIFParams,
+    v0: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """LIF dynamics over (T, ...) currents. Returns (spikes, v_final).
+
+    Identical recurrence to the SNE hardware model (reset-to-zero):
+        V[t] = alpha * V[t-1] * (V[t-1] < v_th) + I[t]
+        S[t] = V[t] >= v_th
+
+    Numerical contract (matches the Pallas kernel): the membrane state is
+    carried in f32 regardless of input dtype -- SNE keeps wide fixed-point
+    state in-engine; bf16 state would drift across long spike trains.
+    """
+    dt = currents.dtype
+    if v0 is None:
+        v0 = jnp.zeros(currents.shape[1:], jnp.float32)
+
+    alpha = jnp.float32(p.alpha)
+    v_th = jnp.float32(p.v_th)
+
+    def step(v, i_t):
+        v_new = alpha * v * (v < v_th).astype(jnp.float32) \
+            + i_t.astype(jnp.float32)
+        s = (v_new >= v_th).astype(dt)
+        return v_new, s
+
+    v_final, spikes = jax.lax.scan(step, v0.astype(jnp.float32), currents)
+    return spikes, v_final.astype(dt)
+
+
+def ternary_matmul_ref(
+    x: jnp.ndarray,
+    w_packed: jnp.ndarray,
+    scale: jnp.ndarray,
+) -> jnp.ndarray:
+    """Packed-ternary matmul oracle.
+
+    Args:
+      x: (M, K) activations (f32/bf16).
+      w_packed: (K // 4, N) uint8; byte row j holds ternary weights for
+        K indices 4j..4j+3 (see ``repro.core.ternary.pack2bit`` semantics,
+        packed along K).
+      scale: (N,) per-output-channel dequant scale.
+
+    Returns: (M, N) in x.dtype, accumulation in f32.
+    """
+    kp, n = w_packed.shape
+    # Unpack along the packed (first) axis: move it last, unpack, restore.
+    w_q = unpack2bit(w_packed.T).T  # (K, N) int8 in {-1, 0, 1}
+    acc = jnp.dot(x.astype(jnp.float32), w_q.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return (acc * scale[None, :].astype(jnp.float32)).astype(x.dtype)
+
+
+def wkv6_ref(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,
+    state0: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """RWKV-6 (Finch) WKV recurrence oracle, one head.
+
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T
+        o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)        (bonus-u form)
+
+    Args:
+      r, k, w: (T, Dk); v: (T, Dv); u: (Dk,); w is the per-step decay in
+        (0, 1) (already exp(-exp(..))-transformed).
+      state0: optional (Dk, Dv) initial state.
+
+    Returns: (o, state_final) with o (T, Dv), f32 accumulation.
+    """
+    t, dk = k.shape
+    dv = v.shape[1]
+    f32 = jnp.float32
+    s0 = jnp.zeros((dk, dv), f32) if state0 is None else state0.astype(f32)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = jnp.outer(k_t, v_t).astype(f32)
+        o_t = (r_t.astype(f32) @ (s + u.astype(f32)[:, None] * kv))
+        s_new = w_t.astype(f32)[:, None] * s + kv
+        return s_new, o_t
+
+    s_fin, o = jax.lax.scan(step, s0, (r, k, v, w))
+    return o.astype(r.dtype), s_fin

@@ -1,0 +1,94 @@
+"""Collective-byte accounting from compiled (post-SPMD) HLO text.
+
+``cost_analysis()`` has no collective term, so we parse the per-device HLO
+module: every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute contributes its on-link byte volume, estimated with the
+standard ring formulas on the op's replica-group size g:
+
+    all-gather          result_bytes * (g-1)/g
+    reduce-scatter      result_bytes * g * (g-1)/g   (input is g x result)
+    all-reduce          result_bytes * 2 * (g-1)/g   (RS + AG)
+    all-to-all          result_bytes * (g-1)/g
+    collective-permute  result_bytes                  (point-to-point)
+
+Async pairs (-start/-done) are counted once (on -start).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+__all__ = ["collective_bytes", "parse_shape_bytes"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def parse_shape_bytes(shape_str: str) -> int:
+    """Total bytes of 'bf16[8,128]' or a tuple '(bf16[8], f32[4,2])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, object]:
+    """Per-device on-link byte volume by collective kind (see module doc)."""
+    by_kind: Dict[str, float] = {}
+    count_by_kind: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done" in line and "all-" not in line.split("=")[0]:
+            pass
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind, _ = m.groups()
+        result_bytes = parse_shape_bytes(shape_str)
+        g = _group_size(line)
+        if g <= 1:
+            continue
+        frac = (g - 1) / g
+        if kind == "all-reduce":
+            vol = 2.0 * result_bytes * frac
+        elif kind == "reduce-scatter":
+            vol = result_bytes * g * frac
+        elif kind == "collective-permute":
+            vol = float(result_bytes)
+        else:  # all-gather, all-to-all
+            vol = result_bytes * frac
+        by_kind[kind] = by_kind.get(kind, 0.0) + vol
+        count_by_kind[kind] = count_by_kind.get(kind, 0) + 1
+    return {
+        "bytes_by_kind": by_kind,
+        "count_by_kind": count_by_kind,
+        "total_bytes": sum(by_kind.values()),
+    }
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1

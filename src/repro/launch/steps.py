@@ -1,0 +1,113 @@
+"""Step builders + abstract input specs for every (arch x shape) cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins (weak-type
+correct, shardable, zero allocation) for each model input; the dry-run
+lowers against them. ``make_*_step`` build the jit-able step functions:
+
+  train_step(params, opt_state, batch) -> (params', opt_state', metrics)
+  prefill_step(params, batch)          -> last-position logits
+  serve_step(params, cache, tokens)    -> (next_tokens, cache')
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSpec
+from repro.distributed.annotate import execution_mode
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = [
+    "input_specs", "abstract_cache", "abstract_opt_state",
+    "make_train_step", "make_prefill_step", "make_serve_step",
+]
+
+_I32 = jnp.int32
+
+
+def _token_specs(b: int, s: int, with_targets: bool) -> Dict[str, Any]:
+    out = {"tokens": jax.ShapeDtypeStruct((b, s), _I32)}
+    if with_targets:
+        out["targets"] = jax.ShapeDtypeStruct((b, s), _I32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Abstract model inputs for a cell (train/prefill batch, or the decode
+    token batch; decode caches come from ``abstract_cache``)."""
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    specs = _token_specs(b, s, with_targets=shape.kind == "train")
+    if cfg.family == "encdec" and shape.kind != "decode":
+        fd = cfg.frontend_dim or cfg.d_model
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, shape.seq_len, fd), jnp.float32)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        # Dynamic-resolution stub: 1/4 of the sequence is vision patches.
+        n_vis = max(shape.seq_len // 4, 16)
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, n_vis, cfg.d_model), jnp.float32)
+    return specs
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeSpec) -> Any:
+    """ShapeDtypeStruct tree of the decode cache for this cell."""
+    model = build_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+
+
+def abstract_opt_state(cfg: ModelConfig) -> Any:
+    """ShapeDtypeStruct tree of the AdamW state (fp32 moments)."""
+    model = build_model(cfg)
+    params = model.abstract_params()
+    return jax.eval_shape(adamw_init, params)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig | None = None,
+                    *, remat: bool = True,
+                    scan_layers: bool = True) -> Callable:
+    opt_cfg = opt_cfg or AdamWConfig()
+    model = build_model(cfg)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return model.loss(p, batch, remat=remat,
+                              scan_layers=scan_layers)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_params, new_opt, om = adamw_update(grads, opt_state, params,
+                                               opt_cfg)
+        return new_params, new_opt, {**metrics, **om, "loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *,
+                      scan_layers: bool = True) -> Callable:
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        logits, _ = model.apply(params, batch, scan_layers=scan_layers)
+        return logits[:, -1]        # next-token distribution
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *,
+                    scan_layers: bool = True) -> Callable:
+    model = build_model(cfg)
+
+    def serve_step(params, cache, tokens):
+        with execution_mode("serve"):
+            logits, new_cache = model.decode(params, cache, tokens,
+                                             scan_layers=scan_layers)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(_I32)
+        return next_tok, new_cache
+
+    return serve_step

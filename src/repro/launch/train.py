@@ -1,0 +1,98 @@
+"""Training launcher: any assigned arch, CPU smoke or mesh-sharded.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \\
+      --steps 50
+  REPRO_XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \\
+      --smoke --steps 10 --mesh 2x4
+
+With --mesh, params/optimizer/batch are sharded with the production rules
+(FSDP over 'data', TP over 'model') -- the same path the 512-chip dry-run
+proves, executing eagerly on the host devices.
+"""
+import os
+if os.environ.get("REPRO_XLA_FLAGS"):
+    os.environ["XLA_FLAGS"] = os.environ["REPRO_XLA_FLAGS"]
+
+import argparse
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.data import TokenTaskConfig, token_batch
+from repro.launch.mesh import make_mesh_for
+from repro.models import build_model
+from repro.training import AdamWConfig, Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=ARCHS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. 2x4 -> (data=2, model=4) over host devices")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--grad-compression", type=float, default=None)
+    ap.add_argument("--remat", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if cfg.family in ("encdec", "vlm") and args.smoke:
+        print(f"note: {args.arch} needs frames/patches; using token-only "
+              "batches against the decoder/backbone")
+    model = build_model(cfg)
+    print(f"{cfg.name}: {model.num_params() / 1e6:.1f}M params")
+
+    tk = TokenTaskConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                         batch_size=args.batch, task="repeat")
+
+    def batch_fn(step):
+        b = token_batch(tk, step)
+        if cfg.family == "encdec":
+            import jax.numpy as jnp
+            fd = cfg.frontend_dim or cfg.d_model
+            b["frames"] = jax.random.normal(
+                jax.random.PRNGKey(step), (args.batch, args.seq, fd))
+        return b
+
+    mesh_cm = None
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("data", "model")[:len(shape)] if len(shape) == 2 \
+            else ("pod", "data", "model")
+        mesh = make_mesh_for(shape, axes)
+        mesh_cm = mesh
+        # Under the mesh context the in-model constraints (vocab-sharded
+        # logits, gather-at-use, attention TP/CP) shard the computation;
+        # params are laid out by GSPMD from those constraints.
+        print(f"mesh {shape} over {mesh.devices.size} devices")
+
+    tcfg = TrainerConfig(
+        total_steps=args.steps,
+        ckpt_every=max(args.steps // 4, 1),
+        ckpt_dir=args.ckpt_dir or f"checkpoints/{args.arch}",
+        log_every=max(args.steps // 10, 1),
+        remat=args.remat,
+        grad_compression_ratio=args.grad_compression,
+        opt=AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                        total_steps=args.steps),
+    )
+    trainer = Trainer(model, tcfg, batch_fn)
+    rng = jax.random.PRNGKey(0)
+    if mesh_cm is not None:
+        with mesh_cm:
+            res = trainer.run_with_restarts(rng)
+    else:
+        res = trainer.run_with_restarts(rng)
+    h = res["history"]
+    print(f"done: loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f} over "
+          f"{res['final_step']} steps; stragglers={trainer.straggler_steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Model substrate: every assigned architecture family as pure JAX."""
+from repro.models.config import ModelConfig
+from repro.models.model import Model, build_model, lm_loss
+from repro.models.params import ParamDef, abstract, materialize, tree_num_params
+
+__all__ = [
+    "ModelConfig", "Model", "build_model", "lm_loss",
+    "ParamDef", "abstract", "materialize", "tree_num_params",
+]

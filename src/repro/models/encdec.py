@@ -1,0 +1,189 @@
+"""Encoder-decoder backbone (Seamless-M4T medium's transformer core).
+
+The audio frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings (B, S, frontend_dim) projected into d_model.
+Encoder blocks are bidirectional; decoder blocks are causal self-attention
++ cross-attention to the encoder output.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.annotate import constrain, unshard_fsdp
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models.params import ParamDef
+
+__all__ = ["encdec_defs", "encdec_apply", "encode", "encdec_decode",
+           "init_encdec_cache"]
+
+
+def encdec_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab_size
+    ne, nd = cfg.encoder_layers, cfg.decoder_layers
+    fd = cfg.frontend_dim or d
+
+    enc_layer = {
+        "ln1": ParamDef((ne, d), ("layers", "norm"), init="ones"),
+        "ln2": ParamDef((ne, d), ("layers", "norm"), init="ones"),
+        "attn": L.attention_defs(cfg, layers=ne),
+        "mlp": L.mlp_defs(cfg, layers=ne),
+    }
+    dec_layer = {
+        "ln1": ParamDef((nd, d), ("layers", "norm"), init="ones"),
+        "ln2": ParamDef((nd, d), ("layers", "norm"), init="ones"),
+        "ln3": ParamDef((nd, d), ("layers", "norm"), init="ones"),
+        "self_attn": L.attention_defs(cfg, layers=nd),
+        "cross_attn": L.attention_defs(cfg, layers=nd),
+        "mlp": L.mlp_defs(cfg, layers=nd),
+    }
+    return {
+        "frontend_proj": ParamDef((fd, d), ("embed", "embed_out"),
+                                  fan_in_axes=(0,)),
+        "embed": ParamDef((v, d), ("vocab", "embed"), fan_in_axes=(1,)),
+        "encoder": enc_layer,
+        "decoder": dec_layer,
+        "ln_enc": ParamDef((d,), ("norm",), init="ones"),
+        "ln_f": ParamDef((d,), ("norm",), init="ones"),
+        "lm_head": ParamDef((d, v), ("embed", "vocab"), fan_in_axes=(0,)),
+    }
+
+
+def encode(params: Dict[str, Any], frames: jnp.ndarray, cfg: ModelConfig,
+           *, remat: bool = False) -> jnp.ndarray:
+    """frames (B, S_enc, frontend_dim) -> encoder output (B, S_enc, D)."""
+    h = jnp.einsum("bsf,fd->bsd", frames.astype(jnp.dtype(cfg.dtype)),
+                   params["frontend_proj"])
+    b, s = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(h, lp):
+        a_in = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        h = h + L.attention_apply(lp["attn"], a_in, positions, cfg,
+                                  causal=False)
+        m_in = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        return h + L.mlp_apply(lp["mlp"], m_in, cfg), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["encoder"])
+    return L.rms_norm(h, params["ln_enc"], cfg.norm_eps)
+
+
+def _decoder(params, tokens, enc_out, cfg, *, scan_layers=True,
+             remat=False):
+    b, s = tokens.shape
+    h = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(h, lp):
+        a_in = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        h = h + L.attention_apply(lp["self_attn"], a_in, positions, cfg,
+                                  causal=True)
+        c_in = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + L.attention_apply(lp["cross_attn"], c_in, positions, cfg,
+                                  causal=False, kv_x=enc_out)
+        m_in = L.rms_norm(h, lp["ln3"], cfg.norm_eps)
+        return h + L.mlp_apply(lp["mlp"], m_in, cfg), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    if scan_layers:
+        h, _ = jax.lax.scan(body, h, params["decoder"])
+    else:
+        for i in range(cfg.decoder_layers):
+            lp = jax.tree.map(lambda x: x[i], params["decoder"])
+            h, _ = body(h, lp)
+    return h
+
+
+def encdec_apply(params: Dict[str, Any], batch: Dict[str, jnp.ndarray],
+                 cfg: ModelConfig, *, scan_layers: bool = True,
+                 remat: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training forward: frames + decoder tokens -> logits."""
+    enc_out = encode(params, batch["frames"], cfg, remat=remat)
+    h = _decoder(params, batch["tokens"], enc_out, cfg,
+                 scan_layers=scan_layers, remat=remat)
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h,
+                        unshard_fsdp(params["lm_head"], (None, "model")),
+                        preferred_element_type=jnp.float32)
+    logits = constrain(logits, ("batch", None, "model"))
+    return logits, jnp.float32(0.0)
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                      dtype=None) -> Dict[str, jnp.ndarray]:
+    """Decoder self-attn KV cache + *precomputed* cross-attn K/V.
+
+    Cross keys/values are projected once from the encoder output at
+    prefill (``prefill_cross_kv``) -- recomputing them per decode step
+    would add 2*S_enc*D*KV FLOPs/step and dominate decode.
+    """
+    dt = jnp.dtype(dtype or cfg.dtype)
+    nd = cfg.decoder_layers
+    shape = (nd, batch, cache_len, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        "ck": jnp.zeros(shape, dt),
+        "cv": jnp.zeros(shape, dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill_cross_kv(params: Dict[str, Any], enc_out: jnp.ndarray,
+                     cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Project encoder output into stacked per-layer cross K/V."""
+    ck = jnp.einsum("bsd,ldhk->lbshk", enc_out,
+                    params["decoder"]["cross_attn"]["wk"])
+    cv = jnp.einsum("bsd,ldhk->lbshk", enc_out,
+                    params["decoder"]["cross_attn"]["wv"])
+    return ck, cv
+
+
+def encdec_decode(params: Dict[str, Any], cache: Dict[str, jnp.ndarray],
+                  tokens: jnp.ndarray, cfg: ModelConfig,
+                  *, scan_layers: bool = True
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One decoder step attending precomputed cross K/V."""
+    h = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    pos = cache["pos"]
+
+    def body(h, inp):
+        lp, k_l, v_l, ck_l, cv_l = inp
+        a_in = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        att, new = L.attention_decode(
+            lp["self_attn"], a_in, {"k": k_l, "v": v_l, "pos": pos}, cfg)
+        h = h + att
+        c_in = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", c_in, lp["cross_attn"]["wq"])
+        cross = L.blockwise_attention(q, ck_l, cv_l, causal=False)
+        h = h + jnp.einsum("bshk,hkd->bsd", cross, lp["cross_attn"]["wo"])
+        m_in = L.rms_norm(h, lp["ln3"], cfg.norm_eps)
+        h = h + L.mlp_apply(lp["mlp"], m_in, cfg)
+        return h, (new["k"], new["v"])
+
+    if scan_layers:
+        h, (k_new, v_new) = jax.lax.scan(
+            body, h, (params["decoder"], cache["k"], cache["v"],
+                      cache["ck"], cache["cv"]))
+    else:
+        ks, vs = [], []
+        for i in range(cfg.decoder_layers):
+            lp = jax.tree.map(lambda x: x[i], params["decoder"])
+            h, (k_i, v_i) = body(h, (lp, cache["k"][i], cache["v"][i],
+                                     cache["ck"][i], cache["cv"][i]))
+            ks.append(k_i)
+            vs.append(v_i)
+        k_new, v_new = jnp.stack(ks), jnp.stack(vs)
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h,
+                        unshard_fsdp(params["lm_head"], (None, "model")),
+                        preferred_element_type=jnp.float32)
+    logits = constrain(logits, ("batch", None, "model"))
+    return logits, {"k": k_new, "v": v_new, "ck": cache["ck"],
+                    "cv": cache["cv"], "pos": pos + 1}

@@ -1,0 +1,478 @@
+"""Shared neural layers: norms, RoPE/M-RoPE, GQA attention, MLPs, MoE.
+
+All layers are functional: ``*_defs`` returns the ParamDef tree,
+``*_apply`` consumes the materialized params. Attention uses a blockwise
+(online-softmax) formulation so no (S, S) score tensor is ever
+materialized -- required for the 32k prefill cells.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ternary import unpack2bit
+from repro.distributed.annotate import constrain, current_mesh, unshard_fsdp
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+
+__all__ = [
+    "rms_norm", "rope_freqs", "apply_rope", "mrope_positions",
+    "attention_defs", "attention_apply", "attention_decode",
+    "mlp_defs", "mlp_apply", "moe_defs", "moe_apply", "dense",
+]
+
+# ----------------------------------------------------------------------
+# Basic ops
+# ----------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float) -> jnp.ndarray:
+    """Standard LayerNorm (RWKV uses LN, not RMSNorm)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(dt) * scale + bias
+
+
+def dense(x: jnp.ndarray, w: Any, role: str = "up") -> jnp.ndarray:
+    """Matmul against a float weight or a ternary-packed weight dict.
+
+    The ternary dict {"packed": (K//4, N) uint8, "scale": (N,)} is the
+    CUTIE-analogue serving format (see kernels/ternary_matmul.py). Here the
+    dequant runs as jnp ops so the path lowers/shards under pjit on any
+    backend; on-TPU callers use ``repro.kernels.ternary_matmul`` for the
+    fused VMEM dequant (numerics identical; tests assert so).
+
+    ``role`` sets the Megatron TP orientation of the weight at use time
+    (Perf cycles 1-2): "up" = column-parallel (output dim sharded),
+    "down" = row-parallel (contraction dim sharded; output gets one
+    small all-reduce instead of the hidden being all-gathered).
+    """
+    if isinstance(w, dict) and "packed" in w:
+        wq = unpack2bit(w["packed"].T).T.astype(x.dtype)  # (K, N)
+        y = jnp.einsum("...k,kn->...n", x, wq,
+                       preferred_element_type=jnp.float32)
+        return (y * w["scale"].astype(jnp.float32)).astype(x.dtype)
+    # FSDP gather-at-use: keep only the TP dim sharded for the contraction
+    # (Perf cycle 1 -- avoids activation all-reduce over the data axis).
+    if role == "down":
+        w = unshard_fsdp(w, ("model", None), (None, "model"))
+    else:
+        w = unshard_fsdp(w, (None, "model"), ("model", None))
+    return jnp.einsum("...k,kn->...n", x, w)
+
+
+# ----------------------------------------------------------------------
+# Rotary embeddings (RoPE + Qwen2-VL M-RoPE)
+# ----------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim // 2,), f32."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    theta: float,
+    mrope_sections: Optional[Tuple[int, int, int]] = None,
+) -> jnp.ndarray:
+    """Rotate (B, S, H, hd). ``positions``: (B, S) or (3, B, S) for M-RoPE.
+
+    M-RoPE (Qwen2-VL): the head_dim/2 frequency slots are split into
+    (t, h, w) sections; each section takes its angle from the matching
+    position row. Text tokens have t == h == w so M-RoPE degenerates to
+    1-D RoPE for them.
+    """
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # (hd/2,)
+    if positions.ndim == 2:
+        ang = positions[..., None].astype(jnp.float32) * inv  # (B,S,hd/2)
+    else:
+        if mrope_sections is None:
+            raise ValueError("3-row positions require mrope_sections")
+        secs = mrope_sections
+        if sum(secs) != hd // 2:
+            raise ValueError(f"mrope sections {secs} != head_dim/2 {hd//2}")
+        ang3 = positions[..., None].astype(jnp.float32) * inv  # (3,B,S,hd/2)
+        parts = []
+        off = 0
+        for i, s in enumerate(secs):
+            parts.append(ang3[i, ..., off:off + s])
+            off += s
+        ang = jnp.concatenate(parts, axis=-1)          # (B,S,hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def mrope_positions(
+    batch: int, seq: int, num_vision: int, vision_grid: Tuple[int, int]
+) -> jnp.ndarray:
+    """Qwen2-VL position rows (3, B, S): vision patches first, then text.
+
+    Patches at sequence slots [0, num_vision) carry (t=0, h=row, w=col) of
+    an (gh, gw) grid; text tokens continue with t=h=w running positions.
+    """
+    gh, gw = vision_grid
+    idx = jnp.arange(seq)
+    h_pos = jnp.where(idx < num_vision, (idx // gw) % gh,
+                      idx - num_vision + max(gh, gw))
+    w_pos = jnp.where(idx < num_vision, idx % gw,
+                      idx - num_vision + max(gh, gw))
+    t_pos = jnp.where(idx < num_vision, 0, idx - num_vision + max(gh, gw))
+    pos = jnp.stack([t_pos, h_pos, w_pos])            # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, seq))
+
+
+# ----------------------------------------------------------------------
+# Attention (GQA, optional sliding window, blockwise online softmax)
+# ----------------------------------------------------------------------
+
+
+def attention_defs(cfg: ModelConfig, layers: Optional[int] = None
+                   ) -> Dict[str, ParamDef]:
+    """QKV/O projections, optionally stacked over a leading layer axis."""
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    lead = () if layers is None else (layers,)
+    lax_ = () if layers is None else ("layers",)
+
+    def pd(shape, axes, fan):
+        return ParamDef(lead + shape, lax_ + axes,
+                        fan_in_axes=tuple(len(lead) + a for a in fan))
+
+    return {
+        "wq": pd((d, h, hd), ("embed", "heads", "head_dim"), (0,)),
+        "wk": pd((d, kvh, hd), ("embed", "kv_heads", "head_dim"), (0,)),
+        "wv": pd((d, kvh, hd), ("embed", "kv_heads", "head_dim"), (0,)),
+        "wo": pd((h, hd, d), ("heads", "head_dim", "embed"), (0, 1)),
+    }
+
+
+def _chunk_mask(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """(Sq, Sk) validity mask from absolute positions."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    mask = jnp.ones_like(diff, dtype=bool)
+    if causal:
+        mask &= diff >= 0
+    if window is not None:
+        mask &= diff < window
+    return mask
+
+
+def blockwise_attention(
+    q: jnp.ndarray,            # (B, Sq, H, hd)
+    k: jnp.ndarray,            # (B, Sk, KVH, hd)
+    v: jnp.ndarray,            # (B, Sk, KVH, hd)
+    *,
+    causal: bool,
+    window: Optional[int] = None,
+    q_offset: int | jnp.ndarray = 0,
+    kv_chunk: int = 2048,
+) -> jnp.ndarray:
+    """Memory-efficient attention: scan over KV chunks, online softmax.
+
+    Never materializes (Sq, Sk) scores; peak extra memory is one
+    (B, H, Sq, kv_chunk) block. GQA handled by folding the q-per-kv group
+    into the head dim of a 5-D einsum.
+    """
+    b, sq, h, hd = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    kv_chunk = min(kv_chunk, sk)
+    n_chunks = math.ceil(sk / kv_chunk)
+    pad = n_chunks * kv_chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, kv_chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, kv_chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+
+    qg = q.reshape(b, sq, kvh, g, hd).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(hd)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        ci, k_blk, v_blk = inp
+        k_pos = ci * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                       k_blk.astype(jnp.float32)) * scale
+        mask = _chunk_mask(q_pos, k_pos, causal, window)      # (Sq, kc)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        corr = jnp.where(jnp.isneginf(m_prev), 0.0,
+                         jnp.exp(m_prev - m_safe))
+        l_new = l_prev * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, v_blk.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, kvh, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, kvh, g, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0),
+        (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def attention_apply(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_x: Optional[jnp.ndarray] = None,
+    kv_positions: Optional[jnp.ndarray] = None,
+    mrope: bool = False,
+) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill). kv_x enables cross-attn."""
+    kv_src = x if kv_x is None else kv_x
+    # Heads-TP when the head count divides the model axis; otherwise
+    # sequence-CP: shard q rows over 'model', replicate (small) K/V --
+    # avoids partial-sum all-reduces of f32 score blocks (Perf cycle 3;
+    # llama4's 40 heads % 16 != 0 fallback used to shard head_dim, putting
+    # the TP axis on the CONTRACTION dim of the score einsum).
+    mesh = current_mesh()
+    tp = (dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+          if mesh is not None else 1)
+    heads_tp = cfg.num_heads % tp == 0
+    kv_tp = cfg.num_kv_heads % tp == 0
+    wq = unshard_fsdp(p["wq"], (None, "model", None))
+    wk = unshard_fsdp(p["wk"], (None, "model", None) if kv_tp
+                      else (None, None, None))
+    wv = unshard_fsdp(p["wv"], (None, "model", None) if kv_tp
+                      else (None, None, None))
+    q = jnp.einsum("bsd,dhk->bshk", x, wq)
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, wk)
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, wv)
+    if heads_tp:
+        q = constrain(q, ("batch", None, "model", None))
+        kv_spec = ("batch", None, "model" if kv_tp else None, None)
+        k = constrain(k, kv_spec)
+        v = constrain(v, kv_spec)
+    else:
+        q = constrain(q, ("batch", "model", None, None))
+        k = constrain(k, ("batch", None, None, None))
+        v = constrain(v, ("batch", None, None, None))
+    secs = cfg.mrope_sections if mrope else None
+    if kv_x is None:  # self-attention: rotate both
+        q = apply_rope(q, positions, cfg.rope_theta, secs)
+        k = apply_rope(k, positions, cfg.rope_theta, secs)
+    out = blockwise_attention(q, k, v, causal=causal,
+                              window=window or cfg.sliding_window)
+    out = constrain(out, ("batch", None, "model", None) if heads_tp
+                    else ("batch", "model", None, None))
+    # o-proj: row-parallel over heads when heads-TP (one bf16 all-reduce
+    # of (B,S,D)); fully gathered weight in the CP fallback.
+    wo = unshard_fsdp(p["wo"], ("model", None, None) if heads_tp
+                      else (None, None, None))
+    y = jnp.einsum("bshk,hkd->bsd", out, wo)
+    return constrain(y, ("batch", None, None))
+
+
+def attention_decode(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,                 # (B, 1, D)
+    cache: Dict[str, jnp.ndarray],  # {"k","v": (B, S, KVH, hd), "pos": ()}
+    cfg: ModelConfig,
+    *,
+    window: Optional[int] = None,
+    mrope: bool = False,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token decode with (rolling, for SWA) KV cache update."""
+    pos = cache["pos"]              # scalar int32: tokens already cached
+    b = x.shape[0]
+    secs = cfg.mrope_sections if mrope else None
+    posb = jnp.broadcast_to(pos[None, None], (3, b, 1)) if mrope \
+        else jnp.broadcast_to(pos[None, None], (b, 1))
+    wq = unshard_fsdp(p["wq"], (None, "model", None), (None, None, "model"))
+    wk = unshard_fsdp(p["wk"], (None, "model", None), (None, None, "model"))
+    wv = unshard_fsdp(p["wv"], (None, "model", None), (None, None, "model"))
+    q = jnp.einsum("bsd,dhk->bshk", x, wq)
+    k = jnp.einsum("bsd,dhk->bshk", x, wk)
+    v = jnp.einsum("bsd,dhk->bshk", x, wv)
+    q = apply_rope(q, posb, cfg.rope_theta, secs)
+    k = apply_rope(k, posb, cfg.rope_theta, secs)
+
+    s_cache = cache["k"].shape[1]
+    # SWA: rolling ring-buffer slot; full attention: append at pos.
+    slot = pos % s_cache if window is not None \
+        else jnp.minimum(pos, s_cache - 1)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+
+    kvh, hd, h = cfg.num_kv_heads, cfg.head_dim, cfg.num_heads
+    g = h // kvh
+    qg = q.reshape(b, 1, kvh, g, hd).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                   k_cache.astype(jnp.float32)) * scale
+    if window is not None:
+        # Rolling cache: every resident entry is within the window once
+        # pos >= s_cache; before that, mask unwritten slots.
+        k_idx = jnp.arange(s_cache)
+        valid = jnp.where(pos >= s_cache, jnp.ones_like(k_idx, bool),
+                          k_idx <= pos)
+    else:
+        valid = jnp.arange(s_cache) <= pos
+    s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+    w_att = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bkgqd", w_att,
+                     v_cache.astype(jnp.float32))
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, 1, h, hd).astype(x.dtype)
+    wo = unshard_fsdp(p["wo"], ("model", None, None), (None, "model", None))
+    y = jnp.einsum("bshk,hkd->bsd", out, wo)
+    return y, {"k": k_cache, "v": v_cache, "pos": pos + 1}
+
+
+# ----------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------
+
+
+def mlp_defs(cfg: ModelConfig, layers: Optional[int] = None,
+             d_ff: Optional[int] = None) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    lead = () if layers is None else (layers,)
+    lax_ = () if layers is None else ("layers",)
+
+    def pd(shape, axes, fan):
+        return ParamDef(lead + shape, lax_ + axes,
+                        fan_in_axes=tuple(len(lead) + a for a in fan))
+
+    out = {"w_up": pd((d, f), ("embed", "mlp"), (0,)),
+           "w_down": pd((f, d), ("mlp", "embed"), (0,))}
+    if cfg.activation == "swiglu":
+        out["w_gate"] = pd((d, f), ("embed", "mlp"), (0,))
+    return out
+
+
+def mlp_apply(p: Dict[str, jnp.ndarray], x: jnp.ndarray,
+              cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(dense(x, p["w_gate"])) * dense(x, p["w_up"])
+    elif cfg.activation == "squared_relu":
+        h = jnp.square(jax.nn.relu(dense(x, p["w_up"])))
+    else:
+        h = jax.nn.gelu(dense(x, p["w_up"]))
+    return dense(h, p["w_down"], role="down")
+
+
+# ----------------------------------------------------------------------
+# MoE (shared + routed experts, group-wise einsum dispatch, GShard-style
+# capacity with token dropping; see DESIGN.md)
+# ----------------------------------------------------------------------
+
+
+def moe_defs(cfg: ModelConfig, layers: Optional[int] = None
+             ) -> Dict[str, Any]:
+    d = cfg.d_model
+    ef = cfg.expert_d_ff or cfg.d_ff
+    e = cfg.num_experts
+    lead = () if layers is None else (layers,)
+    lax_ = () if layers is None else ("layers",)
+
+    def pd(shape, axes, fan):
+        return ParamDef(lead + shape, lax_ + axes,
+                        fan_in_axes=tuple(len(lead) + a for a in fan))
+
+    defs: Dict[str, Any] = {
+        "router": pd((d, e), ("embed", "experts"), (0,)),
+        "we_gate": pd((e, d, ef), ("experts", "embed", "mlp"), (1,)),
+        "we_up": pd((e, d, ef), ("experts", "embed", "mlp"), (1,)),
+        "we_down": pd((e, ef, d), ("experts", "mlp", "embed"), (1,)),
+    }
+    if cfg.num_shared_experts:
+        sf = ef * cfg.num_shared_experts
+        defs["shared"] = {
+            "w_gate": pd((d, sf), ("embed", "mlp"), (0,)),
+            "w_up": pd((d, sf), ("embed", "mlp"), (0,)),
+            "w_down": pd((sf, d), ("mlp", "embed"), (0,)),
+        }
+    return defs
+
+
+def moe_apply(p: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output, aux_load_balance_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    g = min(cfg.moe_group_size, b * s)
+    n = b * s
+    ng = n // g
+    cap = int(math.ceil(g * k * cfg.capacity_factor / e))
+    cap = min(cap, g)
+    xg = x.reshape(ng, g, d)
+
+    logits = jnp.einsum("ngd,de->nge", xg,
+                        unshard_fsdp(p["router"], (None, "model"))
+                        ).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)             # (ng, g, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux loss.
+    me = probs.mean(axis=(0, 1))
+    ce_frac = jax.nn.one_hot(gate_idx[..., 0], e).mean(axis=(0, 1))
+    aux = e * jnp.sum(me * ce_frac)
+
+    # Position of each (token, choice) in its expert's capacity buffer.
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)   # (ng,g,k,e)
+    flat = onehot.reshape(ng, g * k, e)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(ng, g, k, e)
+    pos = jnp.sum(pos * onehot, axis=-1)                      # (ng, g, k)
+    keep = pos < cap
+    gate_vals = gate_vals * keep
+
+    # dispatch (ng, g, e, cap) one-hot routing tensor -- bf16 buffer.
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=x.dtype) * keep[..., None].astype(x.dtype)
+    disp = jnp.einsum("ngke,ngkc->ngec", onehot.astype(x.dtype), pos_oh)
+    xe = jnp.einsum("ngd,ngec->necd", xg, disp)               # (ng,e,cap,d)
+
+    we_gate = unshard_fsdp(p["we_gate"], ("model", None, None))
+    we_up = unshard_fsdp(p["we_up"], ("model", None, None))
+    we_down = unshard_fsdp(p["we_down"], ("model", None, None))
+    hg = jax.nn.silu(jnp.einsum("necd,edf->necf", xe, we_gate))
+    hu = jnp.einsum("necd,edf->necf", xe, we_up)
+    ye = jnp.einsum("necf,efd->necd", hg * hu, we_down)
+
+    # combine: gate-weighted inverse of dispatch.
+    comb = jnp.einsum("ngke,ngkc->ngec",
+                      (onehot * gate_vals[..., None]).astype(x.dtype), pos_oh)
+    y = jnp.einsum("ngec,necd->ngd", comb, ye)
+    out = y.reshape(b, s, d)
+
+    if cfg.num_shared_experts:
+        sh = p["shared"]
+        hs = jax.nn.silu(dense(x, sh["w_gate"])) * dense(x, sh["w_up"])
+        out = out + dense(hs, sh["w_down"], role="down")
+    return out, aux

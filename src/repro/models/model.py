@@ -1,0 +1,109 @@
+"""Unified model API: build any assigned architecture from a ModelConfig.
+
+``build_model(cfg)`` returns a :class:`Model` bundle exposing:
+
+  defs()                      -> ParamDef tree (init + sharding + dry-run)
+  init(rng, dtype)            -> parameter pytree
+  apply(params, batch)        -> (logits, aux) full-sequence forward
+  loss(params, batch)         -> (scalar loss, metrics) next-token CE
+  init_cache(batch, cache_len)-> decode cache pytree (zeros)
+  decode(params, cache, tok)  -> (logits, new cache) one serve step
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import encdec as ED
+from repro.models import params as P
+from repro.models import rwkv6 as RW
+from repro.models import transformer as TF
+from repro.models import zamba2 as ZB
+
+__all__ = ["Model", "build_model", "lm_loss"]
+
+
+def lm_loss(logits: jnp.ndarray, targets: jnp.ndarray,
+            aux: jnp.ndarray = None, aux_coef: float = 0.01
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token cross-entropy (f32). targets: (B, S) int32, -1 = pad."""
+    mask = (targets >= 0).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tgt = jnp.maximum(targets, 0)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    metrics = {"ce": loss, "tokens": mask.sum()}
+    if aux is not None:
+        metrics["aux"] = aux
+        loss = loss + aux_coef * aux
+    return loss, metrics
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    defs: Callable[[], Any]
+    apply: Callable[..., Tuple[jnp.ndarray, jnp.ndarray]]
+    init_cache: Callable[..., Any]
+    decode: Callable[..., Tuple[jnp.ndarray, Any]]
+
+    def init(self, rng: jax.Array, dtype=None) -> Any:
+        dt = jnp.dtype(dtype or self.cfg.dtype)
+        return P.materialize(self.defs(), rng, dt)
+
+    def abstract_params(self, dtype=None) -> Any:
+        dt = jnp.dtype(dtype or self.cfg.dtype)
+        return P.abstract(self.defs(), dt)
+
+    def loss(self, params, batch, *, scan_layers: bool = True,
+             remat: bool = False):
+        logits, aux = self.apply(params, batch, scan_layers=scan_layers,
+                                 remat=remat)
+        return lm_loss(logits[:, :-1], batch["targets"][:, 1:], aux)
+
+    def num_params(self) -> int:
+        return P.tree_num_params(self.defs())
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        def apply_fn(params, batch, *, scan_layers=True, remat=False):
+            return TF.transformer_apply(
+                params, batch["tokens"], cfg,
+                extra_embeds=batch.get("patch_embeds"),
+                scan_layers=scan_layers, remat=remat)
+        return Model(cfg, lambda: TF.transformer_defs(cfg), apply_fn,
+                     lambda b, s, dtype=None: TF.init_kv_cache(
+                         cfg, b, s, dtype),
+                     lambda p, c, t, **kw: TF.transformer_decode(p, c, t, cfg, **kw))
+    if fam == "rwkv6":
+        def apply_fn(params, batch, *, scan_layers=True, remat=False):
+            return RW.rwkv6_apply(params, batch["tokens"], cfg,
+                                  scan_layers=scan_layers, remat=remat)
+        return Model(cfg, lambda: RW.rwkv6_defs(cfg), apply_fn,
+                     lambda b, s, dtype=None: RW.init_rwkv_cache(
+                         cfg, b, s, dtype),
+                     lambda p, c, t, **kw: RW.rwkv6_decode(p, c, t, cfg, **kw))
+    if fam == "zamba2":
+        def apply_fn(params, batch, *, scan_layers=True, remat=False):
+            return ZB.zamba2_apply(params, batch["tokens"], cfg,
+                                   scan_layers=scan_layers, remat=remat)
+        return Model(cfg, lambda: ZB.zamba2_defs(cfg), apply_fn,
+                     lambda b, s, dtype=None: ZB.init_zamba_cache(
+                         cfg, b, s, dtype),
+                     lambda p, c, t, **kw: ZB.zamba2_decode(p, c, t, cfg, **kw))
+    if fam == "encdec":
+        def apply_fn(params, batch, *, scan_layers=True, remat=False):
+            return ED.encdec_apply(params, batch, cfg,
+                                   scan_layers=scan_layers, remat=remat)
+        return Model(cfg, lambda: ED.encdec_defs(cfg), apply_fn,
+                     lambda b, s, dtype=None: ED.init_encdec_cache(
+                         cfg, b, s, dtype),
+                     lambda p, c, t, **kw: ED.encdec_decode(p, c, t, cfg, **kw))
+    raise ValueError(f"unknown family: {fam}")

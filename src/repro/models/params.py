@@ -1,0 +1,88 @@
+"""Parameter-definition system: one code path yields init + sharding specs.
+
+Every model declares its parameters as a pytree of :class:`ParamDef` (shape
++ logical axis names + init scale). From that single declaration we derive:
+
+  * ``materialize(defs, rng, dtype)``  -> the actual parameter pytree,
+  * ``to_pspecs(defs, rules, mesh)``   -> a matching PartitionSpec pytree,
+  * ``abstract(defs, dtype)``          -> ShapeDtypeStruct tree (dry-run).
+
+Logical-axis vocabulary (resolved to mesh axes by ``repro.distributed.
+sharding`` rules, with divisibility-aware fallbacks -- e.g. 40 heads on a
+16-way model axis falls back to sharding head_dim):
+
+  vocab, embed, heads, kv_heads, head_dim, mlp, experts, state, conv,
+  lora, norm (never sharded), layers (stacked scan dim, never sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ParamDef", "materialize", "abstract", "tree_num_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Declarative parameter: shape + logical axes + init law."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    # init: 'normal' (std = scale / sqrt(fan_in_axis_size)), 'zeros',
+    # 'ones', 'constant'
+    init: str = "normal"
+    scale: float = 1.0
+    fan_in_axes: Tuple[int, ...] = ()   # axes whose product is fan-in
+    constant: float = 0.0
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def materialize(defs: Any, rng: jax.Array, dtype=jnp.float32) -> Any:
+    """Instantiate a ParamDef tree into parameter arrays."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(rng, len(leaves))
+
+    def make(d: ParamDef, key):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dtype)
+        if d.init == "constant":
+            return jnp.full(d.shape, d.constant, dtype)
+        fan_axes = d.fan_in_axes or tuple(range(len(d.shape) - 1))
+        fan_in = max(int(np.prod([d.shape[a] for a in fan_axes])), 1)
+        std = d.scale / math.sqrt(fan_in)
+        return jax.random.normal(key, d.shape, dtype) * jnp.asarray(std, dtype)
+
+    return jax.tree.unflatten(
+        treedef, [make(d, k) for d, k in zip(leaves, keys)]
+    )
+
+
+def abstract(defs: Any, dtype=jnp.float32) -> Any:
+    """ShapeDtypeStruct tree for dry-run lowering (no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=_is_def
+    )
+
+
+def tree_num_params(defs_or_params: Any) -> int:
+    """Total parameter count of a ParamDef or array pytree."""
+    def size(x):
+        if isinstance(x, ParamDef):
+            return int(np.prod(x.shape))
+        return int(np.prod(x.shape))
+    return sum(size(l) for l in jax.tree.leaves(defs_or_params,
+                                                is_leaf=_is_def))

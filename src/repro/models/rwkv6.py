@@ -1,0 +1,309 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free LM with token-shift
+and data-dependent per-channel decay.
+
+Training uses the chunked-parallel WKV form (intra-chunk factorized decay
+attention + inter-chunk recurrent state); decode is the O(1)-state
+recurrence. Both are validated against ``repro.kernels.ref.wkv6_ref``.
+
+Numerics note (documented deviation): the per-step log-decay is clamped to
+>= -4 so the intra-chunk factorization exp(-cumsum) stays in f32 range at
+chunk 16 (exp(64) ~ 6e27 < f32 max). Official RWKV-6 decay values
+(w = exp(-exp(w_raw)), w_raw in [-8, 1]) give log-decay in [-2.72, -3e-4],
+so the clamp binds only in the far tail.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.annotate import constrain, unshard_fsdp
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models.params import ParamDef
+
+__all__ = ["rwkv6_defs", "rwkv6_apply", "rwkv6_decode", "init_rwkv_cache",
+           "wkv6_chunked"]
+
+_LOGW_MIN = -4.0
+_WKV_CHUNK = 16
+
+
+def rwkv6_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v, nl, r = cfg.d_model, cfg.vocab_size, cfg.num_layers, \
+        cfg.rwkv_lora_rank
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+
+    def pd(shape, axes, **kw):
+        return ParamDef((nl,) + shape, ("layers",) + axes, **kw)
+
+    layer = {
+        "ln1_s": pd((d,), ("norm",), init="ones"),
+        "ln1_b": pd((d,), ("norm",), init="zeros"),
+        "ln2_s": pd((d,), ("norm",), init="ones"),
+        "ln2_b": pd((d,), ("norm",), init="zeros"),
+        "tm": {
+            # ddlerp: 5 interpolation targets (r, k, v, w, g). lora_a is
+            # (D, 5, r) so no sharded-dim-splitting reshape is ever needed
+            # (GSPMD "involuntary full remat" hazard -- Perf cycle 4).
+            "mu": pd((5, d), (None, "norm"), init="zeros"),
+            "lora_a": pd((d, 5, r), ("embed", None, "lora"),
+                         fan_in_axes=(2,)),
+            "lora_b": pd((5, r, d), (None, "lora", "embed"),
+                         fan_in_axes=(2,), scale=0.1),
+            # data-dependent decay lora + base.
+            "w0": pd((d,), ("norm",), init="constant", constant=-0.6),
+            "wa": pd((d, r), ("embed", "lora"), fan_in_axes=(1,)),
+            "wb": pd((r, d), ("lora", "embed"), fan_in_axes=(1,),
+                     scale=0.1),
+            "u": pd((h, hd), ("heads", "head_dim"), init="zeros"),
+            "wr": pd((d, d), ("embed", "heads_x"), fan_in_axes=(1,)),
+            "wk": pd((d, d), ("embed", "heads_x"), fan_in_axes=(1,)),
+            "wv": pd((d, d), ("embed", "heads_x"), fan_in_axes=(1,)),
+            "wg": pd((d, d), ("embed", "heads_x"), fan_in_axes=(1,)),
+            "wo": pd((d, d), ("heads_x", "embed"), fan_in_axes=(1,)),
+            "gn_s": pd((d,), ("norm",), init="ones"),
+            "gn_b": pd((d,), ("norm",), init="zeros"),
+        },
+        "cm": {
+            "mu_k": pd((d,), ("norm",), init="zeros"),
+            "mu_r": pd((d,), ("norm",), init="zeros"),
+            "wk": pd((d, cfg.d_ff), ("embed", "mlp"), fan_in_axes=(1,)),
+            "wv": pd((cfg.d_ff, d), ("mlp", "embed"), fan_in_axes=(1,)),
+            "wr": pd((d, d), ("embed", "heads_x"), fan_in_axes=(1,)),
+        },
+    }
+    return {
+        "embed": ParamDef((v, d), ("vocab", "embed"), fan_in_axes=(1,)),
+        "ln0_s": ParamDef((d,), ("norm",), init="ones"),
+        "ln0_b": ParamDef((d,), ("norm",), init="zeros"),
+        "layers": layer,
+        "ln_f_s": ParamDef((d,), ("norm",), init="ones"),
+        "ln_f_b": ParamDef((d,), ("norm",), init="zeros"),
+        "lm_head": ParamDef((d, v), ("embed", "vocab"), fan_in_axes=(0,)),
+    }
+
+
+# ----------------------------------------------------------------------
+# WKV recurrence -- chunked (train) and stepwise (decode)
+# ----------------------------------------------------------------------
+
+
+def wkv6_chunked(
+    r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, logw: jnp.ndarray,
+    u: jnp.ndarray, state0: Optional[jnp.ndarray] = None,
+    chunk: int = _WKV_CHUNK,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked WKV-6. r/k/v/logw: (B, S, H, hd); u: (H, hd).
+
+    Returns (o (B,S,H,hd), state (B,H,hd,hd)). f32 internally.
+    o_t = r_t (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1}
+          + k_t v_t^T, with w = exp(logw).
+    """
+    b, s, h, hd = r.shape
+    c = min(chunk, s)
+    if s % c:
+        raise ValueError(f"seq {s} not divisible by chunk {c}")
+    nc = s // c
+    f32 = jnp.float32
+    rc, kc, vc, wc = (x.reshape(b, nc, c, h, hd).astype(f32)
+                      for x in (r, k, v, logw))
+    s0 = (jnp.zeros((b, h, hd, hd), f32) if state0 is None
+          else state0.astype(f32))
+
+    def body(state, inp):
+        r_, k_, v_, lw = inp                     # (b, c, h, hd)
+        cum = jnp.cumsum(lw, axis=1)             # inclusive
+        cum_prev = cum - lw                      # cum_{t-1}
+        r_dec = r_ * jnp.exp(cum_prev)
+        k_dec = k_ * jnp.exp(-cum)
+        att = jnp.einsum("bthi,bshi->bhts", r_dec, k_dec)
+        mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        att = jnp.where(mask[None, None], att, 0.0)
+        intra = jnp.einsum("bhts,bshj->bthj", att, v_)
+        bonus = jnp.einsum("bthi,hi,bthi->bth", r_, u.astype(f32), k_)
+        intra = intra + bonus[..., None] * v_
+        cross = jnp.einsum("bthi,bhij->bthj", r_dec, state)
+        o = cross + intra
+        cum_end = cum[:, -1:]                    # (b, 1, h, hd)
+        k_tail = k_ * jnp.exp(cum_end - cum)
+        state = (jnp.exp(cum_end[:, 0])[..., None] * state
+                 + jnp.einsum("bshi,bshj->bhij", k_tail, v_))
+        return state, o
+
+    # scan over chunks (time-major)
+    inp = tuple(x.transpose(1, 0, 2, 3, 4) for x in (rc, kc, vc, wc))
+    state, o = jax.lax.scan(body, s0, inp)
+    o = o.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+    return o.astype(r.dtype), state
+
+
+def _wkv6_step(r, k, v, logw, u, state):
+    """Single-token WKV step. r/k/v/logw (B,H,hd); state (B,H,hd,hd)."""
+    f32 = jnp.float32
+    r_, k_, v_, w_ = (x.astype(f32) for x in (r, k, v, jnp.exp(logw)))
+    kv = jnp.einsum("bhi,bhj->bhij", k_, v_)
+    o = jnp.einsum("bhi,bhij->bhj", r_,
+                   state + u.astype(f32)[None, :, :, None] * kv)
+    state = w_[..., None] * state + kv
+    return o.astype(r.dtype), state
+
+
+# ----------------------------------------------------------------------
+# Blocks
+# ----------------------------------------------------------------------
+
+
+def _token_shift(x: jnp.ndarray, last: Optional[jnp.ndarray] = None):
+    """Previous-token tensor; ``last`` (B, D) seeds position 0 (decode)."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def _ddlerp(tm, x, sx):
+    """Data-dependent interpolation producing (r,k,v,w,g) inputs."""
+    xx = sx - x
+    base = x + xx * tm["mu"][:, None, None]            # (5, B, S, D)
+    lora_a = unshard_fsdp(tm["lora_a"])                # tiny: replicate
+    lora_b = unshard_fsdp(tm["lora_b"])
+    lora = jnp.tanh(jnp.einsum("bsd,dkr->bskr", x + xx * 0.5, lora_a))
+    lora = constrain(lora, ("batch", None, None, None))
+    adj = jnp.einsum("bskr,krd->kbsd", lora, lora_b)
+    adj = constrain(adj, (None, "batch", None, None))
+    return base + xx[None] * adj                        # (5, B, S, D)
+
+
+def _time_mix(tm, x, cfg: ModelConfig, *, sx=None, state0=None,
+              decode: bool = False):
+    b, s, d = x.shape
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    sx = _token_shift(x, sx)
+    xr, xk, xv, xw, xg = _ddlerp(tm, x, sx)
+    r = L.dense(xr, tm["wr"]).reshape(b, s, h, hd)
+    k = L.dense(xk, tm["wk"]).reshape(b, s, h, hd)
+    v = L.dense(xv, tm["wv"]).reshape(b, s, h, hd)
+    g = L.dense(xg, tm["wg"])
+    dec = jnp.einsum("bsr,rd->bsd", jnp.tanh(
+        jnp.einsum("bsd,dr->bsr", xw, unshard_fsdp(tm["wa"]))),
+        unshard_fsdp(tm["wb"]))
+    logw = -jnp.exp((tm["w0"] + dec).astype(jnp.float32))
+    logw = jnp.maximum(logw, _LOGW_MIN).reshape(b, s, h, hd)
+
+    if decode:
+        o, state = _wkv6_step(r[:, 0], k[:, 0], v[:, 0], logw[:, 0],
+                              tm["u"], state0)
+        o = o[:, None]                                   # (B, 1, H, hd)
+    else:
+        o, state = wkv6_chunked(r, k, v, logw, tm["u"], state0,
+                                chunk=min(_WKV_CHUNK, s))
+    o = o.reshape(b, s, d)
+    # Per-head group norm, then SiLU(g) gate (RWKV-6 output block).
+    o = o.reshape(b, s, h, hd)
+    mu = o.mean(-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    o = ((o - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(b, s, d)
+    o = o * tm["gn_s"] + tm["gn_b"]
+    o = o * jax.nn.silu(g)
+    return L.dense(o, tm["wo"], role="down"), state
+
+
+def _channel_mix(cm, x, *, sx=None):
+    sx = _token_shift(x, sx)
+    xx = sx - x
+    xk = x + xx * cm["mu_k"]
+    xr = x + xx * cm["mu_r"]
+    kk = jnp.square(jax.nn.relu(L.dense(xk, cm["wk"])))
+    kv = L.dense(kk, cm["wv"], role="down")
+    return jax.nn.sigmoid(L.dense(xr, cm["wr"])) * kv
+
+
+def rwkv6_apply(params: Dict[str, Any], tokens: jnp.ndarray,
+                cfg: ModelConfig, *, scan_layers: bool = True,
+                remat: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. Returns (logits f32, aux=0)."""
+    h = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    h = L.layer_norm(h, params["ln0_s"], params["ln0_b"], cfg.norm_eps)
+
+    def body(h, lp):
+        x = L.layer_norm(h, lp["ln1_s"], lp["ln1_b"], cfg.norm_eps)
+        tm_out, _ = _time_mix(lp["tm"], x, cfg)
+        h = h + tm_out
+        x = L.layer_norm(h, lp["ln2_s"], lp["ln2_b"], cfg.norm_eps)
+        return h + _channel_mix(lp["cm"], x), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    if scan_layers:
+        h, _ = jax.lax.scan(lambda c, lp: body(c, lp), h, params["layers"])
+    else:
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda x: x[i], params["layers"])
+            h, _ = body(h, lp)
+    h = L.layer_norm(h, params["ln_f_s"], params["ln_f_b"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h,
+                        unshard_fsdp(params["lm_head"], (None, "model")),
+                        preferred_element_type=jnp.float32)
+    logits = constrain(logits, ("batch", None, "model"))
+    return logits, jnp.float32(0.0)
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, cache_len: int = 0,
+                    dtype=None) -> Dict[str, jnp.ndarray]:
+    """O(1) recurrent cache: WKV state + token-shift states per layer.
+
+    ``cache_len`` is ignored (constant-size state) -- the property that
+    makes the long_500k cell admissible for this family.
+    """
+    del cache_len
+    nl, d = cfg.num_layers, cfg.d_model
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    dt = jnp.dtype(dtype or cfg.dtype)
+    return {
+        "state": jnp.zeros((nl, batch, h, hd, hd), jnp.float32),
+        "tm_x": jnp.zeros((nl, batch, d), dt),
+        "cm_x": jnp.zeros((nl, batch, d), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def rwkv6_decode(params: Dict[str, Any], cache: Dict[str, jnp.ndarray],
+                 tokens: jnp.ndarray, cfg: ModelConfig,
+                 *, scan_layers: bool = True
+                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One decode step. tokens (B, 1)."""
+    h = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    h = L.layer_norm(h, params["ln0_s"], params["ln0_b"], cfg.norm_eps)
+
+    def body(h, inp):
+        lp, state, tm_x, cm_x = inp
+        x = L.layer_norm(h, lp["ln1_s"], lp["ln1_b"], cfg.norm_eps)
+        tm_out, state_new = _time_mix(lp["tm"], x, cfg, sx=tm_x,
+                                      state0=state, decode=True)
+        h = h + tm_out
+        x2 = L.layer_norm(h, lp["ln2_s"], lp["ln2_b"], cfg.norm_eps)
+        h = h + _channel_mix(lp["cm"], x2, sx=cm_x)
+        return h, (state_new, x[:, 0], x2[:, 0])
+
+    if scan_layers:
+        h, (state, tm_x, cm_x) = jax.lax.scan(
+            body, h, (params["layers"], cache["state"], cache["tm_x"],
+                      cache["cm_x"]))
+    else:
+        outs = []
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda x: x[i], params["layers"])
+            h, o = body(h, (lp, cache["state"][i], cache["tm_x"][i],
+                            cache["cm_x"][i]))
+            outs.append(o)
+        state, tm_x, cm_x = (jnp.stack([o[j] for o in outs])
+                             for j in range(3))
+    h = L.layer_norm(h, params["ln_f_s"], params["ln_f_b"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h,
+                        unshard_fsdp(params["lm_head"], (None, "model")),
+                        preferred_element_type=jnp.float32)
+    logits = constrain(logits, ("batch", None, "model"))
+    return logits, {"state": state, "tm_x": tm_x, "cm_x": cm_x,
+                    "pos": cache["pos"] + 1}

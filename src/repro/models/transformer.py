@@ -1,0 +1,182 @@
+"""Decoder-only transformer backbone: dense, MoE and VLM families.
+
+Layers are stacked along a leading ``layers`` axis and executed with
+``lax.scan`` (compact HLO at any depth -- nemotron's 96 layers compile as
+fast as 16; the roofline harness separately lowers unrolled depth-1/2
+variants for exact FLOP accounting, see DESIGN.md Sec. 6). Set
+``scan_layers=False`` to unroll.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.annotate import constrain, unshard_fsdp
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models.params import ParamDef
+
+__all__ = [
+    "transformer_defs", "transformer_apply", "transformer_decode",
+    "init_kv_cache", "unembed",
+]
+
+
+def transformer_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v, nl = cfg.d_model, cfg.vocab_size, cfg.num_layers
+    layer: Dict[str, Any] = {
+        "ln1": ParamDef((nl, d), ("layers", "norm"), init="ones"),
+        "ln2": ParamDef((nl, d), ("layers", "norm"), init="ones"),
+        "attn": L.attention_defs(cfg, layers=nl),
+    }
+    if cfg.family == "moe":
+        layer["moe"] = L.moe_defs(cfg, layers=nl)
+    else:
+        layer["mlp"] = L.mlp_defs(cfg, layers=nl)
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((v, d), ("vocab", "embed"), scale=1.0,
+                          fan_in_axes=(1,)),
+        "layers": layer,
+        "ln_f": ParamDef((d,), ("norm",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, v), ("embed", "vocab"),
+                                   fan_in_axes=(0,))
+    return defs
+
+
+def unembed(params: Dict[str, Any], h: jnp.ndarray, cfg: ModelConfig
+            ) -> jnp.ndarray:
+    """Final norm + LM head; logits in f32."""
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    w = unshard_fsdp(w, (None, "model"))
+    logits = jnp.einsum("bsd,dv->bsv", h, w,
+                        preferred_element_type=jnp.float32)
+    # Keep vocab sharded through the loss: avoids a replicated (B,S,V)
+    # f32 tensor (33 GB/device at nemotron scale -- see EXPERIMENTS.md).
+    logits = constrain(logits, ("batch", None, "model"))
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def _layer_body(h, lp, positions, cfg, *, mrope):
+    a_in = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+    h = h + L.attention_apply(lp["attn"], a_in, positions, cfg,
+                              causal=True, mrope=mrope)
+    m_in = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        mo, aux = L.moe_apply(lp["moe"], m_in, cfg)
+        return h + mo, aux
+    return h + L.mlp_apply(lp["mlp"], m_in, cfg), jnp.float32(0.0)
+
+
+def transformer_apply(
+    params: Dict[str, Any],
+    tokens: jnp.ndarray,                  # (B, S) int32
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    extra_embeds: Optional[jnp.ndarray] = None,  # VLM patch embeddings
+    scan_layers: bool = True,
+    remat: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. Returns (logits (B,S,V) f32, moe_aux_loss)."""
+    b, s = tokens.shape
+    h = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    h = constrain(h, ("batch", None, None))
+    mrope = cfg.family == "vlm"
+    if extra_embeds is not None:
+        # VLM: first n_vis sequence slots carry patch embeddings.
+        n_vis = extra_embeds.shape[1]
+        h = jnp.concatenate(
+            [extra_embeds.astype(h.dtype), h[:, n_vis:]], axis=1)
+    if positions is None:
+        if mrope:
+            n_vis = 0 if extra_embeds is None else extra_embeds.shape[1]
+            side = max(int(n_vis ** 0.5), 1)
+            positions = L.mrope_positions(b, s, n_vis, (side, side))
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    body = functools.partial(_layer_body, positions=positions, cfg=cfg,
+                             mrope=mrope)
+    if remat:
+        body = jax.checkpoint(body)
+    if scan_layers:
+        def scan_fn(carry, lp):
+            h, aux = carry
+            h, a = body(h, lp)
+            return (h, aux + a), None
+        (h, aux), _ = jax.lax.scan(scan_fn, (h, jnp.float32(0.0)),
+                                   params["layers"])
+    else:
+        aux = jnp.float32(0.0)
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda x: x[i], params["layers"])
+            h, a = body(h, lp)
+            aux = aux + a
+    return unembed(params, h, cfg), aux
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                  dtype=None) -> Dict[str, jnp.ndarray]:
+    """Stacked per-layer KV cache. SWA archs get a ring buffer of window
+    size -- the reason h2o-danube's long_500k cell is admissible."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    if cfg.sliding_window is not None:
+        cache_len = min(cache_len, cfg.sliding_window)
+    shape = (cfg.num_layers, batch, cache_len, cfg.num_kv_heads,
+             cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def transformer_decode(
+    params: Dict[str, Any],
+    cache: Dict[str, jnp.ndarray],
+    tokens: jnp.ndarray,                  # (B, 1)
+    cfg: ModelConfig,
+    *,
+    window_override: Optional[int] = None,
+    scan_layers: bool = True,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One decode step over the stacked cache. Returns (logits, cache)."""
+    h = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    mrope = cfg.family == "vlm"
+    window = window_override or cfg.sliding_window
+    pos = cache["pos"]
+
+    def scan_fn(h, inp):
+        lp, k_l, v_l = inp
+        a_in = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        att, new = L.attention_decode(
+            lp["attn"], a_in, {"k": k_l, "v": v_l, "pos": pos}, cfg,
+            window=window, mrope=mrope)
+        h = h + att
+        m_in = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            mo, _ = L.moe_apply(lp["moe"], m_in, cfg)
+            h = h + mo
+        else:
+            h = h + L.mlp_apply(lp["mlp"], m_in, cfg)
+        return h, (new["k"], new["v"])
+
+    if scan_layers:
+        h, (k_new, v_new) = jax.lax.scan(
+            scan_fn, h, (params["layers"], cache["k"], cache["v"]))
+    else:
+        ks, vs = [], []
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda x: x[i], params["layers"])
+            h, (k_i, v_i) = scan_fn(h, (lp, cache["k"][i], cache["v"][i]))
+            ks.append(k_i)
+            vs.append(v_i)
+        k_new, v_new = jnp.stack(ks), jnp.stack(vs)
+    logits = unembed(params, h, cfg)
+    return logits, {"k": k_new, "v": v_new, "pos": pos + 1}

@@ -1,0 +1,336 @@
+"""Zamba2 hybrid backbone: Mamba2 (SSD) layers + a weight-shared attention
+block invoked every ``attn_every`` layers (arXiv:2411.15242).
+
+Mamba2 layers use the chunked SSD form for training (scalar per-head decay
+=> exactly bounded intra-chunk factorization, no clamping needed) and the
+O(1) stepwise recurrence for decode. The shared attention block is a
+standard pre-norm attn+MLP pair, weight-tied across its invocations
+(DESIGN.md documents the simplifications vs the published model: no
+original-embedding concat, no per-invocation LoRA).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.annotate import constrain, unshard_fsdp
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models.params import ParamDef
+
+__all__ = ["zamba2_defs", "zamba2_apply", "zamba2_decode",
+           "init_zamba_cache", "mamba2_chunked"]
+
+
+def _mamba_defs(cfg: ModelConfig, nl: int) -> Dict[str, Any]:
+    d = cfg.d_model
+    din = cfg.ssm_d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    k = cfg.conv_kernel
+    conv_dim = din + 2 * n
+
+    def pd(shape, axes, **kw):
+        return ParamDef((nl,) + shape, ("layers",) + axes, **kw)
+
+    return {
+        "ln": pd((d,), ("norm",), init="ones"),
+        "in_proj": pd((d, 2 * din + 2 * n + h), ("embed", "mlp"),
+                      fan_in_axes=(1,)),
+        "conv_w": pd((k, conv_dim), (None, "conv"), scale=1.0,
+                     fan_in_axes=(0,)),
+        "conv_b": pd((conv_dim,), ("conv",), init="zeros"),
+        "a_log": pd((h,), ("heads",), init="constant", constant=0.0),
+        "dt_bias": pd((h,), ("heads",), init="zeros"),
+        "d_skip": pd((h,), ("heads",), init="ones"),
+        "norm_s": pd((din,), ("norm",), init="ones"),
+        "out_proj": pd((din, d), ("mlp", "embed"), fan_in_axes=(0,)),
+    }
+
+
+def zamba2_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab_size
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((v, d), ("vocab", "embed"), fan_in_axes=(1,)),
+        "layers": _mamba_defs(cfg, cfg.num_layers),
+        # ONE shared attention block, weight-tied across invocations.
+        "shared": {
+            "ln1": ParamDef((d,), ("norm",), init="ones"),
+            "ln2": ParamDef((d,), ("norm",), init="ones"),
+            "attn": L.attention_defs(cfg),
+            "mlp": L.mlp_defs(cfg),
+        },
+        "ln_f": ParamDef((d,), ("norm",), init="ones"),
+        "lm_head": ParamDef((d, v), ("embed", "vocab"), fan_in_axes=(0,)),
+    }
+    return defs
+
+
+# ----------------------------------------------------------------------
+# Mamba2 SSD core
+# ----------------------------------------------------------------------
+
+
+def mamba2_chunked(
+    x: jnp.ndarray,        # (B, S, H, P) inputs (post conv/silu)
+    dt: jnp.ndarray,       # (B, S, H) softplus'd step sizes
+    a: jnp.ndarray,        # (H,) negative decay rates (-exp(a_log))
+    b_in: jnp.ndarray,     # (B, S, N) input projections (ngroups=1)
+    c_in: jnp.ndarray,     # (B, S, N)
+    state0: Optional[jnp.ndarray] = None,
+    chunk: int = 64,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan. Returns (y (B,S,H,P), state (B,H,P,N)). f32 inside.
+
+    h_t = exp(a*dt_t) h_{t-1} + dt_t x_t B_t^T ;  y_t = h_t C_t + skip.
+    (skip applied by caller). All decay exponents are <= 0 inside chunks,
+    so the factorized form is numerically exact in f32.
+    """
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    c = min(chunk, s)
+    if s % c:
+        raise ValueError(f"seq {s} %% chunk {c} != 0")
+    nc = s // c
+    f32 = jnp.float32
+    xc = x.reshape(bsz, nc, c, h, p).astype(f32)
+    dtc = dt.reshape(bsz, nc, c, h).astype(f32)
+    bc = b_in.reshape(bsz, nc, c, n).astype(f32)
+    cc = c_in.reshape(bsz, nc, c, n).astype(f32)
+    s0 = (jnp.zeros((bsz, h, p, n), f32) if state0 is None
+          else state0.astype(f32))
+    a = a.astype(f32)
+
+    def body(state, inp):
+        x_, dt_, b_, c_ = inp                  # (bsz, c, h, p/…)
+        logdec = a[None, None] * dt_           # (bsz, c, h) <= 0
+        cum = jnp.cumsum(logdec, axis=1)
+        # intra-chunk: att[b,h,t,s] = exp(cum_t - cum_s) (C_t . B_s), s<=t
+        scores = jnp.einsum("btn,bsn->bts", c_, b_)
+        ldiff = cum[:, :, None, :] - cum[:, None, :, :]  # (b, t, s, h)
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        att = jnp.where(mask[None, :, :, None],
+                        jnp.exp(ldiff), 0.0) * scores[..., None]
+        dtx = x_ * dt_[..., None]              # (b, c, h, p)
+        y = jnp.einsum("btsh,bshp->bthp", att, dtx)
+        # cross-chunk: y += exp(cum_t) * C_t . state0
+        y_cross = jnp.einsum("btn,bhpn->bthp", c_, state)
+        y = y + y_cross * jnp.exp(cum)[..., None]
+        # state update
+        cum_end = cum[:, -1]                   # (b, h)
+        k_tail = jnp.exp(cum_end[:, None] - cum)   # (b, c, h)
+        state = (jnp.exp(cum_end)[..., None, None] * state
+                 + jnp.einsum("bchp,bcn->bhpn", dtx * k_tail[..., None], b_))
+        return state, y
+
+    inp = tuple(z.transpose(1, 0, 2, 3, *([4] if z.ndim == 5 else []))
+                for z in (xc, dtc, bc, cc))
+    state, y = jax.lax.scan(body, s0, inp)
+    y = y.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, p)
+    return y.astype(x.dtype), state
+
+
+def _mamba_step(x, dt, a, b_in, c_in, state):
+    """One-token SSD update. x (B,H,P); dt (B,H); b/c (B,N);
+    state (B,H,P,N)."""
+    f32 = jnp.float32
+    dec = jnp.exp(a.astype(f32)[None] * dt.astype(f32))        # (B,H)
+    dbx = jnp.einsum("bhp,bn->bhpn", x.astype(f32) * dt.astype(f32)[..., None],
+                     b_in.astype(f32))
+    state = dec[..., None, None] * state + dbx
+    y = jnp.einsum("bhpn,bn->bhp", state, c_in.astype(f32))
+    return y.astype(x.dtype), state
+
+
+def _mamba_forward(lp, x, cfg: ModelConfig, *, conv_state=None,
+                   ssm_state=None, decode: bool = False):
+    """Apply one Mamba2 layer (pre-norm, residual added by caller).
+
+    Returns (out, (conv_state, ssm_state)).
+    """
+    bsz, s, d = x.shape
+    din, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    k = cfg.conv_kernel
+
+    proj = L.dense(x, lp["in_proj"])
+    z, xbc, dt_raw = jnp.split(proj, [din, 2 * din + 2 * n], axis=-1)
+
+    # Depthwise causal conv over (x, B, C) channels.
+    if decode:
+        # conv_state: (B, k-1, conv_dim) previous inputs
+        window = jnp.concatenate([conv_state, xbc], axis=1)    # (B, k, cd)
+        conv_out = jnp.einsum("bkc,kc->bc", window, lp["conv_w"])[:, None]
+        new_conv_state = window[:, 1:]
+    else:
+        pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+        conv_out = sum(
+            pad[:, i:i + s] * lp["conv_w"][i][None, None]
+            for i in range(k))
+        new_conv_state = pad[:, -(k - 1):]
+    xbc = jax.nn.silu(conv_out + lp["conv_b"])
+    xs, b_in, c_in = jnp.split(xbc, [din, din + n], axis=-1)
+    xs = xs.reshape(bsz, -1, h, p)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + lp["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(lp["a_log"].astype(jnp.float32))
+
+    if decode:
+        y, ssm_state = _mamba_step(xs[:, 0], dt[:, 0], a, b_in[:, 0],
+                                   c_in[:, 0], ssm_state)
+        y = y[:, None]
+    else:
+        y, ssm_state = mamba2_chunked(xs, dt, a, b_in, c_in, ssm_state,
+                                      chunk=min(cfg.chunk_size * 2, s))
+    y = y + xs * lp["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, -1, din)
+    y = L.rms_norm(y * jax.nn.silu(z), lp["norm_s"], cfg.norm_eps)
+    out = L.dense(y, lp["out_proj"])
+    return out, (new_conv_state, ssm_state)
+
+
+def _shared_block(sp, h, positions, cfg, *, window=None):
+    a_in = L.rms_norm(h, sp["ln1"], cfg.norm_eps)
+    h = h + L.attention_apply(sp["attn"], a_in, positions, cfg,
+                              causal=True, window=window)
+    m_in = L.rms_norm(h, sp["ln2"], cfg.norm_eps)
+    return h + L.mlp_apply(sp["mlp"], m_in, cfg)
+
+
+def _stage_bounds(cfg: ModelConfig):
+    """Mamba-layer index ranges between shared-attn invocations."""
+    period = cfg.attn_every or cfg.num_layers
+    bounds = []
+    i = 0
+    while i < cfg.num_layers:
+        j = min(i + period, cfg.num_layers)
+        bounds.append((i, j))
+        i = j
+    return bounds
+
+
+def zamba2_apply(params: Dict[str, Any], tokens: jnp.ndarray,
+                 cfg: ModelConfig, *, scan_layers: bool = True,
+                 remat: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s = tokens.shape
+    h = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def mamba_body(carry, lp):
+        out, st = _mamba_forward(lp, L.rms_norm(carry, lp["ln"],
+                                                cfg.norm_eps), cfg)
+        return carry + out, None
+
+    if remat:
+        mamba_body = jax.checkpoint(mamba_body)
+    for (i, j) in _stage_bounds(cfg):
+        stage = jax.tree.map(lambda x: x[i:j], params["layers"])
+        if scan_layers:
+            h, _ = jax.lax.scan(mamba_body, h, stage)
+        else:
+            for li in range(j - i):
+                lp = jax.tree.map(lambda x: x[li], stage)
+                h, _ = mamba_body(h, lp)
+        h = _shared_block(params["shared"], h, positions, cfg)
+
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h,
+                        unshard_fsdp(params["lm_head"], (None, "model")),
+                        preferred_element_type=jnp.float32)
+    logits = constrain(logits, ("batch", None, "model"))
+    return logits, jnp.float32(0.0)
+
+
+def init_zamba_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                     dtype=None) -> Dict[str, jnp.ndarray]:
+    """Mamba conv+SSM states per layer, plus one KV cache per shared-attn
+    invocation. At long context the shared block runs with a sliding
+    window (long_context_window), bounding the KV caches."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    nl, d = cfg.num_layers, cfg.d_model
+    din, n = cfg.ssm_d_inner, cfg.ssm_state
+    h, p, k = cfg.ssm_heads, cfg.ssm_head_dim, cfg.conv_kernel
+    n_inv = len(_stage_bounds(cfg))
+    if cfg.long_context_window is not None:
+        cache_len = min(cache_len, cfg.long_context_window)
+    return {
+        "conv": jnp.zeros((nl, batch, k - 1, din + 2 * n), dt),
+        "ssm": jnp.zeros((nl, batch, h, p, n), jnp.float32),
+        "attn_k": jnp.zeros((n_inv, batch, cache_len, cfg.num_kv_heads,
+                             cfg.head_dim), dt),
+        "attn_v": jnp.zeros((n_inv, batch, cache_len, cfg.num_kv_heads,
+                             cfg.head_dim), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def zamba2_decode(params: Dict[str, Any], cache: Dict[str, jnp.ndarray],
+                  tokens: jnp.ndarray, cfg: ModelConfig,
+                  *, scan_layers: bool = True
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    h = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    pos = cache["pos"]
+    # Ring-buffer attention iff the cache was clamped to the long-context
+    # window at init (i.e. true context exceeds the window).
+    ck_len = cache["attn_k"].shape[2]
+    ring = (cfg.long_context_window is not None
+            and ck_len == cfg.long_context_window)
+    window_arg = ck_len if ring else None
+    bounds = _stage_bounds(cfg)
+
+    def mamba_body(carry, inp):
+        h = carry
+        lp, conv_st, ssm_st = inp
+        out, (conv_new, ssm_new) = _mamba_forward(
+            lp, L.rms_norm(h, lp["ln"], cfg.norm_eps), cfg,
+            conv_state=conv_st, ssm_state=ssm_st, decode=True)
+        return h + out, (conv_new, ssm_new)
+
+    conv_all, ssm_all = [], []
+    k_all, v_all = [], []
+    for si, (i, j) in enumerate(bounds):
+        stage = jax.tree.map(lambda x: x[i:j], params["layers"])
+        conv_st = cache["conv"][i:j]
+        ssm_st = cache["ssm"][i:j]
+        if scan_layers:
+            h, (conv_new, ssm_new) = jax.lax.scan(
+                mamba_body, h, (stage, conv_st, ssm_st))
+        else:
+            cs, ss = [], []
+            for li in range(j - i):
+                lp = jax.tree.map(lambda x: x[li], stage)
+                h, (c_n, s_n) = mamba_body(h, (lp, conv_st[li], ssm_st[li]))
+                cs.append(c_n)
+                ss.append(s_n)
+            conv_new, ssm_new = jnp.stack(cs), jnp.stack(ss)
+        conv_all.append(conv_new)
+        ssm_all.append(ssm_new)
+        sp = params["shared"]
+        a_in = L.rms_norm(h, sp["ln1"], cfg.norm_eps)
+        att, new_kv = L.attention_decode(
+            sp["attn"], a_in,
+            {"k": cache["attn_k"][si], "v": cache["attn_v"][si],
+             "pos": pos}, cfg,
+            window=window_arg)
+        h = h + att
+        m_in = L.rms_norm(h, sp["ln2"], cfg.norm_eps)
+        h = h + L.mlp_apply(sp["mlp"], m_in, cfg)
+        k_all.append(new_kv["k"])
+        v_all.append(new_kv["v"])
+
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h,
+                        unshard_fsdp(params["lm_head"], (None, "model")),
+                        preferred_element_type=jnp.float32)
+    logits = constrain(logits, ("batch", None, "model"))
+    new_cache = {
+        "conv": jnp.concatenate(conv_all, axis=0),
+        "ssm": jnp.concatenate(ssm_all, axis=0),
+        "attn_k": jnp.stack(k_all),
+        "attn_v": jnp.stack(v_all),
+        "pos": pos + 1,
+    }
+    return logits, new_cache

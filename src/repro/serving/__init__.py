@@ -1,0 +1,3 @@
+"""Serving substrate: batched generate loop + ternary serving quantization."""
+from repro.serving.serve import ServeConfig, ServeStats, generate, quantize_for_serving
+from repro.serving.scheduler import BatchScheduler, Request

@@ -1,0 +1,6 @@
+"""Training substrate: optimizer, fault-tolerant trainer, checkpointing,
+gradient compression."""
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.training.trainer import Trainer, TrainerConfig
+from repro.training import checkpoint
+from repro.training.compression import compress_grads, compression_init

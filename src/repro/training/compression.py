@@ -1,0 +1,63 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+Top-k magnitude sparsification with error feedback (Deep Gradient
+Compression style): each step transmits only the largest ``ratio`` of
+gradient entries per leaf; the residual is accumulated locally and added
+back next step, so the compressed optimizer provably tracks the dense one.
+On the production mesh this shrinks the slow cross-pod gradient
+all-reduce by ~1/ratio while FSDP reduce-scatters stay dense intra-pod
+(DESIGN.md, distributed-optimization tricks).
+
+Pure-pytree implementation; ``compress`` is jit-compatible and runs inside
+``train_step`` when enabled.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compression_init", "compress_grads"]
+
+
+def compression_init(grads_like: Any) -> Any:
+    """Zero error-feedback buffers matching the gradient pytree."""
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                        grads_like)
+
+
+def _topk_mask(x: jnp.ndarray, ratio: float) -> jnp.ndarray:
+    k = max(int(x.size * ratio), 1)
+    flat = jnp.abs(x.reshape(-1))
+    # threshold = k-th largest magnitude
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def compress_grads(
+    grads: Any, error_state: Any, *, ratio: float = 0.01
+) -> Tuple[Any, Any, Dict[str, jnp.ndarray]]:
+    """Sparsify grads to top-``ratio`` entries with error feedback.
+
+    Returns (compressed grads -- dense tensors with zeros off-mask, new
+    error state, metrics). The dense-with-zeros form keeps downstream ops
+    unchanged; on the wire the zeros compress (or map to sparse
+    all-reduce where available).
+    """
+    def one(g, e):
+        acc = g.astype(jnp.float32) + e
+        mask = _topk_mask(acc, ratio)
+        sent = acc * mask
+        residual = acc - sent
+        return sent.astype(g.dtype), residual
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error_state)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    sent = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    resid = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    sent_norm = jnp.sqrt(sum(jnp.sum(jnp.square(o[0].astype(jnp.float32)))
+                             for o in outs))
+    metrics = {"compressed_grad_norm": sent_norm}
+    return sent, resid, metrics

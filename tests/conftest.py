@@ -1,0 +1,19 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS here on purpose -- unit tests must see the 1 real CPU
+device. Multi-device tests spawn subprocesses that set
+--xla_force_host_platform_device_count themselves (test_distributed.py).
+"""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,183 @@
+"""ColibriES core: SNN equivalences, events, tiling, energy model."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (KrakenModel, NOMINAL, SNNConfig, init_snn,
+                        plan_layer_tiles, plan_network, snn_apply, snn_loss,
+                        SNE_NEURON_CAPACITY)
+from repro.core import events as ev
+from repro.core.pipeline import ClosedLoopPipeline, pwm_from_logits
+from repro.kernels import lif_scan
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return SNNConfig(height=32, width=32, time_bins=8, conv1_features=4,
+                     conv2_features=8, hidden=32, num_classes=11)
+
+
+@pytest.fixture(scope="module")
+def tiny_setup(tiny_cfg):
+    params = init_snn(jax.random.PRNGKey(0), tiny_cfg)
+    rng = np.random.default_rng(0)
+    w = ev.synthetic_gesture_events(rng, 3, mean_events=6000,
+                                    height=32, width=32)
+    vox = ev.voxelize(jnp.asarray(w.x), jnp.asarray(w.y), jnp.asarray(w.t),
+                      jnp.asarray(w.p), duration_us=w.duration_us,
+                      time_bins=8, height=32, width=32)[None]
+    return params, vox, w
+
+
+# -- execution-order equivalence (SNE layer-serial == STBP time-serial) --
+
+def test_layer_serial_equals_time_serial(tiny_cfg, tiny_setup):
+    params, vox, _ = tiny_setup
+    out_t = snn_apply(params, vox, tiny_cfg, mode="time_serial")
+    out_l = snn_apply(params, vox, tiny_cfg, mode="layer_serial")
+    np.testing.assert_array_equal(np.asarray(out_t["out_spikes"]),
+                                  np.asarray(out_l["out_spikes"]))
+
+
+def test_layer_serial_with_pallas_kernel(tiny_cfg, tiny_setup):
+    params, vox, _ = tiny_setup
+    out_ref = snn_apply(params, vox, tiny_cfg, mode="layer_serial")
+    out_k = snn_apply(params, vox, tiny_cfg, mode="layer_serial",
+                      lif_scan_fn=lambda c, p: lif_scan(c, p))
+    np.testing.assert_array_equal(np.asarray(out_ref["out_spikes"]),
+                                  np.asarray(out_k["out_spikes"]))
+
+
+def test_stbp_gradients_flow_to_all_layers(tiny_cfg, tiny_setup):
+    params, vox, _ = tiny_setup
+    g = jax.grad(lambda p: snn_loss(p, vox, jnp.array([3]), tiny_cfg)[0]
+                 )(params)
+    for name in ("conv1", "conv2", "fc1", "fc2"):
+        assert float(jnp.abs(g[name]["w"]).max()) > 0, f"dead grad {name}"
+
+
+def test_full_table2_network_shapes():
+    cfg = get_config("colibries")
+    assert cfg.flat_dim == 2048          # Table II: FC input 2048
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+    assert params["conv1"]["w"].shape == (3, 3, 2, 16)
+    assert params["conv2"]["w"].shape == (3, 3, 16, 32)
+    assert params["fc1"]["w"].shape == (2048, 512)
+    assert params["fc2"]["w"].shape == (512, 11)
+
+
+# -- events --------------------------------------------------------------
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(n=st.integers(1, 2000), seed=st.integers(0, 2 ** 16),
+                  tb=st.integers(1, 16))
+def test_voxelize_conserves_events(n, seed, tb):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 32, n), jnp.int32)
+    y = jnp.asarray(rng.integers(0, 32, n), jnp.int32)
+    t = jnp.asarray(rng.integers(0, 1000, n), jnp.int32)
+    p = jnp.asarray(rng.integers(0, 2, n), jnp.int32)
+    vox = ev.voxelize(x, y, t, p, duration_us=1000, time_bins=tb,
+                      height=32, width=32, binary=False)
+    assert vox.shape == (tb, 2, 32, 32)
+    assert int(np.asarray(vox).sum()) == n        # count conservation
+    voxb = ev.voxelize(x, y, t, p, duration_us=1000, time_bins=tb,
+                       height=32, width=32, binary=True)
+    assert float(voxb.max()) <= 1.0
+
+
+def test_voxelize_batch_padding():
+    n = 100
+    rng = np.random.default_rng(0)
+    mk = lambda hi, size: jnp.asarray(rng.integers(0, hi, size), jnp.int32)
+    x, y = mk(32, (2, n)), mk(32, (2, n))
+    t, p = mk(1000, (2, n)), mk(2, (2, n))
+    valid = jnp.asarray(np.arange(n)[None, :] < np.array([[60], [100]]))
+    vox = ev.voxelize_batch(x, y, t, p, valid, duration_us=1000,
+                            time_bins=4, height=32, width=32, binary=False)
+    assert int(np.asarray(vox[0]).sum()) == 60
+    assert int(np.asarray(vox[1]).sum()) == 100
+
+
+# -- tiling (SNE TDM) ------------------------------------------------------
+
+def test_table2_tiling_matches_sne_capacity():
+    cfg = get_config("colibries")
+    sizes = cfg.spatial_sizes()
+    plans = plan_network([("conv1", sizes["conv1"]),
+                          ("conv2", sizes["conv2"]),
+                          ("fc1", sizes["fc1"]), ("fc2", sizes["fc2"])])
+    # conv1: 32*32*16 = 16384 neurons > 8192 -> exactly 2 TDM passes
+    assert plans[0].passes == 2
+    assert plans[1].passes == 1 and plans[2].passes == 1
+
+
+@hypothesis.settings(max_examples=30, deadline=None)
+@hypothesis.given(h=st.integers(1, 64), w=st.integers(1, 64),
+                  c=st.integers(1, 64), cap=st.integers(64, 16384))
+def test_property_tiling_covers_volume(h, w, c, cap):
+    plan = plan_layer_tiles("x", (h, w, c), cap)
+    th, tw, tc = plan.tile
+    gh, gw, gc = plan.grid
+    assert plan.neurons_per_pass <= cap
+    assert gh * th >= h and gw * tw >= w and gc * tc >= c
+    assert plan.passes == gh * gw * gc
+
+
+# -- energy model (Table III) ---------------------------------------------
+
+def test_energy_model_reproduces_table3():
+    m = KrakenModel()
+    acct = m.closed_loop(events=NOMINAL.events,
+                         layer_in_spikes=NOMINAL.layer_in_spikes,
+                         layer_fanout=NOMINAL.layer_fanout,
+                         layer_passes=NOMINAL.layer_passes)
+    assert acct["total_time_ms"] == pytest.approx(164.5, rel=1e-6)
+    assert acct["total_energy_mj"] == pytest.approx(7.7, rel=0.01)
+    assert acct["p_idle_mw"] == pytest.approx(17.7, rel=1e-6)
+    assert acct["p_avg_active_mw"] == pytest.approx(35.6, rel=0.01)
+    st = acct["stages"]
+    assert st["data_acquisition"]["time_ms"] == pytest.approx(1.5)
+    assert st["preprocessing"]["time_ms"] == pytest.approx(131.0)
+    assert st["snn_inference"]["time_ms"] == pytest.approx(32.0)
+
+
+def test_energy_model_monotone_in_workload():
+    m = KrakenModel()
+    a1 = m.closed_loop(30_000, (30_000, 6_000, 1_500, 400),
+                       NOMINAL.layer_fanout, NOMINAL.layer_passes)
+    a2 = m.closed_loop(60_000, (60_000, 12_000, 3_000, 800),
+                       NOMINAL.layer_fanout, NOMINAL.layer_passes)
+    assert a2["total_time_ms"] > a1["total_time_ms"]
+    assert a2["total_energy_mj"] > a1["total_energy_mj"]
+
+
+# -- closed loop -----------------------------------------------------------
+
+def test_closed_loop_pipeline(tiny_cfg):
+    params = init_snn(jax.random.PRNGKey(0), tiny_cfg)
+    pipe = ClosedLoopPipeline(params, tiny_cfg)
+    rng = np.random.default_rng(1)
+    w = ev.synthetic_gesture_events(rng, 5, mean_events=5000,
+                                    height=32, width=32)
+    res = pipe(w)
+    assert res.pwm.shape == (1, 4)
+    assert (res.pwm >= 0).all() and (res.pwm <= 1).all()
+    assert 0 <= res.label_pred[0] < 11
+    assert res.latency_ms > 0 and res.energy_mj > 0
+    bd = res.breakdown
+    total = sum(s["time_ms"] for s in bd["stages"].values())
+    assert bd["total_time_ms"] == pytest.approx(total)
+    assert res.sustained_rate_hz > 0
+
+
+def test_pwm_mapping_bounds():
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(4, 11)),
+                         jnp.float32)
+    pwm = pwm_from_logits(logits)
+    assert pwm.shape == (4, 4)
+    assert float(pwm.min()) >= 0 and float(pwm.max()) <= 1

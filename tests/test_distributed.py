@@ -1,0 +1,117 @@
+"""Distribution: sharding-rule resolution + an in-process mini dry-run on
+8 fake devices (subprocess so the device-count flag doesn't leak)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from jax.sharding import PartitionSpec as P
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+SRC = os.path.join(ROOT, "src")
+
+
+def _run_sub(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# -- rule resolution (pure, no devices needed) ----------------------------
+
+def test_resolve_spec_fallbacks():
+    out = _run_sub("""
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import make_mesh_for
+        from repro.distributed.sharding import resolve_spec
+        mesh = make_mesh_for((2, 4), ("data", "model"))
+        # heads divisible -> heads on model
+        s = resolve_spec((64, 8, 16), ("embed", "heads", "head_dim"), mesh)
+        print("A", s)
+        # heads NOT divisible (e.g. llama4's 40%16) -> fallback to head_dim
+        s = resolve_spec((64, 10, 16), ("embed", "heads", "head_dim"), mesh)
+        print("B", s)
+        # nothing divisible -> unsharded dims
+        s = resolve_spec((63, 9, 15), ("embed", "heads", "head_dim"), mesh)
+        print("C", s)
+        # vocab not divisible (seamless 256206-like) -> unsharded vocab
+        s = resolve_spec((254, 64), ("vocab", "embed"), mesh)
+        print("D", s)
+    """)
+    lines = dict(l.split(" ", 1) for l in out.strip().splitlines())
+    assert lines["A"] == "PartitionSpec('data', 'model', None)"
+    assert lines["B"] == "PartitionSpec('data', None, 'model')"
+    assert lines["C"] == "PartitionSpec(None, None, None)"
+    assert lines["D"] == "PartitionSpec(None, 'data')"
+
+
+def test_param_specs_cover_all_archs():
+    out = _run_sub("""
+        import jax
+        from repro.configs import ARCHS, get_config
+        from repro.models import build_model
+        from repro.launch.mesh import make_mesh_for
+        from repro.distributed.sharding import param_pspecs
+        mesh = make_mesh_for((2, 4), ("data", "model"))
+        for a in ARCHS:
+            cfg = get_config(a, smoke=True)
+            defs = build_model(cfg).defs()
+            specs = param_pspecs(defs, mesh)
+            n = len(jax.tree.leaves(specs,
+                    is_leaf=lambda x: hasattr(x, "_normalized_spec_for_aval")))
+            print(a, "ok")
+    """)
+    assert out.count("ok") == 10
+
+
+def test_mini_dryrun_dense_and_rwkv():
+    """lower+compile a train and a decode cell on a (2,4) mesh with smoke
+    configs -- the full-size version of this is launch/dryrun.py."""
+    out = _run_sub("""
+        import dataclasses, jax, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_config
+        from repro.configs.shapes import ShapeSpec
+        from repro.launch.mesh import make_mesh_for
+        from repro.launch.dryrun import lower_cell, analyze
+        import repro.launch.dryrun as DR
+
+        mesh = make_mesh_for((2, 4), ("data", "model"))
+        for arch, shape in [("llama3.2-1b",
+                             ShapeSpec("t", "train", 64, 8)),
+                            ("rwkv6-7b",
+                             ShapeSpec("d", "decode", 64, 8)),
+                            ("deepseek-moe-16b",
+                             ShapeSpec("t", "train", 64, 8))]:
+            cfg = get_config(arch, smoke=True)
+            with mesh:
+                compiled, _ = lower_cell(cfg, shape, mesh)
+            rec = analyze(compiled)
+            assert rec["flops"] > 0
+            print(arch, "compiled flops", rec["flops"] > 0)
+    """)
+    assert out.count("compiled flops True") == 3
+
+
+def test_batch_spec_prefers_pod_data():
+    out = _run_sub("""
+        from repro.launch.mesh import make_mesh_for
+        from repro.distributed.sharding import _batch_dim_spec
+        mesh3 = make_mesh_for((2, 2, 2), ("pod", "data", "model"))
+        print("A", _batch_dim_spec(mesh3, 8))
+        print("B", _batch_dim_spec(mesh3, 2))
+        print("C", _batch_dim_spec(mesh3, 1))
+    """)
+    lines = dict(l.split(" ", 1) for l in out.strip().splitlines())
+    assert lines["A"] == "('pod', 'data')"
+    assert lines["B"] == "('pod',)"
+    assert lines["C"] == "None"

@@ -1,0 +1,103 @@
+"""Ternary-matmul Pallas kernel vs oracle + packing roundtrip properties."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ternary import pack2bit, ternarize, ternary_ste, unpack2bit
+from repro.kernels import pack_ternary_weights, ternary_matmul_ref
+from repro.kernels.ternary_matmul import ternary_matmul_pallas
+
+SHAPES = [(8, 128, 256), (5, 64, 32), (129, 512, 1000), (1, 256, 512),
+          (64, 260, 130)]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_matches_oracle(m, k, n, dtype):
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(2), (m, k), dtype)
+    wp, sc = pack_ternary_weights(w)
+    y_ref = ternary_matmul_ref(x, wp, sc)
+    y_k = ternary_matmul_pallas(x, wp, sc, interpret=True)
+    # f32: accumulation-order noise only; bf16: dequant rounding.
+    rtol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y_ref, np.float32),
+                               np.asarray(y_k, np.float32),
+                               rtol=rtol, atol=rtol)
+
+
+def test_explicit_blocks():
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 384))
+    x = jax.random.normal(jax.random.PRNGKey(2), (32, 256))
+    wp, sc = pack_ternary_weights(w)
+    y_ref = ternary_matmul_ref(x, wp, sc)
+    y_k = ternary_matmul_pallas(x, wp, sc, block_m=16, block_n=128,
+                                block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_k),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pack_unpack_roundtrip():
+    q = jnp.array([[-1, 0, 1, 1], [0, 0, -1, 1]], jnp.int8)
+    packed = pack2bit(q)
+    assert packed.shape == (2, 1) and packed.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(unpack2bit(packed)),
+                                  np.asarray(q))
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    rows=st.integers(1, 8), cols4=st.integers(1, 16),
+    seed=st.integers(0, 2 ** 16))
+def test_property_roundtrip(rows, cols4, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.integers(-1, 2, size=(rows, cols4 * 4)), jnp.int8)
+    np.testing.assert_array_equal(np.asarray(unpack2bit(pack2bit(q))),
+                                  np.asarray(q))
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(k4=st.integers(2, 32), n=st.integers(1, 64),
+                  m=st.integers(1, 16), seed=st.integers(0, 2 ** 16))
+def test_property_kernel_equals_oracle(k4, n, m, seed):
+    k = 4 * k4
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (k, n))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (m, k))
+    wp, sc = pack_ternary_weights(w)
+    y_ref = ternary_matmul_ref(x, wp, sc)
+    y_k = ternary_matmul_pallas(x, wp, sc, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_k),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ternarize_values_and_scale():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 32)) * 2.0
+    q, scale = ternarize(w)
+    assert set(np.unique(np.asarray(q)).tolist()) <= {-1, 0, 1}
+    assert float(scale.min()) > 0
+    # sign preserved wherever a weight survives
+    qn = np.asarray(q)
+    wn = np.asarray(w)
+    nz = qn != 0
+    assert (np.sign(wn[nz]) == qn[nz]).all()
+
+
+def test_ste_gradient_is_identity():
+    w = jax.random.normal(jax.random.PRNGKey(0), (16, 16))
+    g = jax.grad(lambda w: (ternary_ste(w) * 3.0).sum())(w)
+    np.testing.assert_allclose(np.asarray(g), 3.0 * np.ones((16, 16)),
+                               rtol=1e-6)
+
+
+def test_quantization_error_bounded():
+    """Ternary fake-quant keeps relative Frobenius error moderate for
+    gaussian weights (the TWN operating regime CUTIE assumes)."""
+    w = jax.random.normal(jax.random.PRNGKey(5), (512, 512))
+    q, scale = ternarize(w)
+    wq = np.asarray(q, np.float32) * np.asarray(scale)
+    rel = np.linalg.norm(wq - np.asarray(w)) / np.linalg.norm(np.asarray(w))
+    assert rel < 0.75

@@ -1,0 +1,171 @@
+"""Per-arch smoke tests (reduced configs, deliverable f) + family-level
+consistency: decode==forward, chunked==stepwise recurrences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import ModelConfig, build_model
+from repro.kernels.ref import wkv6_ref
+from repro.models.rwkv6 import wkv6_chunked
+from repro.models.zamba2 import mamba2_chunked, _mamba_step
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def _batch_for(cfg, b=2, s=16, rng=None):
+    rng = rng or jax.random.PRNGKey(1)
+    toks = jax.random.randint(rng, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "targets": toks}
+    if cfg.family == "encdec":
+        fd = cfg.frontend_dim or cfg.d_model
+        batch["frames"] = jax.random.normal(
+            jax.random.fold_in(rng, 1), (b, s, fd))
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            jax.random.fold_in(rng, 2), (b, 4, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """Instantiate the REDUCED config, run forward + one optimizer step on
+    CPU, assert output shapes and absence of NaNs."""
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    logits, aux = model.apply(params, batch)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any()), f"{arch}: NaN logits"
+
+    loss, metrics = model.loss(params, batch)
+    assert np.isfinite(float(loss))
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    opt = adamw_init(params)
+    new_params, opt, om = adamw_update(grads, opt, params, AdamWConfig())
+    # params actually moved and stayed finite
+    moved = any(
+        float(jnp.abs(a - b).max()) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)))
+    assert moved
+    assert np.isfinite(float(om["grad_norm"]))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_decode_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(2, 8)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    logits, cache2 = model.decode(params, cache, tok)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    assert int(cache2["pos"]) == 1
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "rwkv6-7b", "zamba2-1.2b",
+                                  "glm4-9b"])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode reproduces the full-sequence forward logits
+    (the serving path is numerically the training path)."""
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(3), (b, s), 0,
+                              cfg.vocab_size)
+    full, _ = model.apply(params, {"tokens": toks})
+    cache = model.init_cache(b, s)
+    outs = []
+    for i in range(s):
+        lg, cache = model.decode(params, cache, toks[:, i:i + 1])
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_chunked_matches_reference():
+    """Chunked-parallel WKV == stepwise oracle (kernels/ref.py)."""
+    t, dk, dv = 32, 8, 8
+    key = jax.random.PRNGKey(0)
+    r, k, v = (jax.random.normal(jax.random.fold_in(key, i), (t, dk))
+               for i in range(3))
+    logw = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 3),
+                                      (t, dk)) * 0.5)
+    u = jax.random.normal(jax.random.fold_in(key, 4), (dk,)) * 0.1
+    o_ref, s_ref = wkv6_ref(r, k, v, jnp.exp(logw), u)
+    o_chk, s_chk = wkv6_chunked(
+        r[None, :, None], k[None, :, None], v[None, :, None],
+        logw[None, :, None], u[None], chunk=8)
+    np.testing.assert_allclose(np.asarray(o_chk[0, :, 0]),
+                               np.asarray(o_ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_chk[0, 0]), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mamba2_chunked_matches_stepwise():
+    b, s, h, p, n = 2, 24, 3, 4, 5
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (b, s, h)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)) * 0.3)
+    b_in = jax.random.normal(jax.random.fold_in(key, 3), (b, s, n))
+    c_in = jax.random.normal(jax.random.fold_in(key, 4), (b, s, n))
+    y_chk, s_chk = mamba2_chunked(x, dt, a, b_in, c_in, chunk=8)
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        y_t, state = _mamba_step(x[:, t], dt[:, t], a, b_in[:, t],
+                                 c_in[:, t], state)
+        ys.append(y_t)
+    y_step = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_step),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_chk), np.asarray(state),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sliding_window_attention_masks_far_context():
+    """SWA: moving a token OUTSIDE the window does not change logits at the
+    final position; moving one INSIDE does."""
+    cfg = get_config("h2o-danube-1.8b", smoke=True)  # window = 8
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    s = 24
+    toks = jax.random.randint(jax.random.PRNGKey(5), (1, s), 2,
+                              cfg.vocab_size)
+    base, _ = model.apply(params, {"tokens": toks})
+    far = toks.at[0, 0].set((toks[0, 0] + 1) % cfg.vocab_size)
+    near = toks.at[0, s - 2].set((toks[0, s - 2] + 1) % cfg.vocab_size)
+    out_far, _ = model.apply(params, {"tokens": far})
+    out_near, _ = model.apply(params, {"tokens": near})
+    np.testing.assert_allclose(np.asarray(out_far[0, -1]),
+                               np.asarray(base[0, -1]), rtol=1e-5,
+                               atol=1e-5)
+    assert float(jnp.abs(out_near[0, -1] - base[0, -1]).max()) > 1e-4
+
+
+def test_moe_capacity_and_aux_loss():
+    cfg = get_config("deepseek-moe-16b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg, b=2, s=16)
+    _, aux = model.apply(params, batch)
+    # Switch aux loss ~= 1 for uniform routing; must be finite and positive.
+    assert 0 < float(aux) < 50
+
+
+def test_param_counts_match_analytic():
+    """Analytic count (roofline MODEL_FLOPS input) within 0.2% of exact
+    (exact for dense/moe/vlm; small-bias terms uncounted for rwkv/zamba/
+    encdec)."""
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        exact, analytic = model.num_params(), cfg.param_count()
+        assert abs(exact - analytic) / exact < 0.002, (arch, exact,
+                                                       analytic)

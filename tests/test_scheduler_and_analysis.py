@@ -1,0 +1,94 @@
+"""Serving scheduler + HLO collective parser + annotation helpers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import (collective_bytes, parse_shape_bytes,
+                                       _group_size)
+from repro.models import ModelConfig, build_model
+from repro.serving.scheduler import BatchScheduler, Request
+from repro.distributed.annotate import (constrain, execution_mode,
+                                        get_execution_mode, unshard_fsdp)
+
+
+def test_parse_shape_bytes():
+    assert parse_shape_bytes("bf16[8,128]") == 8 * 128 * 2
+    assert parse_shape_bytes("f32[100]") == 400
+    assert parse_shape_bytes("(bf16[4], f32[2,2])") == 8 + 16
+    assert parse_shape_bytes("pred[16]") == 16
+    assert parse_shape_bytes("u8[1024,64]") == 1024 * 64
+
+
+def test_group_size_formats():
+    assert _group_size("replica_groups={{0,1,2,3}}") == 4
+    assert _group_size("replica_groups=[32,16]<=[512]") == 16
+    assert _group_size("no groups here") == 1
+
+
+def test_collective_bytes_ring_factors():
+    hlo = """
+  %ag = f32[64,128]{1,0} all-gather(f32[4,128] %x), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar = bf16[32]{0} all-reduce(bf16[32] %y), replica_groups=[2,4]<=[8], to_apply=%sum
+  %cp = f32[16]{0} collective-permute(f32[16] %z), source_target_pairs={{0,1}}, replica_groups={{0,1}}
+"""
+    out = collective_bytes(hlo)
+    ag = 64 * 128 * 4 * 3 / 4
+    ar = 2 * 32 * 2 * 3 / 4
+    assert out["bytes_by_kind"]["all-gather"] == pytest.approx(ag)
+    assert out["bytes_by_kind"]["all-reduce"] == pytest.approx(ar)
+    assert out["count_by_kind"]["collective-permute"] == 1
+
+
+def test_execution_mode_context():
+    assert get_execution_mode() == "train"
+    with execution_mode("serve"):
+        assert get_execution_mode() == "serve"
+        w = jnp.zeros((8, 8))
+        assert unshard_fsdp(w, (None, "model")) is w   # no-op in serve
+    assert get_execution_mode() == "train"
+
+
+def test_constrain_noop_off_mesh():
+    x = jnp.ones((4, 4))
+    y = constrain(x, ("batch", None))
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_scheduler_serves_all_requests():
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                      vocab_size=64, d_ff=128, num_heads=4, num_kv_heads=2,
+                      dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(id=i,
+                    prompt=rng.integers(2, 64, size=rng.integers(2, 6)),
+                    max_new_tokens=int(rng.integers(2, 6)))
+            for i in range(7)]
+    sched = BatchScheduler(model, params, max_batch=3, cache_len=16)
+    done = sched.run(reqs)
+    assert len(done) == 7
+    for r in done:
+        assert r.done and len(r.output) == r.max_new_tokens
+    assert sched.stats["batches"] == 3       # ceil(7/3)
+    assert sched.stats["tokens"] == sum(r.max_new_tokens for r in reqs)
+
+
+def test_scheduler_batch_consistency_vs_single():
+    """A request served alone == the same request served in a batch
+    (padding slots must not leak into real slots)."""
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                      vocab_size=64, d_ff=128, num_heads=4, num_kv_heads=2,
+                      dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = np.array([5, 9, 11], np.int64)
+    r_solo = Request(id=0, prompt=prompt, max_new_tokens=5)
+    BatchScheduler(model, params, max_batch=1, cache_len=16).run([r_solo])
+    r_b = Request(id=1, prompt=prompt, max_new_tokens=5)
+    other = Request(id=2, prompt=np.array([30, 31], np.int64),
+                    max_new_tokens=5)
+    BatchScheduler(model, params, max_batch=2, cache_len=16).run(
+        [r_b, other])
+    assert r_solo.output == r_b.output

@@ -1,0 +1,80 @@
+"""Serving: generate loop + ternary serving quantization (CUTIE at scale)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, build_model
+from repro.models.layers import dense
+from repro.kernels import pack_ternary_weights, ternary_matmul
+from repro.serving import ServeConfig, generate, quantize_for_serving
+
+
+def _model(vocab=64):
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=256,
+                      vocab_size=vocab, d_ff=512, num_heads=4,
+                      num_kv_heads=2, dtype="float32")
+    return build_model(cfg)
+
+
+def test_generate_runs_and_shapes():
+    model = _model()
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (3, 5), 0, 64)
+    toks, stats = generate(model, params,prompts,
+                           ServeConfig(max_new_tokens=6))
+    assert toks.shape == (3, 6)
+    assert stats.tokens_generated == 18
+    assert stats.tokens_per_s > 0
+
+
+def test_quantize_for_serving_stats_and_8x():
+    model = _model()
+    params = model.init(jax.random.PRNGKey(0))
+    qparams, stats = quantize_for_serving(params)
+    assert stats["quantized"] > 0
+    # quantized leaves shrink ~8x; embedding stays fp.
+    assert isinstance(qparams["embed"], jnp.ndarray)
+    mlp = qparams["layers"]["mlp"]["w_up"]
+    assert "packed" in mlp and mlp["packed"].dtype == jnp.uint8
+    orig = params["layers"]["mlp"]["w_up"]
+    assert mlp["packed"].size * 8 == orig.size * 2  # 2bit vs f32... packed bytes
+    # overall compression on the quantized subset ~8x for f32 weights
+    # (bytes_before includes kept leaves; just sanity check direction)
+    assert stats["bytes_after"] < stats["bytes_before"]
+
+
+def test_quantized_model_still_generates():
+    model = _model()
+    params = model.init(jax.random.PRNGKey(0))
+    qparams, _ = quantize_for_serving(params)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0, 64)
+    toks, _ = generate(model, qparams, prompts,
+                       ServeConfig(max_new_tokens=4))
+    assert toks.shape == (2, 4)
+
+
+def test_dense_dispatch_matches_pallas_kernel():
+    """layers.dense() jnp dequant path == Pallas ternary kernel numerics."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 512))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 256))
+    packed, scale = pack_ternary_weights(w)
+    y_jnp = dense(x, {"packed": packed, "scale": scale})
+    y_pallas = ternary_matmul(x, packed, scale)
+    np.testing.assert_allclose(np.asarray(y_jnp), np.asarray(y_pallas),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_quantized_logits_close_to_dense():
+    """Ternary serving is an approximation: top-1 agreement on random
+    inputs should be high for a *trained-like* scale regime. Here we just
+    bound the logit perturbation on an untrained net."""
+    model = _model()
+    params = model.init(jax.random.PRNGKey(0))
+    qparams, _ = quantize_for_serving(params)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0, 64)
+    lg_f, _ = model.apply(params, {"tokens": toks})
+    lg_q, _ = model.apply(qparams, {"tokens": toks})
+    assert np.isfinite(np.asarray(lg_q)).all()
+    # same order of magnitude (ternary keeps per-channel scale)
+    assert float(jnp.abs(lg_q).mean()) < 10 * float(jnp.abs(lg_f).mean()) + 1

@@ -4,18 +4,27 @@ structural VMEM/bandwidth accounting that motivates each kernel on TPU).
 On this CPU container wall-clock numbers only sanity-check the harness;
 the meaningful output is the bytes model: lif_scan's state-traffic saving
 and ternary_matmul's 8x weight-byte reduction, both derived from shapes.
+
+``stream_rows`` additionally measures closed-loop throughput (windows/s)
+of the batched StreamEngine against the looped single-window pipeline at
+several batch sizes, and writes a ``BENCH_stream.json`` artifact.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import SNNConfig, init_snn
+from repro.core import events as ev
 from repro.core.lif import LIFParams
+from repro.core.pipeline import ClosedLoopPipeline
 from repro.kernels import (lif_scan, lif_scan_ref, pack_ternary_weights,
                            ternary_matmul, ternary_matmul_ref)
+from repro.serving import StreamEngine
 
 
 def _time(fn, *args, iters=3):
@@ -60,8 +69,68 @@ def ternary_rows():
     return rows
 
 
+def stream_rows(batch_sizes=(1, 2, 4, 8), windows_per_stream=10,
+                out_json="BENCH_stream.json"):
+    """Closed-loop throughput: looped single-window pipeline vs the batched
+    StreamEngine at several batch sizes (B streams, fixed slots)."""
+    cfg = SNNConfig(height=32, width=32, time_bins=8, conv1_features=4,
+                    conv2_features=8, hidden=32, num_classes=11)
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    max_b = max(batch_sizes)
+    windows = {
+        s: [ev.synthetic_gesture_events(rng, (s + k) % 11, mean_events=3000,
+                                        height=32, width=32)
+            for k in range(windows_per_stream)]
+        for s in range(max_b)
+    }
+
+    def run_looped(b):
+        pipe = ClosedLoopPipeline(params, cfg)
+        work = [w for s in range(b) for w in windows[s]]
+        for w in work:          # warm-up: compile
+            pipe(w)
+        t0 = time.perf_counter()
+        for w in work:
+            pipe(w)
+        return len(work) / (time.perf_counter() - t0)
+
+    def run_batched(b):
+        eng = StreamEngine(params, cfg, max_streams=b)
+        for s in range(b):      # warm-up: compile the (B, bucket) shapes
+            for w in windows[s]:
+                eng.submit(s, w)
+        eng.run()
+        for s in range(b):
+            for w in windows[s]:
+                eng.submit(s, w)
+        t0 = time.perf_counter()
+        n = len(eng.run())
+        return n / (time.perf_counter() - t0)
+
+    rows, artifact = [], []
+    for b in batch_sizes:
+        wps_loop = run_looped(b)
+        wps_batch = run_batched(b)
+        speedup = wps_batch / wps_loop
+        rows.append((f"stream_closed_loop_B{b}", 1e6 / wps_batch,
+                     f"batched_wps={wps_batch:.1f};looped_wps="
+                     f"{wps_loop:.1f};speedup={speedup:.2f}x"))
+        artifact.append({"batch_size": b,
+                         "windows_per_stream": windows_per_stream,
+                         "looped_windows_per_s": wps_loop,
+                         "batched_windows_per_s": wps_batch,
+                         "speedup": speedup})
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump({"benchmark": "stream_closed_loop",
+                       "config": "SNNConfig(32x32, T=8, reduced)",
+                       "rows": artifact}, f, indent=2)
+    return rows
+
+
 def main():
-    for name, us, derived in lif_rows() + ternary_rows():
+    for name, us, derived in lif_rows() + ternary_rows() + stream_rows():
         print(f"{name},{us:.1f},{derived}")
 
 

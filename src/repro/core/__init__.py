@@ -14,7 +14,8 @@ from repro.core.snn import SNNConfig, init_snn, snn_apply, snn_logits, snn_loss
 from repro.core.ternary import pack2bit, ternarize, ternary_ste, unpack2bit
 from repro.core.tiling import SNE_NEURON_CAPACITY, TilePlan, plan_layer_tiles, plan_network
 from repro.core.energy import KRAKEN_DOMAINS, KrakenModel, NOMINAL, StageExecution, pipeline_energy
-from repro.core.pipeline import ClosedLoopPipeline, ClosedLoopResult, pwm_from_logits
+from repro.core.pipeline import (BatchedClosedLoop, ClosedLoopPipeline,
+                                 ClosedLoopResult, pwm_from_logits)
 
 __all__ = [
     "LIFParams", "lif_scan_reference", "lif_step", "spike_surrogate",
@@ -23,5 +24,6 @@ __all__ = [
     "SNE_NEURON_CAPACITY", "TilePlan", "plan_layer_tiles", "plan_network",
     "KRAKEN_DOMAINS", "KrakenModel", "NOMINAL", "StageExecution",
     "pipeline_energy",
-    "ClosedLoopPipeline", "ClosedLoopResult", "pwm_from_logits",
+    "BatchedClosedLoop", "ClosedLoopPipeline", "ClosedLoopResult",
+    "pwm_from_logits",
 ]

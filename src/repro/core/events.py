@@ -25,6 +25,9 @@ import numpy as np
 
 __all__ = [
     "EventWindow",
+    "PaddedEventBatch",
+    "pad_event_windows",
+    "next_pow2",
     "voxelize",
     "voxelize_batch",
     "synthetic_gesture_events",
@@ -59,6 +62,117 @@ class EventWindow:
     @property
     def num_events(self) -> int:
         return int(self.x.shape[0])
+
+
+def next_pow2(n: int, floor: int = 1024) -> int:
+    """Round up to a power of two (>= floor): the event-count bucketing
+    rule shared by the B=1 pipeline wrapper and the streaming engine, so
+    both compile one executable per bucket. Padding amount never changes
+    results (voxel sums are exact)."""
+    n = max(int(n), floor)
+    return 1 << (n - 1).bit_length()
+
+
+@dataclasses.dataclass
+class PaddedEventBatch:
+    """A batch of event windows padded to a common event count.
+
+    The unit the streaming engine feeds to the batched closed loop: ``B``
+    fixed batch slots, each holding one window's events left-aligned in a
+    ``(B, max_events)`` buffer. Empty slots (``window=None``) carry zero
+    valid events and voxelize to an all-zero grid, so a partially filled
+    batch runs through the same jit'd computation as a full one.
+
+    Attributes:
+      x, y, t, p: int32 arrays, shape (B, max_events); padding is zeros.
+      valid: bool array (B, max_events) marking real events.
+      num_events: int64 array (B,), true event count per slot.
+      occupied: bool array (B,), True where the slot holds a window --
+        distinct from ``num_events == 0``: a real window from a quiet
+        sensor has zero events but is still occupied and gets a result.
+      duration_us: shared window duration (all windows in a batch must
+        agree -- they are voxelized with one bin width).
+      labels: int array (B,), -1 where unknown/empty.
+    """
+
+    x: np.ndarray
+    y: np.ndarray
+    t: np.ndarray
+    p: np.ndarray
+    valid: np.ndarray
+    num_events: np.ndarray
+    occupied: np.ndarray
+    duration_us: int
+    labels: np.ndarray
+
+    @property
+    def batch_size(self) -> int:
+        return int(self.x.shape[0])
+
+    @property
+    def max_events(self) -> int:
+        return int(self.x.shape[1])
+
+
+def pad_event_windows(
+    windows,
+    *,
+    max_events: int | None = None,
+    batch_size: int | None = None,
+    duration_us: int | None = None,
+) -> PaddedEventBatch:
+    """Pack a list of :class:`EventWindow` (or ``None`` for empty slots)
+    into a :class:`PaddedEventBatch`.
+
+    Args:
+      windows: sequence of windows; ``None`` entries become empty slots.
+      max_events: pad target; defaults to the largest window. Must be
+        >= every window's event count (no silent truncation).
+      batch_size: pad the batch with trailing empty slots up to this size
+        (the engine's fixed slot count); defaults to ``len(windows)``.
+      duration_us: required if every entry is ``None``; otherwise taken
+        from the windows (which must all agree).
+    """
+    windows = list(windows)
+    b = batch_size if batch_size is not None else len(windows)
+    if b == 0:
+        raise ValueError("empty batch: give at least one window (slot) or "
+                         "a batch_size > 0")
+    if len(windows) > b:
+        raise ValueError(f"{len(windows)} windows > batch_size={b}")
+    windows = windows + [None] * (b - len(windows))
+
+    durations = {w.duration_us for w in windows if w is not None}
+    if len(durations) > 1:
+        raise ValueError(f"mixed window durations in one batch: {durations}")
+    if durations:
+        duration_us = durations.pop()
+    elif duration_us is None:
+        raise ValueError("all slots empty: duration_us must be given")
+
+    counts = [0 if w is None else w.num_events for w in windows]
+    n = max_events if max_events is not None else max(max(counts), 1)
+    if max(counts) > n:
+        raise ValueError(f"max_events={n} < largest window ({max(counts)})")
+    occupied = np.asarray([w is not None for w in windows])
+
+    mk = lambda: np.zeros((b, n), np.int32)
+    x, y, t, p = mk(), mk(), mk(), mk()
+    valid = np.zeros((b, n), bool)
+    labels = np.full(b, -1, np.int32)
+    for i, w in enumerate(windows):
+        if w is None:
+            continue
+        c = counts[i]
+        x[i, :c], y[i, :c] = w.x, w.y
+        t[i, :c], p[i, :c] = w.t, w.p
+        valid[i, :c] = True
+        labels[i] = w.label
+    return PaddedEventBatch(
+        x=x, y=y, t=t, p=p, valid=valid,
+        num_events=np.asarray(counts, np.int64), occupied=occupied,
+        duration_us=int(duration_us), labels=labels,
+    )
 
 
 def voxelize(
@@ -125,13 +239,38 @@ def voxelize_batch(
     width: int = DVS_SENSOR_W,
     binary: bool = True,
 ) -> jnp.ndarray:
-    """Vectorized voxelization over a padded batch: (B, N) -> (B, T, 2, H, W)."""
-    fn = lambda xx, yy, tt, pp, vv: voxelize(
-        xx, yy, tt, pp,
-        duration_us=duration_us, time_bins=time_bins,
-        height=height, width=width, valid=vv, binary=binary,
+    """Batched voxelization: padded (B, N) event arrays -> (B, T, 2, H, W).
+
+    One flattened ``segment_sum`` over ``B * N`` events with per-stream
+    voxel offsets -- a single scatter-add for the whole batch rather than
+    ``B`` sequential ones (or a vmap of them), so the streaming engine
+    voxelizes all its batch slots in one jit'd call. Because voxel counts
+    are sums of exactly-representable 0/1 weights, the result is bitwise
+    identical to per-window :func:`voxelize` regardless of batch size or
+    padding amount.
+    """
+    b, n = x.shape
+    t = jnp.clip(t, 0, duration_us - 1)
+    bin_width = max(duration_us // time_bins, 1)
+    tb = jnp.minimum(t // bin_width, time_bins - 1).astype(jnp.int32)
+    flat = ((tb * 2 + p) * height + y) * width + x
+    num_voxels = time_bins * 2 * height * width
+    # Single-window voxelize drops out-of-range events via segment_sum's
+    # out-of-bounds rule; after adding per-stream offsets that rule would
+    # leak them into the NEXT stream's voxels instead, so mask them here
+    # (weight 0, parked in the last slot) -- same drop semantics, and no
+    # malformed event on one sensor can corrupt another stream.
+    keep = valid & (flat >= 0) & (flat < num_voxels)
+    offsets = jnp.arange(b, dtype=jnp.int32)[:, None] * num_voxels
+    flat = jnp.where(keep, flat + offsets, b * num_voxels - 1)
+    weights = keep.astype(jnp.float32)
+    counts = jax.ops.segment_sum(
+        weights.reshape(-1), flat.reshape(-1), num_segments=b * num_voxels
     )
-    return jax.vmap(fn)(x, y, t, p, valid)
+    vox = counts.reshape(b, time_bins, 2, height, width)
+    if binary:
+        vox = jnp.clip(vox, 0.0, 1.0)
+    return vox
 
 
 def synthetic_gesture_events(

@@ -12,11 +12,28 @@ sustained closed-loop rate under double-buffered acquisition (the DVS
 interface + uDMA run autonomously, so window N+1 is acquired while window N
 is processed -- the paper's real-time claim: 164.5 ms processing fits in the
 300 ms window period).
+
+Two entry points share one batched substrate:
+
+  * :class:`BatchedClosedLoop` -- the engine core: a padded
+    :class:`~repro.core.events.PaddedEventBatch` of ``B`` event windows is
+    voxelized and inferred in ONE jit'd call (batched segment-sum
+    voxelization + batch folded through the SNN / LIF kernels), then each
+    stream gets its own Kraken latency/energy accounting from per-stream
+    firing rates and true (unpadded) event counts.
+  * :class:`ClosedLoopPipeline` -- the paper's single-window loop, now a
+    thin B=1 wrapper over the batched path; existing callers and the
+    energy model are untouched.
+
+Every per-stream op in the batched path (convs, pools, T*B-row matmuls,
+per-row reductions, elementwise LIF dynamics, exact-integer voxel sums) is
+row-independent, so results for a stream are bitwise identical whether it
+runs alone or inside a batch -- asserted by the parity tests.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +44,8 @@ from repro.core.energy import KrakenModel, NOMINAL
 from repro.core.snn import SNNConfig, snn_apply, snn_logits
 from repro.core.tiling import SNE_NEURON_CAPACITY, plan_network
 
-__all__ = ["ClosedLoopResult", "ClosedLoopPipeline", "pwm_from_logits"]
+__all__ = ["ClosedLoopResult", "BatchedClosedLoop", "ClosedLoopPipeline",
+           "pwm_from_logits"]
 
 
 def pwm_from_logits(logits: jnp.ndarray, num_channels: int = 4) -> jnp.ndarray:
@@ -42,7 +60,10 @@ def pwm_from_logits(logits: jnp.ndarray, num_channels: int = 4) -> jnp.ndarray:
     # Deterministic mixing matrix (no trainable state in the actuation stub).
     mix = (np.arange(n_cls)[:, None] * np.arange(1, num_channels + 1)[None, :])
     mix = np.cos(mix / n_cls * np.pi).astype(np.float32)
-    duty = probs @ jnp.asarray(mix)
+    # Broadcast-multiply-sum instead of ``probs @ mix``: a (1, n_cls) GEMV
+    # and a (B, n_cls) GEMM accumulate in different orders on CPU; this
+    # per-row reduction is batch-size invariant (bitwise B=1 == batched).
+    duty = (probs[..., :, None] * jnp.asarray(mix)).sum(axis=-2)
     return jnp.clip(0.5 + 0.5 * duty, 0.0, 1.0)
 
 
@@ -57,8 +78,18 @@ class ClosedLoopResult:
     sustained_rate_hz: float
 
 
-class ClosedLoopPipeline:
-    """End-to-end event-window -> actuation pipeline with energy accounting."""
+class BatchedClosedLoop:
+    """Batched event-window -> actuation engine with per-stream accounting.
+
+    One jit'd call voxelizes and infers a whole :class:`PaddedEventBatch`;
+    the Kraken latency/energy model then runs per stream on that stream's
+    true event count and firing rates. Empty batch slots (zero valid
+    events) flow through the same computation and yield ``None`` results.
+
+    jit shapes are keyed by ``(batch_size, max_events, duration_us)``;
+    callers that keep those fixed (the streaming engine's slot buffers, or
+    the B=1 wrapper's power-of-two event buckets) compile once.
+    """
 
     def __init__(
         self,
@@ -87,53 +118,136 @@ class ClosedLoopPipeline:
             float(cfg.hidden),
             float(cfg.num_classes),
         )
-        self._infer = jax.jit(
-            lambda p, vox: snn_apply(p, vox, cfg, mode="layer_serial",
-                                     lif_scan_fn=lif_scan_fn)
-        )
+        self._lif_scan_fn = lif_scan_fn
+        self._fused: Dict[int, Callable] = {}   # duration_us -> jit'd fn
 
-    def __call__(self, window: ev.EventWindow) -> ClosedLoopResult:
+    def _fused_fn(self, duration_us: int) -> Callable:
+        """Voxelize + infer + readout for one window duration, jit'd once."""
+        fn = self._fused.get(duration_us)
+        if fn is None:
+            cfg, scan = self.cfg, self._lif_scan_fn
+
+            def run(params, x, y, t, p, valid):
+                vox = ev.voxelize_batch(
+                    x, y, t, p, valid, duration_us=duration_us,
+                    time_bins=cfg.time_bins, height=cfg.height,
+                    width=cfg.width,
+                )
+                out = snn_apply(params, vox, cfg, mode="layer_serial",
+                                lif_scan_fn=scan)
+                logits = snn_logits(out, cfg) * 10.0
+                return (jnp.argmax(logits, -1), pwm_from_logits(logits),
+                        out["firing_rates_per_stream"])
+
+            fn = self._fused[duration_us] = jax.jit(run)
+        return fn
+
+    def _account(self, num_events: int,
+                 rates: Dict[str, float]) -> Dict[str, Any]:
+        """Kraken latency/energy for one stream's window (pure float math)."""
         cfg = self.cfg
-        vox = ev.voxelize(
-            jnp.asarray(window.x), jnp.asarray(window.y),
-            jnp.asarray(window.t), jnp.asarray(window.p),
-            duration_us=window.duration_us, time_bins=cfg.time_bins,
-            height=cfg.height, width=cfg.width,
-        )[None]  # (1, T, 2, H, W)
-        out = self._infer(self.params, vox)
-        logits = snn_logits(out, cfg) * 10.0
-        pwm = pwm_from_logits(logits)
-
-        # Workload drivers for the latency/energy model.
         t = cfg.time_bins
         sizes = cfg.spatial_sizes()
         vol = lambda s: float(np.prod(sizes[s]))
-        rates = out["firing_rates"]
         layer_in_spikes = (
-            float(window.num_events),                       # into conv1
-            float(rates["conv1"]) * vol("conv1") * t,       # into conv2
-            float(rates["conv2"]) * vol("conv2") * t,       # into fc1
-            float(rates["fc1"]) * vol("fc1") * t,           # into fc2
+            float(num_events),                        # into conv1
+            rates["conv1"] * vol("conv1") * t,        # into conv2
+            rates["conv2"] * vol("conv2") * t,        # into fc1
+            rates["fc1"] * vol("fc1") * t,            # into fc2
         )
-        acct = self.model.closed_loop(
-            events=float(window.num_events),
+        return self.model.closed_loop(
+            events=float(num_events),
             layer_in_spikes=layer_in_spikes,
             layer_fanout=self.fanouts,
             layer_passes=[p.passes for p in self.plans],
         )
-        latency = float(acct["total_time_ms"])
-        # Double-buffered acquisition: the uDMA acquires window N+1 during
-        # processing of window N, so the sustained period is
-        # max(window period, preprocessing + inference).
-        proc_ms = (acct["stages"]["preprocessing"]["time_ms"]
-                   + acct["stages"]["snn_inference"]["time_ms"])
-        period_ms = max(self.window_ms, proc_ms)
-        return ClosedLoopResult(
-            label_pred=np.asarray(jnp.argmax(logits, -1)),
-            pwm=np.asarray(pwm),
-            latency_ms=latency,
-            energy_mj=float(acct["total_energy_mj"]),
-            breakdown=acct,
-            realtime=latency <= self.window_ms,
-            sustained_rate_hz=1000.0 / period_ms,
+
+    def infer(self, batch: ev.PaddedEventBatch
+              ) -> List[Optional[ClosedLoopResult]]:
+        """Run a padded batch; returns one result per slot (None if empty)."""
+        fn = self._fused_fn(batch.duration_us)
+        preds, pwm, rates_ps = fn(
+            self.params, jnp.asarray(batch.x), jnp.asarray(batch.y),
+            jnp.asarray(batch.t), jnp.asarray(batch.p),
+            jnp.asarray(batch.valid),
         )
+        preds = np.asarray(preds)
+        pwm = np.asarray(pwm)
+        rates_ps = {k: np.asarray(v) for k, v in rates_ps.items()}
+
+        results: List[Optional[ClosedLoopResult]] = []
+        for b in range(batch.batch_size):
+            if not batch.occupied[b]:
+                results.append(None)
+                continue
+            # A real-but-quiet window (zero events) is still occupied and
+            # gets a result; only window=None slots yield None.
+            n_ev = int(batch.num_events[b])
+            acct = self._account(
+                n_ev, {k: float(v[b]) for k, v in rates_ps.items()})
+            latency = float(acct["total_time_ms"])
+            # Double-buffered acquisition: the uDMA acquires window N+1
+            # during processing of window N, so the sustained period is
+            # max(window period, preprocessing + inference).
+            proc_ms = (acct["stages"]["preprocessing"]["time_ms"]
+                       + acct["stages"]["snn_inference"]["time_ms"])
+            period_ms = max(self.window_ms, proc_ms)
+            results.append(ClosedLoopResult(
+                label_pred=preds[b:b + 1],
+                pwm=pwm[b:b + 1],
+                latency_ms=latency,
+                energy_mj=float(acct["total_energy_mj"]),
+                breakdown=acct,
+                realtime=latency <= self.window_ms,
+                sustained_rate_hz=1000.0 / period_ms,
+            ))
+        return results
+
+    def infer_windows(self, windows: Sequence[Optional[ev.EventWindow]],
+                      *, max_events: Optional[int] = None,
+                      batch_size: Optional[int] = None,
+                      duration_us: Optional[int] = None,
+                      ) -> List[Optional[ClosedLoopResult]]:
+        """Convenience: pad a window list and run it as one batch."""
+        if not windows and not batch_size:
+            return []
+        if max_events is None:
+            counts = [w.num_events for w in windows if w is not None]
+            max_events = ev.next_pow2(max(counts)) if counts else ev.next_pow2(1)
+        batch = ev.pad_event_windows(
+            windows, max_events=max_events, batch_size=batch_size,
+            duration_us=duration_us)
+        return self.infer(batch)
+
+
+class ClosedLoopPipeline:
+    """The paper's single-window loop: a B=1 view of the batched engine.
+
+    Event counts are padded to power-of-two buckets so repeated calls with
+    similar-sized windows reuse one compiled executable (padding does not
+    change any result; voxel sums are exact).
+    """
+
+    def __init__(
+        self,
+        params,
+        cfg: SNNConfig,
+        *,
+        model: Optional[KrakenModel] = None,
+        lif_scan_fn: Optional[Callable] = None,
+        window_ms: float = 300.0,
+    ):
+        self.batched = BatchedClosedLoop(
+            params, cfg, model=model, lif_scan_fn=lif_scan_fn,
+            window_ms=window_ms)
+
+    # Backwards-compatible attribute surface (pre-batched callers).
+    params = property(lambda self: self.batched.params)
+    cfg = property(lambda self: self.batched.cfg)
+    model = property(lambda self: self.batched.model)
+    window_ms = property(lambda self: self.batched.window_ms)
+    plans = property(lambda self: self.batched.plans)
+    fanouts = property(lambda self: self.batched.fanouts)
+
+    def __call__(self, window: ev.EventWindow) -> ClosedLoopResult:
+        return self.batched.infer_windows([window])[0]

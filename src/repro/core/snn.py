@@ -159,13 +159,21 @@ def snn_apply(
 
     Returns:
       dict with ``out_spikes`` (B, T, num_classes), ``out_membrane``
-      (B, T, num_classes) in time_serial mode, and per-layer mean firing
-      rates (for the energy model's synop accounting).
+      (B, T, num_classes) in time_serial mode, per-layer mean firing
+      rates, and ``firing_rates_per_stream`` -- per-layer (B,) rates so
+      the batched closed loop can drive the energy model per stream.
     """
     b, t = vox.shape[0], vox.shape[1]
     x = jnp.transpose(vox, (1, 0, 3, 4, 2))  # (T, B, H, W, C)
     i1, i2, i3, i4 = _currents_fn(params, cfg)
     lif = cfg.lif
+
+    # Mean firing rate per stream: reduce every axis except batch. Streams
+    # are independent rows, so these values do not depend on batch size --
+    # the property the batched-vs-looped parity tests pin down.
+    def rate_b(s: jnp.ndarray, batch_axis: int) -> jnp.ndarray:
+        axes = tuple(a for a in range(s.ndim) if a != batch_axis)
+        return s.mean(axis=axes)
 
     if mode == "time_serial":
         h0, w0 = cfg.post_pool0
@@ -186,13 +194,14 @@ def snn_apply(
             v4, s4 = lif_step(c["v4"], c["s4"], i4(s3), lif)
             new = {"v1": v1, "s1": s1, "v2": v2, "s2": s2,
                    "v3": v3, "s3": s3, "v4": v4, "s4": s4}
-            rates = (s1.mean(), s2.mean(), s3.mean(), s4.mean())
+            rates = (rate_b(s1, 0), rate_b(s2, 0),
+                     rate_b(s3, 0), rate_b(s4, 0))        # each (B,)
             return new, (s4, v4, rates)
 
         _, (out_s, out_v, rates) = jax.lax.scan(step, carry, x)
         out_spikes = jnp.transpose(out_s, (1, 0, 2))     # (B, T, classes)
         out_membrane = jnp.transpose(out_v, (1, 0, 2))
-        r1, r2, r3, r4 = (r.mean() for r in rates)
+        r1, r2, r3, r4 = (r.mean(axis=0) for r in rates)  # (T, B) -> (B,)
     elif mode == "layer_serial":
         scan = lif_scan_fn or (lambda cur, p: lif_scan_reference(cur, p))
         # Layer 2: conv1 + LIF over the full train.
@@ -206,14 +215,17 @@ def snn_apply(
         s4, _ = scan(c4, lif)
         out_spikes = jnp.transpose(s4, (1, 0, 2))
         out_membrane = jnp.zeros_like(out_spikes)  # not tracked in this mode
-        r1, r2, r3, r4 = s1.mean(), s2.mean(), s3.mean(), s4.mean()
+        # Layer outputs are (T, B, ...): batch axis 1.
+        r1, r2, r3, r4 = (rate_b(s, 1) for s in (s1, s2, s3, s4))
     else:
         raise ValueError(f"unknown mode: {mode}")
 
+    per_stream = {"conv1": r1, "conv2": r2, "fc1": r3, "fc2": r4}
     return {
         "out_spikes": out_spikes,
         "out_membrane": out_membrane,
-        "firing_rates": {"conv1": r1, "conv2": r2, "fc1": r3, "fc2": r4},
+        "firing_rates": {k: v.mean() for k, v in per_stream.items()},
+        "firing_rates_per_stream": per_stream,
     }
 
 

@@ -10,11 +10,12 @@
 All kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling)
 and validated in interpret mode on CPU.
 """
-from repro.kernels.ops import lif_scan, pack_ternary_weights, ternary_matmul
+from repro.kernels.ops import (lif_scan, lif_scan_batched,
+                               pack_ternary_weights, ternary_matmul)
 from repro.kernels.ref import lif_scan_ref, ternary_matmul_ref, wkv6_ref
 from repro.kernels.wkv6_scan import wkv6_scan_pallas
 
 __all__ = [
-    "lif_scan", "pack_ternary_weights", "ternary_matmul",
+    "lif_scan", "lif_scan_batched", "pack_ternary_weights", "ternary_matmul",
     "lif_scan_ref", "ternary_matmul_ref", "wkv6_ref", "wkv6_scan_pallas",
 ]

@@ -1,0 +1,18 @@
+"""Version compatibility shims shared by the Pallas kernels."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _resolve_compiler_params():
+    """jax renamed TPUCompilerParams -> CompilerParams; support both."""
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, name, None)
+        if cls is not None:
+            return cls
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; this jax version is unsupported")
+
+
+CompilerParams = _resolve_compiler_params()

@@ -34,8 +34,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.lif import LIFParams
+from repro.kernels._compat import CompilerParams as _CompilerParams
 
-__all__ = ["lif_scan_pallas", "choose_blocks", "LANES"]
+__all__ = ["lif_scan_pallas", "lif_scan_pallas_batched", "choose_blocks",
+           "LANES"]
 
 LANES = 128
 _DEF_VMEM_BUDGET = 4 * 1024 * 1024  # conservative per-call VMEM budget
@@ -160,7 +162,7 @@ def lif_scan_pallas(
             jax.ShapeDtypeStruct((rr, LANES), currents.dtype),
         ],
         scratch_shapes=[pltpu.VMEM((br, LANES), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -168,4 +170,54 @@ def lif_scan_pallas(
 
     spikes = spikes[:t].reshape(t, (n + n_pad))[:, :n].reshape(orig_shape)
     v_fin = v_fin.reshape(rr * LANES)[:n].reshape(orig_shape[1:])
+    return spikes, v_fin
+
+
+def lif_scan_pallas_batched(
+    currents: jnp.ndarray,
+    p: LIFParams,
+    v0: jnp.ndarray | None = None,
+    **kw,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused LIF scan over a batch of streams: (B, T, ...) -> (spikes, v_final).
+
+    One Pallas launch scans all ``B`` streams: each stream's neurons are
+    padded to whole 128-lane rows and the per-stream rows are stacked along
+    the neuron-row axis, so the kernel's parallel grid axis enumerates
+    ``B * R`` rows and every stream's membrane state is VMEM-resident for
+    the whole temporal scan -- SNE's time-multiplexed execution, stream-
+    multiplexed too. LIF dynamics are elementwise per neuron, so results
+    are bitwise identical to ``B`` independent :func:`lif_scan_pallas`
+    calls.
+
+    Returns ``spikes`` of shape (B, T, ...) and ``v_final`` of (B, ...).
+    """
+    if currents.ndim < 2:
+        raise ValueError(f"need (B, T, ...) currents, got {currents.shape}")
+    b, t = currents.shape[0], currents.shape[1]
+    feat = currents.shape[2:]
+    n = 1
+    for d in feat:
+        n *= d
+    if v0 is None:
+        v0 = jnp.zeros((b, *feat), currents.dtype)
+
+    cur = currents.reshape(b, t, n)
+    v0f = v0.reshape(b, n)
+    # Per-stream lane padding: each stream occupies whole rows, keeping its
+    # rows contiguous on the row axis (cheap unfold, no cross-stream lanes).
+    n_pad = (-n) % LANES
+    if n_pad:
+        cur = jnp.pad(cur, ((0, 0), (0, 0), (0, n_pad)))
+        v0f = jnp.pad(v0f, ((0, 0), (0, n_pad)))
+    r_s = (n + n_pad) // LANES        # rows per stream
+    cur_rows = jnp.transpose(cur.reshape(b, t, r_s, LANES), (1, 0, 2, 3))
+    cur_rows = cur_rows.reshape(t, b * r_s, LANES)
+    v0_rows = v0f.reshape(b * r_s, LANES)
+
+    spikes, v_fin = lif_scan_pallas(cur_rows, p, v0_rows, **kw)
+
+    spikes = spikes.reshape(t, b, r_s * LANES)[:, :, :n]
+    spikes = jnp.transpose(spikes, (1, 0, 2)).reshape(b, t, *feat)
+    v_fin = v_fin.reshape(b, r_s * LANES)[:, :n].reshape(b, *feat)
     return spikes, v_fin

@@ -15,10 +15,11 @@ import jax.numpy as jnp
 
 from repro.core.lif import LIFParams, lif_scan_reference
 from repro.core.ternary import pack2bit, ternarize
-from repro.kernels.lif_scan import lif_scan_pallas
+from repro.kernels.lif_scan import lif_scan_pallas, lif_scan_pallas_batched
 from repro.kernels.ternary_matmul import ternary_matmul_pallas
 
-__all__ = ["lif_scan", "ternary_matmul", "pack_ternary_weights"]
+__all__ = ["lif_scan", "lif_scan_batched", "ternary_matmul",
+           "pack_ternary_weights"]
 
 
 # ----------------------------------------------------------------------
@@ -61,6 +62,51 @@ def lif_scan(
     if v0 is None:
         v0 = jnp.zeros(currents.shape[1:], currents.dtype)
     return _lif_scan_cv(currents, v0, p)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _lif_scan_batched_cv(currents, v0, p: LIFParams):
+    return lif_scan_pallas_batched(currents, p, v0)
+
+
+def _lif_b_fwd(currents, v0, p):
+    return _lif_scan_batched_cv(currents, v0, p), (currents, v0)
+
+
+def _lif_b_bwd(p, res, cotangents):
+    currents, v0 = res
+    ref = jax.vmap(lambda c, v: lif_scan_reference(c, p, v))
+    _, vjp = jax.vjp(ref, currents, v0)
+    return vjp(cotangents)
+
+
+_lif_scan_batched_cv.defvjp(_lif_b_fwd, _lif_b_bwd)
+
+
+def lif_scan_batched(
+    currents: jnp.ndarray,
+    p: LIFParams = LIFParams(),
+    v0: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused LIF scan over a batch of streams: (B, T, ...) -> (spikes, v_final).
+
+    One Pallas launch for all ``B`` streams (batch folded into the kernel's
+    neuron-row grid axis; see ``kernels/lif_scan.py``), with the same STBP
+    surrogate gradients as :func:`lif_scan` (backward recomputes via the
+    vmapped reference scan).
+
+    Note the closed-loop engine reaches the same fold implicitly:
+    ``layer_serial`` feeds :func:`lif_scan` currents shaped (T, B, ...),
+    whose feature flattening already packs B into the row axis. This
+    explicit (B, T, ...) entry additionally pads each stream to whole
+    lane-rows (no cross-stream lanes) and threads a per-stream ``v0`` --
+    the API for carrying membrane state across a stream's windows
+    (stateful streaming, a ROADMAP open item).
+    """
+    if v0 is None:
+        v0 = jnp.zeros((currents.shape[0], *currents.shape[2:]),
+                       currents.dtype)
+    return _lif_scan_batched_cv(currents, v0, p)
 
 
 # ----------------------------------------------------------------------

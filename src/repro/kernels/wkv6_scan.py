@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 __all__ = ["wkv6_scan_pallas"]
 
 _DEF_VMEM_BUDGET = 8 * 1024 * 1024
@@ -121,7 +123,7 @@ def wkv6_scan_pallas(
         out_shape=[jax.ShapeDtypeStruct((tt, bhp, hd), r.dtype),
                    jax.ShapeDtypeStruct((bhp, hd, hd), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((block_bh, hd, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(rr, kk, vv, lw, ub)

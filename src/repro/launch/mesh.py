@@ -35,7 +35,10 @@ def make_mesh_for(shape, axes) -> Mesh:
             f"need {n} devices, have {len(devices)}; the dry-run must set "
             "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             "any jax import")
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:   # pre-AxisType jax: plain Mesh is equivalent
+        return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+    auto = (axis_type.Auto,) * len(axes)
     try:
         return jax.make_mesh(shape, axes, axis_types=auto,
                              devices=devices[:n])

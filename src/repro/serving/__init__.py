@@ -1,3 +1,5 @@
-"""Serving substrate: batched generate loop + ternary serving quantization."""
+"""Serving substrate: batched generate loop, ternary serving quantization,
+and continuous batching over event streams (the SNN closed loop)."""
 from repro.serving.serve import ServeConfig, ServeStats, generate, quantize_for_serving
 from repro.serving.scheduler import BatchScheduler, Request
+from repro.serving.stream import StreamEngine, StreamResult, StreamStats

@@ -1,0 +1,321 @@
+"""Batched streaming closed loop: batched-vs-single bitwise parity, the
+batched voxelizer/LIF kernel, and StreamEngine scheduling semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SNNConfig, init_snn, snn_apply
+from repro.core import events as ev
+from repro.core.lif import LIFParams, lif_scan_reference
+from repro.core.pipeline import BatchedClosedLoop, ClosedLoopPipeline
+from repro.kernels import lif_scan_batched
+from repro.kernels.lif_scan import lif_scan_pallas, lif_scan_pallas_batched
+from repro.serving import StreamEngine
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return SNNConfig(height=32, width=32, time_bins=8, conv1_features=4,
+                     conv2_features=8, hidden=32, num_classes=11)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_snn(jax.random.PRNGKey(0), cfg)
+
+
+def _windows(n, seed=0, base_events=2500, step_events=900):
+    """n windows with deliberately ragged event counts."""
+    rng = np.random.default_rng(seed)
+    return [ev.synthetic_gesture_events(rng, i % 11,
+                                        mean_events=base_events
+                                        + step_events * i,
+                                        height=32, width=32)
+            for i in range(n)]
+
+
+def _assert_same_breakdown(a, b):
+    """Energy breakdowns must agree exactly (float ==, not approx)."""
+    assert a.keys() == b.keys()
+    for k, va in a.items():
+        vb = b[k]
+        if isinstance(va, dict):
+            _assert_same_breakdown(va, vb)
+        else:
+            assert va == vb, (k, va, vb)
+
+
+# -- batched voxelization --------------------------------------------------
+
+def test_voxelize_batch_bitwise_matches_single():
+    ws = _windows(3, seed=5)
+    batch = ev.pad_event_windows(ws)
+    vox_b = ev.voxelize_batch(
+        jnp.asarray(batch.x), jnp.asarray(batch.y), jnp.asarray(batch.t),
+        jnp.asarray(batch.p), jnp.asarray(batch.valid),
+        duration_us=batch.duration_us, time_bins=8, height=32, width=32)
+    for i, w in enumerate(ws):
+        vox_1 = ev.voxelize(
+            jnp.asarray(w.x), jnp.asarray(w.y), jnp.asarray(w.t),
+            jnp.asarray(w.p), duration_us=w.duration_us, time_bins=8,
+            height=32, width=32)
+        np.testing.assert_array_equal(np.asarray(vox_b[i]),
+                                      np.asarray(vox_1))
+
+
+def test_voxelize_batch_drops_out_of_range_like_single():
+    """A malformed coordinate (linear index >= num_voxels) must be dropped,
+    not leaked into the next stream's voxel region."""
+    h = w = 8
+    tb = 2
+    mk = lambda vals: jnp.asarray(np.asarray(vals, np.int32))
+    # slot 0: one valid event + one event at y == height (out of range);
+    # slot 1: one valid event.
+    x = mk([[1, 0], [2, 0]])
+    y = mk([[1, h], [2, 0]])
+    t = mk([[0, 999], [0, 0]])
+    p = mk([[0, 1], [0, 0]])
+    valid = jnp.asarray([[True, True], [True, False]])
+    vb = ev.voxelize_batch(x, y, t, p, valid, duration_us=1000,
+                           time_bins=tb, height=h, width=w, binary=False)
+    # stream isolation: slot 1 holds exactly its own single event
+    assert float(np.asarray(vb[1]).sum()) == 1.0
+    # and slot 0's out-of-range event is dropped, same as single-window
+    v0 = ev.voxelize(x[0], y[0], t[0], p[0], duration_us=1000, time_bins=tb,
+                     height=h, width=w, binary=False)
+    np.testing.assert_array_equal(np.asarray(vb[0]), np.asarray(v0))
+    assert float(np.asarray(vb[0]).sum()) == 1.0
+
+
+def test_pad_event_windows_shapes_and_slots():
+    ws = _windows(2, seed=6)
+    batch = ev.pad_event_windows([ws[0], None, ws[1]], batch_size=4,
+                                 max_events=1 << 14)
+    assert batch.batch_size == 4 and batch.max_events == 1 << 14
+    assert batch.num_events[1] == 0 and batch.num_events[3] == 0
+    assert not batch.valid[1].any()
+    assert batch.valid[0].sum() == ws[0].num_events
+    assert batch.labels[2] == ws[1].label
+    with pytest.raises(ValueError):
+        ev.pad_event_windows(ws, max_events=10)   # would truncate
+    with pytest.raises(ValueError):
+        ev.pad_event_windows([None, None])        # no duration known
+
+
+# -- batched LIF kernel ----------------------------------------------------
+
+def test_lif_scan_pallas_batched_matches_per_stream():
+    b, t, shape = 3, 9, (2, 70)   # 70 -> lane padding per stream
+    cur = jax.random.normal(jax.random.PRNGKey(1), (b, t, *shape)) * 0.8
+    p = LIFParams()
+    s_b, v_b = lif_scan_pallas_batched(cur, p, interpret=True)
+    assert s_b.shape == (b, t, *shape) and v_b.shape == (b, *shape)
+    for i in range(b):
+        s_1, v_1 = lif_scan_pallas(cur[i], p, interpret=True)
+        np.testing.assert_array_equal(np.asarray(s_b[i]), np.asarray(s_1))
+        np.testing.assert_array_equal(np.asarray(v_b[i]), np.asarray(v_1))
+
+
+def test_lif_scan_batched_gradients_match_reference():
+    cur = jax.random.normal(jax.random.PRNGKey(2), (2, 6, 40))
+    p = LIFParams()
+
+    def loss_k(c):
+        s, v = lif_scan_batched(c, p)
+        return (s * jnp.arange(40)).sum() + v.sum()
+
+    def loss_r(c):
+        ref = jax.vmap(lambda cc: lif_scan_reference(cc, p))
+        s, v = ref(c)
+        return (s * jnp.arange(40)).sum() + v.sum()
+
+    np.testing.assert_allclose(np.asarray(jax.grad(loss_k)(cur)),
+                               np.asarray(jax.grad(loss_r)(cur)), rtol=1e-6)
+
+
+# -- per-stream firing rates -----------------------------------------------
+
+@pytest.mark.parametrize("mode", ["time_serial", "layer_serial"])
+def test_per_stream_rates_consistent_with_scalars(cfg, params, mode):
+    ws = _windows(3, seed=7)
+    batch = ev.pad_event_windows(ws)
+    vox = ev.voxelize_batch(
+        jnp.asarray(batch.x), jnp.asarray(batch.y), jnp.asarray(batch.t),
+        jnp.asarray(batch.p), jnp.asarray(batch.valid),
+        duration_us=batch.duration_us, time_bins=cfg.time_bins,
+        height=cfg.height, width=cfg.width)
+    out = snn_apply(params, vox, cfg, mode=mode)
+    for name, per_stream in out["firing_rates_per_stream"].items():
+        assert per_stream.shape == (3,)
+        np.testing.assert_allclose(float(per_stream.mean()),
+                                   float(out["firing_rates"][name]),
+                                   rtol=1e-6)
+
+
+# -- batched-vs-single closed-loop parity ----------------------------------
+
+@pytest.mark.parametrize("b", [1, 4, 7])
+def test_batched_loop_bitwise_parity(cfg, params, b):
+    """BatchedClosedLoop over ragged windows == looping ClosedLoopPipeline:
+    bitwise-identical label_pred, pwm, and energy breakdowns."""
+    ws = _windows(b, seed=10 + b)
+    pipe = ClosedLoopPipeline(params, cfg)
+    looped = [pipe(w) for w in ws]
+    batched = BatchedClosedLoop(params, cfg).infer_windows(ws)
+    for ref, got in zip(looped, batched):
+        np.testing.assert_array_equal(ref.label_pred, got.label_pred)
+        np.testing.assert_array_equal(ref.pwm, got.pwm)
+        assert ref.latency_ms == got.latency_ms
+        assert ref.energy_mj == got.energy_mj
+        assert ref.realtime == got.realtime
+        assert ref.sustained_rate_hz == got.sustained_rate_hz
+        _assert_same_breakdown(ref.breakdown, got.breakdown)
+
+
+def test_batched_loop_parity_with_pallas_kernel(cfg, params):
+    """Parity also holds when the SNE Pallas kernel drives the scan."""
+    from repro.kernels import lif_scan
+    ws = _windows(3, seed=21)
+    fn = lambda c, p: lif_scan(c, p)
+    pipe = ClosedLoopPipeline(params, cfg, lif_scan_fn=fn)
+    looped = [pipe(w) for w in ws]
+    batched = BatchedClosedLoop(params, cfg, lif_scan_fn=fn).infer_windows(ws)
+    for ref, got in zip(looped, batched):
+        np.testing.assert_array_equal(ref.label_pred, got.label_pred)
+        np.testing.assert_array_equal(ref.pwm, got.pwm)
+        assert ref.energy_mj == got.energy_mj
+
+
+def test_empty_slots_do_not_change_results(cfg, params):
+    """A partially filled batch (empty slots) yields the same per-stream
+    results as a dense batch of the same windows."""
+    ws = _windows(2, seed=30)
+    loop = BatchedClosedLoop(params, cfg)
+    dense = loop.infer(ev.pad_event_windows(ws, max_events=1 << 13))
+    sparse = loop.infer(ev.pad_event_windows(
+        [ws[0], None, ws[1], None], max_events=1 << 13))
+    assert sparse[1] is None and sparse[3] is None
+    for ref, got in zip(dense, [sparse[0], sparse[2]]):
+        np.testing.assert_array_equal(ref.label_pred, got.label_pred)
+        np.testing.assert_array_equal(ref.pwm, got.pwm)
+        assert ref.energy_mj == got.energy_mj
+
+
+# -- StreamEngine ----------------------------------------------------------
+
+def test_stream_engine_parity_and_order(cfg, params):
+    """5 streams over 2 slots: every window served exactly once, in
+    per-stream submission order, with results bitwise equal to the
+    single-window pipeline."""
+    eng = StreamEngine(params, cfg, max_streams=2)
+    submitted = {}
+    rngs = np.random.default_rng(40)
+    for s in range(5):
+        submitted[s] = []
+        for k in range(2):
+            w = ev.synthetic_gesture_events(
+                rngs, (s + k) % 11, mean_events=2000 + 500 * s,
+                height=32, width=32)
+            eng.submit(f"cam{s}", w)
+            submitted[s].append(w)
+    results = eng.run()
+    assert len(results) == 10
+    assert eng.pending() == 0
+    pipe = ClosedLoopPipeline(params, cfg)
+    seen = {}
+    for r in results:
+        s = int(r.stream_id[3:])
+        assert r.seq == seen.get(s, 0)       # in-order per stream
+        seen[s] = r.seq + 1
+        ref = pipe(submitted[s][r.seq])
+        np.testing.assert_array_equal(ref.label_pred, r.result.label_pred)
+        np.testing.assert_array_equal(ref.pwm, r.result.pwm)
+        assert ref.energy_mj == r.result.energy_mj
+        _assert_same_breakdown(ref.breakdown, r.result.breakdown)
+    # slots were shared: 10 windows over 2 slots needs >= 5 steps
+    assert eng.stats["steps"] >= 5
+    assert 0 < eng.mean_occupancy <= 2
+
+
+def test_stream_engine_stats_and_refill(cfg, params):
+    eng = StreamEngine(params, cfg, max_streams=4)
+    rng = np.random.default_rng(50)
+    w0 = ev.synthetic_gesture_events(rng, 1, mean_events=2000,
+                                     height=32, width=32)
+    eng.submit("a", w0)
+    assert eng.step() and eng.step() == []    # drained after one step
+    # a drained stream that comes back gets rescheduled (refill)
+    w1 = ev.synthetic_gesture_events(rng, 2, mean_events=2000,
+                                     height=32, width=32)
+    eng.submit("a", w1)
+    out = eng.run()
+    assert [r.seq for r in out] == [1]
+    st = eng.stream_stats["a"]
+    assert st.windows == 2 and st.queued == 0
+    assert st.energy_mj > 0 and st.mean_latency_ms > 0
+    assert 0 <= st.realtime_fraction <= 1
+    assert st.mean_power_mw > 0
+
+
+def test_zero_event_window_is_not_an_empty_slot(cfg, params):
+    """A real window from a quiet sensor (zero events) still produces a
+    result everywhere; only window=None slots yield None."""
+    quiet = ev.EventWindow(
+        x=np.zeros(0, np.int32), y=np.zeros(0, np.int32),
+        t=np.zeros(0, np.int32), p=np.zeros(0, np.int32),
+        duration_us=300_000, label=-1)
+    pipe = ClosedLoopPipeline(params, cfg)
+    res = pipe(quiet)
+    assert res is not None
+    assert res.pwm.shape == (1, 4)
+    assert res.breakdown["stages"]["data_acquisition"]["time_ms"] == 0.0
+    eng = StreamEngine(params, cfg, max_streams=2)
+    eng.submit("quiet", quiet)
+    out = eng.run()
+    assert len(out) == 1
+    np.testing.assert_array_equal(out[0].result.pwm, res.pwm)
+    assert out[0].result.energy_mj == res.energy_mj
+
+
+def test_infer_windows_all_none(cfg, params):
+    loop = BatchedClosedLoop(params, cfg)
+    out = loop.infer_windows([None, None], duration_us=300_000)
+    assert out == [None, None]
+
+
+def test_stream_engine_fairness_no_starvation(cfg, params):
+    """More live streams than slots with deep queues: the fairness quantum
+    rotates pins, so the slotless stream is served before the pinned
+    streams drain completely."""
+    eng = StreamEngine(params, cfg, max_streams=2, fair_quantum=2)
+    rng = np.random.default_rng(70)
+    for s in range(3):
+        for k in range(6):
+            eng.submit(s, ev.synthetic_gesture_events(
+                rng, (s + k) % 11, mean_events=1500, height=32, width=32))
+    results = eng.run()
+    assert len(results) == 18
+    order = [(r.stream_id, r.seq) for r in results]
+    first_s2 = order.index((2, 0))
+    last_s0 = order.index((0, 5))
+    assert first_s2 < last_s0, order   # stream 2 not starved until s0 drains
+
+
+def test_stream_engine_rejects_bad_slot_count(cfg, params):
+    with pytest.raises(ValueError):
+        StreamEngine(params, cfg, max_streams=0)
+    with pytest.raises(ValueError):
+        StreamEngine(params, cfg, max_streams=2, fair_quantum=0)
+
+
+def test_stream_engine_rejects_mixed_durations(cfg, params):
+    eng = StreamEngine(params, cfg, max_streams=2)
+    rng = np.random.default_rng(60)
+    eng.submit("a", ev.synthetic_gesture_events(rng, 0, mean_events=1500,
+                                                height=32, width=32))
+    bad = ev.synthetic_gesture_events(rng, 0, mean_events=1500,
+                                      duration_us=150_000,
+                                      height=32, width=32)
+    with pytest.raises(ValueError):
+        eng.submit("b", bad)

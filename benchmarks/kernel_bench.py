@@ -8,6 +8,9 @@ and ternary_matmul's 8x weight-byte reduction, both derived from shapes.
 ``stream_rows`` additionally measures closed-loop throughput (windows/s)
 of the batched StreamEngine against the looped single-window pipeline at
 several batch sizes, and writes a ``BENCH_stream.json`` artifact.
+``hetero_rows`` measures the two accelerator wings through the unified
+engine protocol -- event-SNN vs frame-TCN throughput, alone and mixed in
+one engine -- and writes ``BENCH_hetero.json``.
 """
 from __future__ import annotations
 
@@ -18,10 +21,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SNNConfig, init_snn
+from repro.core import (FrameTCNEngine, SNNConfig, TCNConfig, init_snn,
+                        init_tcn)
 from repro.core import events as ev
+from repro.core import frames as fr
 from repro.core.lif import LIFParams
-from repro.core.pipeline import ClosedLoopPipeline
+from repro.core.pipeline import BatchedClosedLoop, ClosedLoopPipeline
 from repro.kernels import (lif_scan, lif_scan_ref, pack_ternary_weights,
                            ternary_matmul, ternary_matmul_ref)
 from repro.serving import StreamEngine
@@ -129,8 +134,70 @@ def stream_rows(batch_sizes=(1, 2, 4, 8), windows_per_stream=10,
     return rows
 
 
+def hetero_rows(slots=4, windows_per_stream=8,
+                out_json="BENCH_hetero.json"):
+    """Unified-engine throughput: the event-SNN wing vs the frame-TCN wing
+    (each alone on its own StreamEngine), and both mixed in one engine
+    (one jit'd call per wing per step)."""
+    scfg = SNNConfig(height=32, width=32, time_bins=8, conv1_features=4,
+                     conv2_features=8, hidden=32, num_classes=11)
+    tcfg = TCNConfig(height=32, width=32, conv1_features=4,
+                     conv2_features=8, hidden=32, num_classes=11)
+    snn_params = init_snn(jax.random.PRNGKey(0), scfg)
+    tcn_params = init_tcn(jax.random.PRNGKey(1), tcfg)
+    rng = np.random.default_rng(0)
+    events = {s: [ev.synthetic_gesture_events(rng, (s + k) % 11,
+                                              mean_events=3000,
+                                              height=32, width=32)
+                  for k in range(windows_per_stream)]
+              for s in range(slots)}
+    frames_ = {s: [fr.synthetic_gesture_frames(rng, (s + k) % 11,
+                                               height=32, width=32)
+                   for k in range(windows_per_stream)]
+               for s in range(slots)}
+
+    def run(engine_sets, submits):
+        eng = StreamEngine(engines=engine_sets, max_streams=slots)
+        for sid, modality, ws in submits:     # warm-up: compile
+            for w in ws:
+                eng.submit(sid, w, modality=modality)
+        eng.run()
+        for sid, modality, ws in submits:
+            for w in ws:
+                eng.submit(sid, w, modality=modality)
+        t0 = time.perf_counter()
+        n = len(eng.run())
+        return n / (time.perf_counter() - t0)
+
+    mk_event = lambda: BatchedClosedLoop(snn_params, scfg)
+    mk_frame = lambda: FrameTCNEngine(tcn_params, tcfg)
+    ev_subs = [(f"dvs{s}", "event", events[s]) for s in range(slots)]
+    fr_subs = [(f"cam{s}", "frame", frames_[s]) for s in range(slots)]
+
+    wps_event = run([mk_event()], ev_subs)
+    wps_frame = run([mk_frame()], fr_subs)
+    wps_mixed = run([mk_event(), mk_frame()], ev_subs + fr_subs)
+
+    rows = [
+        ("hetero_event_snn", 1e6 / wps_event, f"wps={wps_event:.1f}"),
+        ("hetero_frame_tcn", 1e6 / wps_frame, f"wps={wps_frame:.1f}"),
+        ("hetero_mixed", 1e6 / wps_mixed,
+         f"wps={wps_mixed:.1f};both_engines_per_step"),
+    ]
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump({"benchmark": "hetero_engines",
+                       "slots_per_engine": slots,
+                       "windows_per_stream": windows_per_stream,
+                       "event_windows_per_s": wps_event,
+                       "frame_windows_per_s": wps_frame,
+                       "mixed_windows_per_s": wps_mixed}, f, indent=2)
+    return rows
+
+
 def main():
-    for name, us, derived in lif_rows() + ternary_rows() + stream_rows():
+    for name, us, derived in (lif_rows() + ternary_rows() + stream_rows()
+                              + hetero_rows()):
         print(f"{name},{us:.1f},{derived}")
 
 

@@ -1,29 +1,45 @@
 """ColibriES core: the paper's contribution as composable JAX modules.
 
 Submodules:
-  events   -- DVS event windows, voxelization (acquisition + preprocessing)
+  events   -- DVS event windows, voxelization (event-wing acquisition +
+              preprocessing)
+  frames   -- frame-camera windows, normalization (frame-wing acquisition
+              + preprocessing)
   lif      -- LIF neuron dynamics with STBP surrogate gradients (SNE model)
   snn      -- the Table II DVS-Gesture spiking CNN + STBP loss
-  ternary  -- TWN ternary quantization + 2-bit packing (CUTIE model)
+  tcn      -- the CUTIE ternary CNN (packed 2-bit weights, ternary
+              activations, Pallas ternary-matmul fc layer)
+  ternary  -- TWN ternary quantization + 2-bit packing (CUTIE format)
   tiling   -- capacity-constrained TDM tiling planner (SNE tiled execution)
-  pipeline -- the closed acquisition->preprocess->infer->actuate loop
-  energy   -- calibrated Kraken power/latency model (Tables I & III)
+  engine   -- the InferenceEngine protocol unifying both accelerator
+              wings, plus FrameTCNEngine (the CUTIE wing)
+  pipeline -- the closed acquisition->preprocess->infer->actuate loop:
+              BatchedClosedLoop (the event/SNE wing of the protocol) and
+              the single-window ClosedLoopPipeline wrapper
+  energy   -- calibrated Kraken power/latency model (Tables I & III event
+              wing; modelled CUTIE frame wing)
 """
 from repro.core.lif import LIFParams, lif_scan_reference, lif_step, spike_surrogate
 from repro.core.snn import SNNConfig, init_snn, snn_apply, snn_logits, snn_loss
 from repro.core.ternary import pack2bit, ternarize, ternary_ste, unpack2bit
 from repro.core.tiling import SNE_NEURON_CAPACITY, TilePlan, plan_layer_tiles, plan_network
-from repro.core.energy import KRAKEN_DOMAINS, KrakenModel, NOMINAL, StageExecution, pipeline_energy
+from repro.core.energy import (KRAKEN_DOMAINS, CUTIE_DOMAIN, FRAME_DOMAINS,
+                               KrakenModel, NOMINAL, NOMINAL_FRAME,
+                               StageExecution, pipeline_energy)
 from repro.core.pipeline import (BatchedClosedLoop, ClosedLoopPipeline,
                                  ClosedLoopResult, pwm_from_logits)
+from repro.core.tcn import TCNConfig, init_tcn, pack_tcn, tcn_apply, tcn_layer_macs
+from repro.core.engine import FrameTCNEngine, InferenceEngine
 
 __all__ = [
     "LIFParams", "lif_scan_reference", "lif_step", "spike_surrogate",
     "SNNConfig", "init_snn", "snn_apply", "snn_logits", "snn_loss",
     "pack2bit", "ternarize", "ternary_ste", "unpack2bit",
     "SNE_NEURON_CAPACITY", "TilePlan", "plan_layer_tiles", "plan_network",
-    "KRAKEN_DOMAINS", "KrakenModel", "NOMINAL", "StageExecution",
-    "pipeline_energy",
+    "KRAKEN_DOMAINS", "CUTIE_DOMAIN", "FRAME_DOMAINS", "KrakenModel",
+    "NOMINAL", "NOMINAL_FRAME", "StageExecution", "pipeline_energy",
     "BatchedClosedLoop", "ClosedLoopPipeline", "ClosedLoopResult",
     "pwm_from_logits",
+    "TCNConfig", "init_tcn", "pack_tcn", "tcn_apply", "tcn_layer_macs",
+    "FrameTCNEngine", "InferenceEngine",
 ]

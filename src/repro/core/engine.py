@@ -1,0 +1,194 @@
+"""The unified heterogeneous engine API: one protocol, two accelerators.
+
+ColibriES is a heterogeneous platform: event streams feed the SNE (spiking
+CNN) and frames feed CUTIE (ternary CNN), through one shared FC + cluster
+front end. This module defines the small :class:`InferenceEngine` protocol
+that lets the serving layer treat both wings uniformly:
+
+  * ``modality``      -- which input kind the engine consumes
+                         ("event" / "frame"), declared as a class attr;
+  * ``duration_us``   -- the engine's latched control-tick length (the
+                         one-bin-width-per-engine contract);
+  * ``validate(item)``        -- reject a bad submission *before* any
+                                 queue state changes;
+  * ``prepare(items, batch_size)`` -- pad per-slot items into the engine's
+                                 fixed batch buffer;
+  * ``infer(batch)``          -- one jit'd call, one result per slot;
+  * ``shape_key(batch)``      -- the jit compilation key of a prepared
+                                 batch (engines with data-dependent
+                                 padding, like the event engine's
+                                 power-of-two event buckets, expose how
+                                 many distinct executables a workload
+                                 compiles).
+
+Concrete engines:
+
+  * :class:`~repro.core.pipeline.BatchedClosedLoop` -- the event->SNN wing
+    (defined in ``core/pipeline.py``, conforms to this protocol);
+  * :class:`FrameTCNEngine` (here) -- the frame->ternary-CNN wing: frame
+    normalization (``core/frames.py``), the CUTIE TCN (``core/tcn.py``,
+    2-bit packed weights through the ``ternary_matmul`` Pallas kernel),
+    and per-stream CUTIE latency/energy accounting
+    (:meth:`~repro.core.energy.KrakenModel.frame_loop`).
+
+Both engines return :class:`~repro.core.pipeline.ClosedLoopResult` rows,
+so per-stream stats, PWM actuation, and energy breakdowns are uniform
+across modalities.
+"""
+from __future__ import annotations
+
+from typing import (Any, Callable, Dict, Hashable, List, Optional, Protocol,
+                    Sequence, Tuple, runtime_checkable)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import frames as fr
+from repro.core.energy import KrakenModel
+from repro.core.pipeline import ClosedLoopResult, pwm_from_logits
+from repro.core.tcn import TCNConfig, pack_tcn, tcn_apply, tcn_layer_macs
+
+__all__ = ["InferenceEngine", "FrameTCNEngine"]
+
+
+@runtime_checkable
+class InferenceEngine(Protocol):
+    """What the serving layer needs from an accelerator wing."""
+
+    modality: str
+    duration_us: Optional[int]
+
+    def validate(self, item: Any) -> None:
+        """Raise ValueError if ``item`` cannot be served by this engine.
+        Must not mutate queue-visible state on failure (latching the
+        engine's ``duration_us`` on first success is allowed)."""
+        ...
+
+    def prepare(self, items: Sequence[Optional[Any]], *,
+                batch_size: int) -> Any:
+        """Pad one item per slot (None = empty slot) into a batch."""
+        ...
+
+    def infer(self, batch: Any) -> List[Optional[ClosedLoopResult]]:
+        """Run one jit'd call; one result per slot, None for empty slots."""
+        ...
+
+    def shape_key(self, batch: Any) -> Hashable:
+        """The jit compilation key of a prepared batch."""
+        ...
+
+
+class FrameTCNEngine:
+    """The CUTIE wing: frame batch -> ternary CNN -> actuation.
+
+    One jit'd call normalizes and classifies a whole
+    :class:`~repro.core.frames.PaddedFrameBatch`; the Kraken model then
+    accounts each slot with its own pixel count and operand activity.
+    Frames are dense, so the jit shape is fixed by ``(batch_size, H, W)``
+    alone -- one executable per slot count, no data-dependent bucketing.
+    """
+
+    modality = "frame"
+
+    def __init__(
+        self,
+        params,
+        cfg: TCNConfig,
+        *,
+        model: Optional[KrakenModel] = None,
+        duration_us: Optional[int] = None,
+        window_ms: float = 300.0,
+        prepacked: bool = False,
+    ):
+        self.cfg = cfg
+        self.packed = params if prepacked else pack_tcn(params)
+        self.model = model or KrakenModel()
+        self.duration_us = duration_us
+        self.window_ms = window_ms
+        self.layer_macs = tcn_layer_macs(cfg)
+        self.total_macs = float(sum(self.layer_macs))
+        self._fused: Dict[Tuple[int, ...], Callable] = {}
+
+    # -- protocol --------------------------------------------------------
+
+    def validate(self, frame: fr.FrameWindow) -> None:
+        if frame.shape != (self.cfg.height, self.cfg.width):
+            raise ValueError(
+                f"frame shape {frame.shape} != engine geometry "
+                f"({self.cfg.height}, {self.cfg.width})")
+        if self.duration_us is None:
+            self.duration_us = frame.duration_us
+        elif frame.duration_us != self.duration_us:
+            raise ValueError(
+                f"frame period {frame.duration_us} != engine period "
+                f"{self.duration_us} (one tick length per engine)")
+
+    def prepare(self, items: Sequence[Optional[fr.FrameWindow]], *,
+                batch_size: int) -> fr.PaddedFrameBatch:
+        return fr.pad_frame_windows(
+            items, batch_size=batch_size, duration_us=self.duration_us,
+            height=self.cfg.height, width=self.cfg.width)
+
+    def shape_key(self, batch: fr.PaddedFrameBatch) -> Hashable:
+        return (batch.batch_size, *batch.frame_shape, batch.duration_us)
+
+    def _fused_fn(self, shape: Tuple[int, ...]) -> Callable:
+        fn = self._fused.get(shape)
+        if fn is None:
+            cfg = self.cfg
+
+            def run(packed, pixels):
+                out = tcn_apply(packed, fr.normalize_frames(pixels), cfg)
+                logits = out["logits"]
+                return (jnp.argmax(logits, -1), pwm_from_logits(logits),
+                        out["activity_per_stream"])
+
+            fn = self._fused[shape] = jax.jit(run)
+        return fn
+
+    def infer(self, batch: fr.PaddedFrameBatch
+              ) -> List[Optional[ClosedLoopResult]]:
+        fn = self._fused_fn(batch.pixels.shape)
+        preds, pwm, activity = fn(self.packed, jnp.asarray(batch.pixels))
+        preds = np.asarray(preds)
+        pwm = np.asarray(pwm)
+        activity = {k: np.asarray(v) for k, v in activity.items()}
+
+        results: List[Optional[ClosedLoopResult]] = []
+        for b in range(batch.batch_size):
+            if not batch.occupied[b]:
+                results.append(None)
+                continue
+            # CUTIE runs its full dense schedule regardless of content;
+            # per-stream differences surface as switching activity.
+            act = float(np.mean([v[b] for v in activity.values()]))
+            acct = self.model.frame_loop(
+                float(batch.num_pixels[b]), self.total_macs, activity=act)
+            latency = float(acct["total_time_ms"])
+            proc_ms = (acct["stages"]["preprocessing"]["time_ms"]
+                       + acct["stages"]["tcn_inference"]["time_ms"])
+            period_ms = max(self.window_ms, proc_ms)
+            results.append(ClosedLoopResult(
+                label_pred=preds[b:b + 1],
+                pwm=pwm[b:b + 1],
+                latency_ms=latency,
+                energy_mj=float(acct["total_energy_mj"]),
+                breakdown=acct,
+                realtime=latency <= self.window_ms,
+                sustained_rate_hz=1000.0 / period_ms,
+            ))
+        return results
+
+    def infer_frames(self, frames: Sequence[Optional[fr.FrameWindow]], *,
+                     batch_size: Optional[int] = None,
+                     ) -> List[Optional[ClosedLoopResult]]:
+        """Convenience: pad a frame list and run it as one batch."""
+        frames = list(frames)
+        if not frames and not batch_size:
+            return []
+        for f in frames:
+            if f is not None:
+                self.validate(f)
+        return self.infer(self.prepare(
+            frames, batch_size=batch_size or len(frames)))

@@ -13,7 +13,10 @@ interface + uDMA run autonomously, so window N+1 is acquired while window N
 is processed -- the paper's real-time claim: 164.5 ms processing fits in the
 300 ms window period).
 
-Two entry points share one batched substrate:
+Two entry points share one batched substrate (and the batched engine is
+the event wing of the :class:`~repro.core.engine.InferenceEngine`
+protocol -- its frame-wing sibling is
+:class:`~repro.core.engine.FrameTCNEngine`):
 
   * :class:`BatchedClosedLoop` -- the engine core: a padded
     :class:`~repro.core.events.PaddedEventBatch` of ``B`` event windows is
@@ -89,7 +92,17 @@ class BatchedClosedLoop:
     jit shapes are keyed by ``(batch_size, max_events, duration_us)``;
     callers that keep those fixed (the streaming engine's slot buffers, or
     the B=1 wrapper's power-of-two event buckets) compile once.
+
+    This is the event wing of the :class:`~repro.core.engine.
+    InferenceEngine` protocol: ``validate``/``prepare``/``infer``/
+    ``shape_key`` below are what the engine-agnostic
+    :class:`~repro.serving.stream.StreamEngine` drives. ``duration_us``
+    is the one-bin-width-per-engine contract: all windows served by one
+    engine share a bin width (pass it at construction to pin it, or leave
+    ``None`` to latch it from the first validated window).
     """
+
+    modality = "event"
 
     def __init__(
         self,
@@ -99,11 +112,13 @@ class BatchedClosedLoop:
         model: Optional[KrakenModel] = None,
         lif_scan_fn: Optional[Callable] = None,
         window_ms: float = 300.0,
+        duration_us: Optional[int] = None,
     ):
         self.params = params
         self.cfg = cfg
         self.model = model or KrakenModel()
         self.window_ms = window_ms
+        self.duration_us = duration_us
         sizes = cfg.spatial_sizes()
         # SNE executes conv1/conv2/fc1/fc2; tile plans sized by each layer's
         # output volume against SNE's neuron capacity.
@@ -120,6 +135,34 @@ class BatchedClosedLoop:
         )
         self._lif_scan_fn = lif_scan_fn
         self._fused: Dict[int, Callable] = {}   # duration_us -> jit'd fn
+
+    # -- InferenceEngine protocol ----------------------------------------
+
+    def validate(self, window: ev.EventWindow) -> None:
+        """Submission-time check: latch/enforce the engine bin width."""
+        if self.duration_us is None:
+            self.duration_us = window.duration_us
+        elif window.duration_us != self.duration_us:
+            raise ValueError(
+                f"window duration {window.duration_us} != engine duration "
+                f"{self.duration_us} (one bin width per engine)")
+
+    def prepare(self, items: Sequence[Optional[ev.EventWindow]], *,
+                batch_size: int) -> ev.PaddedEventBatch:
+        """Pad one window per slot into the engine's fixed batch buffer.
+
+        Event counts are padded to power-of-two buckets, so jit caches at
+        most log2 distinct executables over the engine's lifetime and the
+        buffer shrinks back after a burst window.
+        """
+        bucket = ev.next_pow2(max(
+            (w.num_events for w in items if w is not None), default=1))
+        return ev.pad_event_windows(
+            items, max_events=bucket, batch_size=batch_size,
+            duration_us=self.duration_us)
+
+    def shape_key(self, batch: ev.PaddedEventBatch):
+        return (batch.batch_size, batch.max_events, batch.duration_us)
 
     def _fused_fn(self, duration_us: int) -> Callable:
         """Voxelize + infer + readout for one window duration, jit'd once."""

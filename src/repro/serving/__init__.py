@@ -1,5 +1,8 @@
 """Serving substrate: batched generate loop, ternary serving quantization,
-and continuous batching over event streams (the SNN closed loop)."""
+and continuous batching over heterogeneous sensor streams (the unified
+event-SNN / frame-TCN closed loop behind the InferenceEngine protocol)."""
 from repro.serving.serve import ServeConfig, ServeStats, generate, quantize_for_serving
 from repro.serving.scheduler import BatchScheduler, Request
-from repro.serving.stream import StreamEngine, StreamResult, StreamStats
+from repro.serving.stream import (DeadlinePolicy, FairQuantumPolicy,
+                                  SlotPolicy, StreamEngine, StreamResult,
+                                  StreamStats)

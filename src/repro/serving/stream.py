@@ -1,44 +1,62 @@
-"""Continuous batching over event streams: the SNN closed loop at scale.
+"""Continuous batching over heterogeneous sensor streams.
 
-The paper closes one loop: a single DVS camera feeding one 300 ms window at
-a time. A production deployment (many sensors / many clients -- the
-ColibriUAV multi-sensor scenario, Ev-Edge's heterogeneous event workloads)
-must serve *many* concurrent event streams. :class:`StreamEngine` does for
-the SNN closed loop what ``BatchScheduler`` does for LM decoding:
+The paper closes one loop: a single DVS camera feeding one 300 ms window
+at a time into the SNE. A production deployment (many sensors / many
+clients -- the ColibriUAV multi-sensor scenario, Ev-Edge's heterogeneous
+event+frame workloads) must serve *many* concurrent streams across *both*
+of Kraken's accelerator wings. :class:`StreamEngine` is the scheduler that
+does this, and it is engine-agnostic: any
+:class:`~repro.core.engine.InferenceEngine` (the event->SNN
+:class:`~repro.core.pipeline.BatchedClosedLoop`, the frame->TCN
+:class:`~repro.core.engine.FrameTCNEngine`, or a user-supplied engine)
+plugs in unchanged.
 
-  * per-stream FIFO window queues (``submit`` never blocks),
-  * a fixed number of batch slots -- one jit'd
-    :class:`~repro.core.pipeline.BatchedClosedLoop` call per step over a
-    constant ``(max_streams, max_events)`` buffer, so shapes stay stable
-    and the engine compiles once per event-count bucket,
-  * refill-without-stall: a slot is pinned to a stream while it has
-    queued windows and handed to the next waiting stream the moment it
-    drains -- or after ``fair_quantum`` consecutive windows when other
-    streams are waiting, so no stream starves under continuous
-    submission; idle slots run as empty (zero-event) rows without a
-    recompile,
+Architecture:
+
+  * streams declare a modality at ``submit`` (implicit when the engine
+    set has exactly one); a stream is bound to its modality for life,
+  * slots are partitioned per engine: each engine owns a fixed number of
+    batch slots and runs ONE jit'd call per ``step()`` over its constant
+    slot buffer -- a mixed event+frame step is exactly two jit'd calls,
+  * per-stream FIFO window queues (``submit`` never blocks); windows
+    within a stream are processed strictly in submission order, at most
+    one in flight per stream per step, preserving closed-loop causality,
+  * slot assignment is a pluggable :class:`SlotPolicy`:
+    :class:`FairQuantumPolicy` (default) reproduces the
+    fairness-quantum rotation -- a slot is pinned to a stream while it
+    has queued windows and handed over when it drains, or after
+    ``fair_quantum`` consecutive windows when other streams wait;
+    :class:`DeadlinePolicy` adds earliest-deadline-first selection with
+    aging, so urgent control loops preempt slack ones without starving
+    anyone,
   * per-stream latency/energy accounting: every window gets its own
-    Kraken model breakdown from its true event count and per-stream
-    firing rates -- bitwise identical to running that window alone
-    through :class:`~repro.core.pipeline.ClosedLoopPipeline`.
+    Kraken breakdown (SNE wing: true event counts + firing rates; CUTIE
+    wing: pixel counts + operand activity), bitwise identical to running
+    that window alone through the single-window pipeline.
 
-Windows within a stream are processed strictly in submission order (at
-most one in-flight window per stream per step), preserving the closed-loop
-causality of each control loop.
+One-bin-width-per-engine contract: every window an engine serves shares
+one ``duration_us`` (events are voxelized with one bin width; frames share
+one tick period). Pin it with the ``duration_us`` constructor argument --
+validated on every ``submit`` -- or leave it ``None`` to latch the first
+submitted window's duration for the engine's lifetime. There is no reset:
+construct a new engine (or pass a fresh ``engines=`` set) to change it.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
-from typing import Any, Callable, Deque, Dict, Hashable, List, Optional
+from typing import (Any, Callable, Deque, Dict, Hashable, List, Mapping,
+                    Optional, Sequence, Union)
 
-from repro.core import events as ev
 from repro.core.energy import KrakenModel
+from repro.core.engine import InferenceEngine
 from repro.core.pipeline import BatchedClosedLoop, ClosedLoopResult
 from repro.core.snn import SNNConfig
 
-__all__ = ["StreamResult", "StreamStats", "StreamEngine"]
+__all__ = ["StreamResult", "StreamStats", "StreamEngine",
+           "SlotPolicy", "FairQuantumPolicy", "DeadlinePolicy"]
 
 
 @dataclasses.dataclass
@@ -47,8 +65,9 @@ class StreamResult:
     closed-loop outcome (prediction, PWM, latency/energy breakdown)."""
 
     stream_id: Hashable
-    seq: int                      # per-stream window index (submission order)
+    seq: int                      # submission-time sequence number
     result: ClosedLoopResult
+    modality: str = "event"
 
 
 @dataclasses.dataclass
@@ -87,144 +106,424 @@ class _FreeSlot:
 _FREE = _FreeSlot()
 
 
+@dataclasses.dataclass
+class _Queued:
+    """One queued submission: the item plus its submission-time metadata."""
+
+    item: Any
+    seq: int
+    deadline: Optional[float] = None
+
+
+@dataclasses.dataclass
+class EngineLane:
+    """One engine's scheduling state: its slots, queues, and waiting line.
+
+    This is the view a :class:`SlotPolicy` operates on. Slots hold stream
+    ids (or the free sentinel); ``queues`` maps every stream of this
+    modality to its FIFO of :class:`_Queued` entries; ``waiting`` holds
+    streams without a slot, in arrival order.
+    """
+
+    modality: str
+    engine: InferenceEngine
+    slots: List[Hashable]
+    slot_runs: List[int]
+    waiting: Deque[Hashable]
+    queues: Dict[Hashable, Deque[_Queued]]
+    shape_keys: set
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+
+# ----------------------------------------------------------------------
+# Slot policies.
+# ----------------------------------------------------------------------
+
+class SlotPolicy:
+    """Decides which streams hold an engine's batch slots each step.
+
+    ``assign(lane)`` runs once per lane per step, before the batch is
+    gathered: it frees slots (drained or rotated streams) and fills free
+    slots from the waiting line. Policies must keep the invariant that a
+    schedulable stream is tracked by exactly one of: a held slot or a
+    waiting-line entry.
+    """
+
+    def assign(self, lane: EngineLane) -> None:
+        raise NotImplementedError
+
+
+class FairQuantumPolicy(SlotPolicy):
+    """The default: pin-until-drained with a fairness quantum.
+
+    A slot stays pinned to its stream while the stream has queued windows;
+    it is handed to the next waiting stream the moment the stream drains,
+    or after ``fair_quantum`` consecutive windows when other streams are
+    waiting (the pinned stream is rotated to the back of the waiting
+    line). Free slots are filled in arrival order. No stream starves
+    under continuous submission.
+    """
+
+    def __init__(self, fair_quantum: int = 4):
+        if fair_quantum < 1:
+            raise ValueError(
+                f"fair_quantum must be >= 1, got {fair_quantum}")
+        self.fair_quantum = fair_quantum
+
+    def assign(self, lane: EngineLane) -> None:
+        contended = any(lane.queues[s] for s in lane.waiting)
+        for i, sid in enumerate(lane.slots):
+            if sid is _FREE:
+                continue
+            if not lane.queues[sid]:
+                lane.slots[i] = _FREE
+                lane.slot_runs[i] = 0
+            elif contended and lane.slot_runs[i] >= self.fair_quantum:
+                # Rotate: back of the waiting line, slot to the next stream.
+                lane.waiting.append(sid)
+                lane.slots[i] = _FREE
+                lane.slot_runs[i] = 0
+        self._note_round(lane)
+        for i, sid in enumerate(lane.slots):
+            if sid is _FREE:
+                cand = self._take(lane)
+                if cand is None:
+                    break   # no more waiting work
+                lane.slots[i] = cand
+                lane.slot_runs[i] = 0
+
+    def _note_round(self, lane: EngineLane) -> None:
+        """Hook: called once per assign round, after rotation, before any
+        slot is filled. Subclasses may update per-round bookkeeping."""
+
+    def _take(self, lane: EngineLane) -> Optional[Hashable]:
+        """Pop the next waiting stream with queued work (arrival order);
+        drained waiting entries are discarded as encountered (they re-enter
+        on their next submit)."""
+        while lane.waiting:
+            cand = lane.waiting.popleft()
+            if lane.queues[cand]:
+                return cand
+        return None
+
+
+class DeadlinePolicy(FairQuantumPolicy):
+    """Deadline/priority-aware slot assignment (EDF + aging + wait bound).
+
+    Streams submit windows with an optional ``deadline`` (any consistent
+    unit -- e.g. control-tick index or wall milliseconds; smaller = more
+    urgent; ``None`` = slack). Free slots go to the waiting stream whose
+    head window has the earliest *effective* deadline:
+
+        effective = deadline - aging * rounds_passed_over
+
+    with ``None`` sorting after every finite deadline. Aging bounds the
+    lateness of finite-deadline streams, but cannot by itself protect an
+    undeadlined stream from a continuous feed of urgent work -- so the
+    policy additionally enforces a hard anti-starvation bound: a live
+    waiting stream passed over ``max_wait`` times is served next
+    regardless of deadlines. Together with the inherited fairness quantum
+    (which bounds how long a pinned stream may hold a slot while others
+    wait), every live stream is guaranteed a slot within
+    ``O(max_wait * fair_quantum)`` engine steps.
+    """
+
+    _NO_DEADLINE = math.inf
+
+    def __init__(self, fair_quantum: int = 4, *, aging: float = 1.0,
+                 max_wait: int = 16):
+        super().__init__(fair_quantum)
+        if aging < 0:
+            raise ValueError(f"aging must be >= 0, got {aging}")
+        if max_wait < 1:
+            raise ValueError(f"max_wait must be >= 1, got {max_wait}")
+        self.aging = aging
+        self.max_wait = max_wait
+        self._waited: Dict[Hashable, int] = {}
+
+    def _note_round(self, lane: EngineLane) -> None:
+        """Once per scheduling round: discard drained waiting entries
+        (they re-enter on their next submit, exactly as the base policy
+        discards them lazily) and age every live waiting stream by one
+        round -- regardless of how many free slots this round fills."""
+        live = [sid for sid in lane.waiting if lane.queues[sid]]
+        if len(live) != len(lane.waiting):
+            dropped = set(lane.waiting) - set(live)
+            lane.waiting.clear()
+            lane.waiting.extend(live)
+            for sid in dropped:
+                self._waited.pop(sid, None)
+        for sid in live:
+            self._waited[sid] = self._waited.get(sid, 0) + 1
+
+    def _take(self, lane: EngineLane) -> Optional[Hashable]:
+        best = None
+        best_key = None
+        for pos, sid in enumerate(lane.waiting):
+            if not lane.queues[sid]:
+                continue        # submitted mid-round; picked next round
+            waited = self._waited.get(sid, 0)
+            if waited >= self.max_wait:
+                # Hard bound: the longest-passed-over stream goes first.
+                key = (-1, -waited, pos)
+            else:
+                head = lane.queues[sid][0].deadline
+                base = self._NO_DEADLINE if head is None else head
+                key = (0, base - self.aging * waited, pos)
+            if best is None or key < best_key:
+                best, best_key = sid, key
+        if best is None:
+            return None
+        lane.waiting.remove(best)
+        self._waited.pop(best, None)
+        return best
+
+
+# ----------------------------------------------------------------------
+# The engine-agnostic streaming scheduler.
+# ----------------------------------------------------------------------
+
 class StreamEngine:
-    """Continuous batching of event-stream windows over fixed batch slots."""
+    """Continuous batching of sensor windows over per-engine batch slots.
+
+    Two construction forms:
+
+      * ``StreamEngine(params, cfg, max_streams=8)`` -- the original
+        event-only form: builds one
+        :class:`~repro.core.pipeline.BatchedClosedLoop` internally
+        (backwards compatible with PR 1 callers, bitwise-identical
+        results and scheduling),
+      * ``StreamEngine(engines=[event_engine, frame_engine], ...)`` --
+        heterogeneous form: any set of
+        :class:`~repro.core.engine.InferenceEngine` objects, one lane
+        (slot partition + jit'd call per step) per engine, keyed by each
+        engine's declared ``modality``.
+
+    ``max_streams`` is the slot count per engine (or a
+    ``{modality: count}`` mapping). ``duration_us`` pins the
+    one-bin-width-per-engine contract up front (validated on every
+    submit); ``None`` latches each engine's first submitted duration.
+    """
 
     def __init__(
         self,
-        params,
-        cfg: SNNConfig,
+        params=None,
+        cfg: Optional[SNNConfig] = None,
         *,
-        max_streams: int = 8,
-        fair_quantum: int = 4,
+        engines: Union[None, InferenceEngine,
+                       Sequence[InferenceEngine],
+                       Mapping[str, InferenceEngine]] = None,
+        max_streams: Union[int, Mapping[str, int]] = 8,
+        fair_quantum: Optional[int] = None,
+        policy: Optional[SlotPolicy] = None,
+        duration_us: Optional[int] = None,
         model: Optional[KrakenModel] = None,
         lif_scan_fn: Optional[Callable] = None,
         window_ms: float = 300.0,
     ):
-        self.loop = BatchedClosedLoop(
-            params, cfg, model=model, lif_scan_fn=lif_scan_fn,
-            window_ms=window_ms)
-        if max_streams < 1:
-            raise ValueError(f"max_streams must be >= 1, got {max_streams}")
-        if fair_quantum < 1:
-            raise ValueError(f"fair_quantum must be >= 1, got {fair_quantum}")
-        self.max_streams = max_streams
-        # Fairness bound: a stream may serve this many consecutive windows
-        # from its slot while other streams wait; it is then rotated to the
-        # back of the waiting queue, so no stream starves under continuous
-        # submission with more live streams than slots.
-        self.fair_quantum = fair_quantum
-        self._queues: Dict[Hashable, Deque[ev.EventWindow]] = {}
+        if engines is None:
+            if params is None or cfg is None:
+                raise ValueError("give (params, cfg) or engines=")
+            engines = [BatchedClosedLoop(
+                params, cfg, model=model, lif_scan_fn=lif_scan_fn,
+                window_ms=window_ms, duration_us=duration_us)]
+        else:
+            if params is not None or cfg is not None:
+                raise ValueError("(params, cfg) and engines= are "
+                                 "mutually exclusive")
+            if isinstance(engines, Mapping):
+                engines = list(engines.values())
+            elif not isinstance(engines, Sequence):
+                engines = [engines]
+            for e in engines:
+                if duration_us is not None:
+                    if e.duration_us is None:
+                        e.duration_us = duration_us
+                    elif e.duration_us != duration_us:
+                        raise ValueError(
+                            f"engine '{e.modality}' duration "
+                            f"{e.duration_us} != duration_us="
+                            f"{duration_us}")
+
+        if policy is not None and fair_quantum is not None:
+            raise ValueError(
+                "fair_quantum= configures the DEFAULT policy only; set "
+                "the quantum on your policy= instance instead")
+        self.policy = policy or FairQuantumPolicy(
+            4 if fair_quantum is None else fair_quantum)
+        self._lanes: Dict[str, EngineLane] = {}
+        if not engines:
+            raise ValueError("engines= must name at least one engine")
+        modalities = {e.modality for e in engines}
+        if isinstance(max_streams, Mapping):
+            unknown = set(max_streams) - modalities
+            if unknown:
+                raise ValueError(
+                    f"max_streams keys {sorted(unknown)} match no engine "
+                    f"modality (have {sorted(modalities)})")
+        for e in engines:
+            if e.modality in self._lanes:
+                raise ValueError(
+                    f"duplicate engine modality {e.modality!r}")
+            slots = (max_streams.get(e.modality, 8)
+                     if isinstance(max_streams, Mapping) else max_streams)
+            if slots < 1:
+                raise ValueError(f"max_streams must be >= 1, got {slots}")
+            self._lanes[e.modality] = EngineLane(
+                modality=e.modality, engine=e,
+                slots=[_FREE] * slots, slot_runs=[0] * slots,
+                waiting=deque(), queues={}, shape_keys=set())
+
+        self._stream_lane: Dict[Hashable, str] = {}
         self._seq: Dict[Hashable, int] = {}
-        self._slots: List[Hashable] = [_FREE] * max_streams
-        self._slot_runs: List[int] = [0] * max_streams  # windows on this pin
-        self._waiting: Deque[Hashable] = deque()   # streams without a slot
-        self._duration_us: Optional[int] = None
         self.stream_stats: Dict[Hashable, StreamStats] = {}
         self.stats: Dict[str, float] = {
             "steps": 0, "windows": 0, "wall_s": 0.0,
         }
 
+    # -- introspection ---------------------------------------------------
+
+    @property
+    def engines(self) -> Dict[str, InferenceEngine]:
+        """Engines by modality."""
+        return {m: lane.engine for m, lane in self._lanes.items()}
+
+    @property
+    def loop(self) -> InferenceEngine:
+        """Backwards-compatible alias: the single engine (event-only
+        construction). Raises if the engine set is heterogeneous."""
+        if len(self._lanes) != 1:
+            raise AttributeError(
+                "StreamEngine.loop is ambiguous with multiple engines; "
+                "use .engines[modality]")
+        return next(iter(self._lanes.values())).engine
+
+    def modality_of(self, stream_id: Hashable) -> str:
+        return self._stream_lane[stream_id]
+
+    def compiled_shapes(self, modality: Optional[str] = None) -> set:
+        """Distinct jit shape keys an engine has been stepped with."""
+        if modality is None:
+            if len(self._lanes) != 1:
+                raise ValueError(
+                    "modality required with multiple engines; have "
+                    f"{sorted(self._lanes)}")
+            modality = next(iter(self._lanes))
+        if modality not in self._lanes:
+            raise ValueError(f"no engine for modality {modality!r}; "
+                             f"have {sorted(self._lanes)}")
+        return set(self._lanes[modality].shape_keys)
+
     # -- submission ------------------------------------------------------
 
-    def submit(self, stream_id: Hashable, window: ev.EventWindow) -> int:
+    def submit(self, stream_id: Hashable, window: Any, *,
+               modality: Optional[str] = None,
+               deadline: Optional[float] = None) -> int:
         """Queue one window on a stream; returns its per-stream sequence
-        number. Never blocks; the window runs at the next step in which
-        its stream holds a slot and this window is at the queue head."""
-        if self._duration_us is None:
-            self._duration_us = window.duration_us
-        elif window.duration_us != self._duration_us:
-            raise ValueError(
-                f"window duration {window.duration_us} != engine duration "
-                f"{self._duration_us} (one bin width per engine)")
-        if stream_id not in self._queues:
-            self._queues[stream_id] = deque()
+        number (the same value later reported by ``StreamResult.seq``).
+        Never blocks; the window runs at the next step in which its
+        stream holds a slot and this window is at the queue head.
+
+        ``modality`` selects the engine for a NEW stream (optional when
+        only one engine is configured); known streams are bound to their
+        lane. ``deadline`` is scheduling metadata consumed by
+        deadline-aware policies (smaller = more urgent).
+        """
+        lane = self._resolve_lane(stream_id, modality)
+        # Validation happens BEFORE any queue/seq state changes, so a
+        # rejected submit neither burns a sequence number nor corrupts
+        # scheduling state.
+        lane.engine.validate(window)
+        if stream_id not in lane.queues:
+            lane.queues[stream_id] = deque()
+            self._stream_lane[stream_id] = lane.modality
             self._seq[stream_id] = 0
             self.stream_stats[stream_id] = StreamStats()
-        self._queues[stream_id].append(window)
-        # A stream is schedulable via exactly one of: a held slot or a
-        # waiting-queue entry (covers streams that drained and come back).
-        if stream_id not in self._slots and stream_id not in self._waiting:
-            self._waiting.append(stream_id)
-        self.stream_stats[stream_id].queued += 1
         seq = self._seq[stream_id]
-        self._seq[stream_id] += 1
+        self._seq[stream_id] = seq + 1
+        lane.queues[stream_id].append(_Queued(window, seq, deadline))
+        # A stream is schedulable via exactly one of: a held slot or a
+        # waiting-line entry (covers streams that drained and come back).
+        if stream_id not in lane.slots and stream_id not in lane.waiting:
+            lane.waiting.append(stream_id)
+        self.stream_stats[stream_id].queued += 1
         return seq
 
+    def _resolve_lane(self, stream_id: Hashable,
+                      modality: Optional[str]) -> EngineLane:
+        bound = self._stream_lane.get(stream_id)
+        if bound is not None:
+            if modality is not None and modality != bound:
+                raise ValueError(
+                    f"stream {stream_id!r} is bound to modality "
+                    f"{bound!r}, got {modality!r}")
+            return self._lanes[bound]
+        if modality is None:
+            if len(self._lanes) == 1:
+                return next(iter(self._lanes.values()))
+            raise ValueError(
+                f"modality required for new stream {stream_id!r} with "
+                f"engines {sorted(self._lanes)}")
+        if modality not in self._lanes:
+            raise ValueError(f"no engine for modality {modality!r}; "
+                             f"have {sorted(self._lanes)}")
+        return self._lanes[modality]
+
     def pending(self) -> int:
-        """Windows queued across all streams."""
-        return sum(len(q) for q in self._queues.values())
+        """Windows queued across all streams and engines."""
+        return sum(lane.pending() for lane in self._lanes.values())
 
     # -- scheduling ------------------------------------------------------
 
-    def _assign_slots(self) -> None:
-        """Free slots whose stream has drained -- or exhausted its fairness
-        quantum while others wait -- then hand free slots to waiting
-        streams in arrival order (refill-without-stall)."""
-        contended = any(self._queues[s] for s in self._waiting)
-        for i, sid in enumerate(self._slots):
-            if sid is _FREE:
-                continue
-            if not self._queues[sid]:
-                self._slots[i] = _FREE
-                self._slot_runs[i] = 0
-            elif contended and self._slot_runs[i] >= self.fair_quantum:
-                # Rotate: back of the waiting line, slot to the next stream.
-                self._waiting.append(sid)
-                self._slots[i] = _FREE
-                self._slot_runs[i] = 0
-        for i, sid in enumerate(self._slots):
-            if sid is _FREE:
-                while self._waiting:
-                    cand = self._waiting.popleft()
-                    if self._queues[cand]:
-                        self._slots[i] = cand
-                        self._slot_runs[i] = 0
-                        break
-                if self._slots[i] is _FREE:
-                    break   # no more waiting work
-
     def step(self) -> List[StreamResult]:
-        """Serve one batch: the head window of every slotted stream, in a
-        single jit'd closed-loop call. Returns the completed windows."""
-        t0 = time.perf_counter()
-        self._assign_slots()
-        # Peek (don't pop): if infer raises -- transient device error, OOM
-        # -- every window stays queued and stats stay truthful; the step
-        # can simply be retried.
-        heads: List[Optional[ev.EventWindow]] = [
-            self._queues[sid][0] if sid is not _FREE else None
-            for sid in self._slots
-        ]
-        if all(w is None for w in heads):
-            return []
-        # Power-of-two event padding per step: jit caches one executable
-        # per (B, max_events) shape, so there are at most log2 distinct
-        # buckets over the engine's lifetime -- and the buffer shrinks
-        # back after a burst window instead of padding every later step.
-        bucket = ev.next_pow2(
-            max(w.num_events for w in heads if w is not None))
-        batch = ev.pad_event_windows(
-            heads, max_events=bucket, batch_size=self.max_streams,
-            duration_us=self._duration_us)
-        results = self.loop.infer(batch)
+        """Serve one batch per engine with queued work: the head window of
+        every slotted stream, one jit'd call per engine. Returns the
+        completed windows across all engines.
 
-        out: List[StreamResult] = []
-        for slot, (w, res) in enumerate(zip(heads, results)):
-            if w is None:
+        Retry-safe across the whole heterogeneous step: queues are only
+        peeked until EVERY engine's infer has returned, so if any engine
+        raises (transient device error, OOM) no window is consumed, no
+        stat moves, and the step can simply be retried.
+        """
+        t0 = time.perf_counter()
+        # Phase 1: assign slots and run every lane's jit'd call, peeking
+        # (not popping) the queue heads.
+        ran = []
+        for lane in self._lanes.values():
+            self.policy.assign(lane)
+            heads = [
+                lane.queues[sid][0].item if sid is not _FREE else None
+                for sid in lane.slots
+            ]
+            if all(w is None for w in heads):
                 continue
-            self._queues[self._slots[slot]].popleft()
-            self._slot_runs[slot] += 1
-            sid = self._slots[slot]
-            st = self.stream_stats[sid]
-            st.windows += 1
-            st.queued -= 1
-            st.energy_mj += res.energy_mj
-            st.latency_ms_sum += res.latency_ms
-            st.realtime_windows += int(res.realtime)
-            out.append(StreamResult(
-                stream_id=sid, seq=st.windows - 1, result=res))
-            self.stats["windows"] += 1
+            batch = lane.engine.prepare(heads, batch_size=len(lane.slots))
+            ran.append((lane, heads, lane.engine.shape_key(batch),
+                        lane.engine.infer(batch)))
+        if not ran:
+            return []
+        # Phase 2: every engine succeeded -- commit pops, stats, results.
+        out: List[StreamResult] = []
+        for lane, heads, key, results in ran:
+            lane.shape_keys.add(key)
+            for slot, (w, res) in enumerate(zip(heads, results)):
+                if w is None:
+                    continue
+                sid = lane.slots[slot]
+                entry = lane.queues[sid].popleft()
+                lane.slot_runs[slot] += 1
+                st = self.stream_stats[sid]
+                st.windows += 1
+                st.queued -= 1
+                st.energy_mj += res.energy_mj
+                st.latency_ms_sum += res.latency_ms
+                st.realtime_windows += int(res.realtime)
+                out.append(StreamResult(
+                    stream_id=sid, seq=entry.seq, result=res,
+                    modality=lane.modality))
+                self.stats["windows"] += 1
         self.stats["steps"] += 1
         self.stats["wall_s"] += time.perf_counter() - t0
         return out
@@ -238,6 +537,7 @@ class StreamEngine:
 
     @property
     def mean_occupancy(self) -> float:
-        """Average filled slots per step (batching efficiency)."""
+        """Average served windows per step (batching efficiency; with
+        multiple engines this sums over the per-engine batches)."""
         return (self.stats["windows"] / self.stats["steps"]
                 if self.stats["steps"] else 0.0)

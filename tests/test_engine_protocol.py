@@ -1,0 +1,235 @@
+"""The unified InferenceEngine protocol: conformance of both accelerator
+wings, frame preprocessing, the CUTIE TCN numerics, and the frame-wing
+Kraken energy accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BatchedClosedLoop, FrameTCNEngine, InferenceEngine,
+                        KrakenModel, SNNConfig, TCNConfig, init_snn,
+                        init_tcn, pack_tcn, tcn_apply, tcn_layer_macs)
+from repro.core import frames as fr
+from repro.core.energy import FRAME_DOMAINS, KRAKEN_DOMAINS
+from repro.core.ternary import ternarize, unpack2bit
+
+
+@pytest.fixture(scope="module")
+def tcfg():
+    return TCNConfig(height=32, width=32, conv1_features=4,
+                     conv2_features=8, hidden=32, num_classes=11)
+
+
+@pytest.fixture(scope="module")
+def tparams(tcfg):
+    return init_tcn(jax.random.PRNGKey(1), tcfg)
+
+
+@pytest.fixture(scope="module")
+def frame_engine(tcfg, tparams):
+    return FrameTCNEngine(tparams, tcfg)
+
+
+def _frames(n, seed=0, h=32, w=32):
+    rng = np.random.default_rng(seed)
+    return [fr.synthetic_gesture_frames(rng, i % 11, height=h, width=w)
+            for i in range(n)]
+
+
+# -- protocol conformance ----------------------------------------------------
+
+def test_both_wings_satisfy_protocol(tcfg, tparams):
+    scfg = SNNConfig(height=32, width=32, time_bins=8, conv1_features=4,
+                     conv2_features=8, hidden=32, num_classes=11)
+    ev_eng = BatchedClosedLoop(init_snn(jax.random.PRNGKey(0), scfg), scfg)
+    fr_eng = FrameTCNEngine(tparams, tcfg)
+    assert isinstance(ev_eng, InferenceEngine)
+    assert isinstance(fr_eng, InferenceEngine)
+    assert ev_eng.modality == "event" and fr_eng.modality == "frame"
+    # duration latches on first validate, then enforces.
+    f = _frames(1)[0]
+    fr_eng2 = FrameTCNEngine(tparams, tcfg)
+    assert fr_eng2.duration_us is None
+    fr_eng2.validate(f)
+    assert fr_eng2.duration_us == f.duration_us
+    bad = fr.FrameWindow(pixels=f.pixels, duration_us=f.duration_us // 2)
+    with pytest.raises(ValueError):
+        fr_eng2.validate(bad)
+
+
+def test_frame_engine_rejects_wrong_geometry(frame_engine):
+    bad = _frames(1, h=16, w=16)[0]
+    with pytest.raises(ValueError):
+        frame_engine.validate(bad)
+
+
+def test_event_engine_pinned_duration():
+    scfg = SNNConfig(height=32, width=32, time_bins=8, conv1_features=4,
+                     conv2_features=8, hidden=32, num_classes=11)
+    eng = BatchedClosedLoop(init_snn(jax.random.PRNGKey(0), scfg), scfg,
+                            duration_us=150_000)
+    from repro.core import events as ev
+    rng = np.random.default_rng(3)
+    w = ev.synthetic_gesture_events(rng, 0, mean_events=1500,
+                                    height=32, width=32)  # 300 ms window
+    with pytest.raises(ValueError):
+        eng.validate(w)
+
+
+# -- frame preprocessing -----------------------------------------------------
+
+def test_pad_frame_windows_shapes_and_slots():
+    fs = _frames(2, seed=6)
+    batch = fr.pad_frame_windows([fs[0], None, fs[1]], batch_size=4)
+    assert batch.batch_size == 4
+    assert batch.pixels.shape == (4, 32, 32, 1)
+    assert list(batch.occupied) == [True, False, True, False]
+    assert batch.num_pixels[0] == 32 * 32 and batch.num_pixels[1] == 0
+    assert batch.labels[2] == fs[1].label and batch.labels[1] == -1
+    assert not batch.pixels[1].any()
+    with pytest.raises(ValueError):
+        fr.pad_frame_windows(fs, batch_size=1)        # too many frames
+    with pytest.raises(ValueError):
+        fr.pad_frame_windows([None, None])            # no duration known
+    mixed = fr.FrameWindow(pixels=fs[0].pixels,
+                           duration_us=fs[0].duration_us // 3)
+    with pytest.raises(ValueError):
+        fr.pad_frame_windows([fs[0], mixed])          # mixed periods
+    other = _frames(1, h=16, w=16)[0]
+    with pytest.raises(ValueError):
+        fr.pad_frame_windows([fs[0], other])          # mixed geometry
+
+
+def test_normalize_frames_range():
+    px = jnp.asarray([[0.0, 127.5, 255.0]])
+    out = np.asarray(fr.normalize_frames(px))
+    np.testing.assert_allclose(out, [[-1.0, 0.0, 1.0]], atol=1e-6)
+
+
+def test_synthetic_frames_are_class_dependent():
+    a = _frames(1, seed=1)[0]
+    rng = np.random.default_rng(1)
+    b = fr.synthetic_gesture_frames(rng, 5, height=32, width=32)
+    assert a.pixels.shape == (32, 32) and a.pixels.dtype == np.uint8
+    assert not np.array_equal(a.pixels, b.pixels)
+
+
+# -- the CUTIE TCN -----------------------------------------------------------
+
+def test_pack_tcn_fc1_roundtrip(tcfg, tparams):
+    packed = pack_tcn(tparams)
+    q, scale = ternarize(tparams["fc1"]["w"], axis=-1)
+    unpacked = unpack2bit(packed["fc1"]["packed"].T).T
+    np.testing.assert_array_equal(np.asarray(unpacked), np.asarray(q))
+    np.testing.assert_allclose(np.asarray(packed["fc1"]["scale"]),
+                               np.asarray(scale).reshape(-1), rtol=1e-6)
+
+
+def test_tcn_apply_kernel_matches_dense_reference(tcfg, tparams):
+    """The Pallas ternary-matmul fc1 must agree with the dense dequantized
+    matmul to f32 tolerance."""
+    packed = pack_tcn(tparams)
+    batch = fr.pad_frame_windows(_frames(3, seed=9))
+    x = fr.normalize_frames(jnp.asarray(batch.pixels))
+    out = tcn_apply(packed, x, tcfg)
+    assert out["logits"].shape == (3, tcfg.num_classes)
+
+    # Dense reference: replace the packed fc1 with q * scale.
+    q, scale = ternarize(tparams["fc1"]["w"], axis=-1)
+    from repro.core.tcn import (_avg_pool, _ternarize_act, _ternary_conv)
+    x0 = _avg_pool(x, tcfg.pool0)
+    s1 = _ternarize_act(_ternary_conv(x0, packed["conv1"]),
+                        tcfg.act_threshold)
+    s2 = _ternarize_act(_ternary_conv(_avg_pool(s1, 2), packed["conv2"]),
+                        tcfg.act_threshold)
+    flat = _avg_pool(s2, 2).reshape(3, -1)
+    h_ref = flat @ (q.astype(jnp.float32) * scale)
+    s3 = _ternarize_act(h_ref, tcfg.act_threshold)
+    logits_ref = s3 @ packed["fc2"]["w"]
+    np.testing.assert_allclose(np.asarray(out["logits"]),
+                               np.asarray(logits_ref), rtol=1e-5, atol=1e-5)
+
+
+def test_tcn_activity_is_per_stream_and_bounded(tcfg, tparams):
+    packed = pack_tcn(tparams)
+    batch = fr.pad_frame_windows(_frames(4, seed=11))
+    out = tcn_apply(packed, fr.normalize_frames(jnp.asarray(batch.pixels)),
+                    tcfg)
+    for name, dens in out["activity_per_stream"].items():
+        dens = np.asarray(dens)
+        assert dens.shape == (4,)
+        assert ((dens >= 0) & (dens <= 1)).all(), name
+
+
+def test_tcn_layer_macs_positive(tcfg):
+    macs = tcn_layer_macs(tcfg)
+    assert len(macs) == 4 and all(m > 0 for m in macs)
+
+
+# -- FrameTCNEngine ----------------------------------------------------------
+
+def test_frame_engine_empty_slots_do_not_change_results(frame_engine):
+    """Per-slot results are independent of what the other slots hold
+    (same fixed batch size, as the streaming engine always uses)."""
+    fs = _frames(2, seed=30)
+    dense = frame_engine.infer_frames([fs[0], fs[1], None, None],
+                                      batch_size=4)
+    sparse = frame_engine.infer_frames([fs[0], None, fs[1], None],
+                                       batch_size=4)
+    assert dense[2] is None and sparse[1] is None and sparse[3] is None
+    for ref, got in zip([dense[0], dense[1]], [sparse[0], sparse[2]]):
+        np.testing.assert_array_equal(ref.label_pred, got.label_pred)
+        np.testing.assert_array_equal(ref.pwm, got.pwm)
+        assert ref.energy_mj == got.energy_mj
+        assert ref.latency_ms == got.latency_ms
+
+
+def test_frame_engine_result_contract(frame_engine):
+    res = frame_engine.infer_frames(_frames(1, seed=40))[0]
+    assert res.pwm.shape == (1, 4)
+    assert (res.pwm >= 0).all() and (res.pwm <= 1).all()
+    stages = res.breakdown["stages"]
+    assert set(stages) == {"data_acquisition", "preprocessing",
+                           "tcn_inference"}
+    assert stages["tcn_inference"]["domain"] == "cutie"
+    assert res.latency_ms == pytest.approx(
+        sum(s["time_ms"] for s in stages.values()))
+    assert 0.0 <= res.breakdown["cutie_activity"] <= 1.0
+    assert res.energy_mj > 0 and res.sustained_rate_hz > 0
+
+
+# -- frame-wing energy model -------------------------------------------------
+
+def test_frame_loop_accounting_consistent():
+    model = KrakenModel()
+    out = model.frame_loop(128.0 * 128.0, 2_381_312.0, activity=0.5)
+    assert out["total_time_ms"] == pytest.approx(
+        sum(s["time_ms"] for s in out["stages"].values()))
+    assert out["total_energy_mj"] == pytest.approx(
+        out["active_energy_mj"] + out["idle_energy_mj"])
+    # Nominal workload reproduces the calibration targets.
+    nf = model.nominal_frame
+    assert out["stages"]["data_acquisition"]["time_ms"] == pytest.approx(
+        nf.t_acq_ms)
+    assert out["stages"]["preprocessing"]["time_ms"] == pytest.approx(
+        nf.t_pre_ms)
+    assert out["stages"]["tcn_inference"]["time_ms"] == pytest.approx(
+        nf.t_cutie_ms)
+
+
+def test_frame_loop_energy_monotone_in_activity():
+    model = KrakenModel()
+    es = [model.frame_loop(1e4, 1e6, activity=a)["total_energy_mj"]
+          for a in (0.0, 0.5, 1.0)]
+    assert es[0] < es[1] < es[2]
+    # Activity clamps to [0, 1].
+    lo = model.frame_loop(1e4, 1e6, activity=-3.0)
+    hi = model.frame_loop(1e4, 1e6, activity=7.0)
+    assert lo["cutie_activity"] == 0.0 and hi["cutie_activity"] == 1.0
+
+
+def test_cutie_domain_does_not_leak_into_event_accounting():
+    """Adding the frame wing must not perturb the event wing's Table III
+    calibration: the event domain set stays exactly {fc, cluster, sne}."""
+    assert set(KRAKEN_DOMAINS) == {"fc", "cluster", "sne"}
+    assert set(FRAME_DOMAINS) == {"fc", "cluster", "cutie"}

@@ -1,0 +1,319 @@
+"""SlotPolicy semantics: the default FairQuantumPolicy must reproduce the
+PR 1 fairness-quantum scheduler exactly (order-for-order), and the
+DeadlinePolicy must prefer urgent work without ever starving a stream.
+
+Uses a stub InferenceEngine so scheduling is tested in isolation from any
+accelerator numerics -- which also demonstrates that third-party engines
+plug into StreamEngine through the protocol alone.
+"""
+from collections import deque
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import ClosedLoopResult
+from repro.serving import DeadlinePolicy, FairQuantumPolicy, StreamEngine
+from repro.serving.stream import SlotPolicy
+
+
+class StubEngine:
+    """Minimal InferenceEngine: items are opaque tokens, results canned."""
+
+    modality = "stub"
+
+    def __init__(self):
+        self.duration_us = None
+        self.infer_calls = 0
+
+    def validate(self, item):
+        pass
+
+    def prepare(self, items, *, batch_size):
+        assert len(items) == batch_size
+        return items
+
+    def shape_key(self, batch):
+        return (len(batch),)
+
+    def infer(self, batch):
+        self.infer_calls += 1
+        return [None if it is None else ClosedLoopResult(
+            label_pred=np.zeros(1, np.int64), pwm=np.zeros((1, 4)),
+            latency_ms=1.0, energy_mj=1.0, breakdown={}, realtime=True,
+            sustained_rate_hz=1.0) for it in batch]
+
+
+def _stub_engine(max_streams, policy=None, fair_quantum=None):
+    return StreamEngine(engines=[StubEngine()], max_streams=max_streams,
+                        policy=policy, fair_quantum=fair_quantum)
+
+
+# -- PR 1 reference scheduler ------------------------------------------------
+
+class _PR1Reference:
+    """Literal re-implementation of PR 1's StreamEngine scheduling (slot
+    pinning, fairness-quantum rotation, refill-without-stall), serving
+    abstract tokens. The order of (stream, seq) completions is the spec
+    the default policy must match exactly."""
+
+    _FREE = object()
+
+    def __init__(self, max_streams, fair_quantum):
+        self.max_streams = max_streams
+        self.fair_quantum = fair_quantum
+        self.queues = {}
+        self.seq = {}
+        self.slots = [self._FREE] * max_streams
+        self.slot_runs = [0] * max_streams
+        self.waiting = deque()
+
+    def submit(self, sid):
+        if sid not in self.queues:
+            self.queues[sid] = deque()
+            self.seq[sid] = 0
+        self.queues[sid].append(self.seq[sid])
+        self.seq[sid] += 1
+        if sid not in self.slots and sid not in self.waiting:
+            self.waiting.append(sid)
+
+    def _assign_slots(self):
+        contended = any(self.queues[s] for s in self.waiting)
+        for i, sid in enumerate(self.slots):
+            if sid is self._FREE:
+                continue
+            if not self.queues[sid]:
+                self.slots[i] = self._FREE
+                self.slot_runs[i] = 0
+            elif contended and self.slot_runs[i] >= self.fair_quantum:
+                self.waiting.append(sid)
+                self.slots[i] = self._FREE
+                self.slot_runs[i] = 0
+        for i, sid in enumerate(self.slots):
+            if sid is self._FREE:
+                while self.waiting:
+                    cand = self.waiting.popleft()
+                    if self.queues[cand]:
+                        self.slots[i] = cand
+                        self.slot_runs[i] = 0
+                        break
+                if self.slots[i] is self._FREE:
+                    break
+
+    def step(self):
+        self._assign_slots()
+        out = []
+        for i, sid in enumerate(self.slots):
+            if sid is self._FREE or not self.queues[sid]:
+                continue
+            out.append((sid, self.queues[sid].popleft()))
+            self.slot_runs[i] += 1
+        return out
+
+    def pending(self):
+        return sum(len(q) for q in self.queues.values())
+
+
+def _random_script(rng, n_streams, rounds):
+    """A reproducible interleaved submit/step script: each round submits a
+    random multiset of windows, then steps once."""
+    return [[int(s) for s in rng.integers(0, n_streams,
+                                          size=rng.integers(0, 4))]
+            for _ in range(rounds)]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("max_streams,fair_quantum", [(1, 1), (2, 2),
+                                                      (2, 4), (3, 2)])
+def test_default_policy_matches_pr1_exactly(seed, max_streams, fair_quantum):
+    """Under arbitrary interleaved submission, the engine with the default
+    policy completes (stream, seq) pairs in exactly the PR 1 order."""
+    rng = np.random.default_rng(seed)
+    script = _random_script(rng, n_streams=5, rounds=30)
+
+    eng = _stub_engine(max_streams, fair_quantum=fair_quantum)
+    ref = _PR1Reference(max_streams, fair_quantum)
+    got_order, ref_order = [], []
+    for round_submits in script:
+        for s in round_submits:
+            eng.submit(f"s{s}", object())
+            ref.submit(f"s{s}")
+        got_order.extend((r.stream_id, r.seq) for r in eng.step())
+        ref_order.extend(ref.step())
+    # Drain both.
+    while eng.pending():
+        got_order.extend((r.stream_id, r.seq) for r in eng.step())
+    while ref.pending():
+        ref_order.extend(ref.step())
+    assert got_order == ref_order
+
+
+def test_default_policy_is_fair_quantum_instance():
+    eng = _stub_engine(2, fair_quantum=3)
+    assert isinstance(eng.policy, FairQuantumPolicy)
+    assert not isinstance(eng.policy, DeadlinePolicy)
+    assert eng.policy.fair_quantum == 3
+
+
+# -- DeadlinePolicy ----------------------------------------------------------
+
+def test_deadline_policy_serves_urgent_first():
+    """With one slot and all streams waiting, the earliest deadline wins
+    regardless of arrival order."""
+    eng = _stub_engine(1, policy=DeadlinePolicy())
+    eng.submit("slack", object(), deadline=900.0)
+    eng.submit("late", object(), deadline=300.0)
+    eng.submit("urgent", object(), deadline=10.0)
+    order = [r.stream_id for r in eng.run()]
+    assert order == ["urgent", "late", "slack"]
+
+
+def test_deadline_none_sorts_after_finite():
+    eng = _stub_engine(1, policy=DeadlinePolicy())
+    eng.submit("undated", object())                  # deadline=None
+    eng.submit("dated", object(), deadline=1e9)
+    assert [r.stream_id for r in eng.run()] == ["dated", "undated"]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_deadline_policy_never_starves(seed):
+    """Adversarial load: urgent streams resubmit tiny deadlines every
+    step, an undeadlined stream just waits. The wait bound guarantees the
+    slack stream is served within max_wait + quantum steps -- and keeps
+    being served with bounded gaps forever."""
+    policy = DeadlinePolicy(fair_quantum=2, max_wait=8)
+    eng = _stub_engine(1, policy=policy)
+    rng = np.random.default_rng(seed)
+    eng.submit("slack", object())                    # no deadline: most slack
+    served_slack_steps = []
+    for step_i in range(120):
+        for u in range(2):
+            # keep the urgent queues non-empty with ever-earlier urgency
+            if rng.random() < 0.9:
+                eng.submit(f"urgent{u}", object(),
+                           deadline=float(rng.integers(0, 10)))
+        if not eng.pending():
+            continue
+        for r in eng.step():
+            if r.stream_id == "slack":
+                served_slack_steps.append(step_i)
+                eng.submit("slack", object())        # go wait again
+    assert served_slack_steps, "slack stream was starved"
+    gaps = np.diff([0] + served_slack_steps)
+    bound = (policy.max_wait + policy.fair_quantum + 2) * 2
+    assert gaps.max() <= bound, (served_slack_steps, gaps)
+    # And urgent streams were not locked out either.
+    assert all(eng.stream_stats[f"urgent{u}"].windows > 10
+               for u in range(2))
+
+
+def test_deadline_policy_drops_drained_waiting_entries():
+    """Ephemeral streams must not accumulate in the waiting line or the
+    aging table after they drain (memory/scan-cost leak)."""
+    policy = DeadlinePolicy()
+    eng = _stub_engine(1, policy=policy)
+    for k in range(50):
+        eng.submit(f"ephemeral{k}", object(), deadline=float(k))
+    eng.run()
+    lane = eng._lanes["stub"]
+    eng.submit("fresh", object())
+    eng.run()
+    assert len(lane.waiting) == 0
+    assert len(policy._waited) == 0
+
+
+def test_deadline_aging_counts_rounds_not_slot_fills():
+    """With many free slots per round, a passed-over stream ages by ONE
+    per round, so the max_wait hard bound does not fire early."""
+    policy = DeadlinePolicy(max_wait=16)
+    eng = _stub_engine(4, policy=policy)
+    # 5 streams over 4 slots: exactly one waits each round.
+    for s in range(5):
+        for _ in range(3):
+            eng.submit(f"s{s}", object(), deadline=float(s))
+    eng.step()
+    waited = [v for v in policy._waited.values()]
+    assert waited and max(waited) == 1      # one round -> aged once
+
+
+def test_fair_quantum_and_policy_mutually_exclusive():
+    with pytest.raises(ValueError):
+        _stub_engine(1, policy=DeadlinePolicy(), fair_quantum=2)
+
+
+def test_max_streams_mapping_rejects_unknown_modality():
+    with pytest.raises(ValueError):
+        StreamEngine(engines=[StubEngine()],
+                     max_streams={"stub": 2, "frames": 2})
+
+
+def test_compiled_shapes_requires_modality_when_plural():
+    class Stub2(StubEngine):
+        modality = "stub2"
+
+    eng = StreamEngine(engines=[StubEngine(), Stub2()], max_streams=1)
+    with pytest.raises(ValueError):
+        eng.compiled_shapes()
+    with pytest.raises(ValueError):
+        eng.compiled_shapes("nope")
+    assert eng.compiled_shapes("stub") == set()
+
+
+def test_step_is_retry_safe_across_lanes():
+    """If a later lane's engine raises, NO lane's windows are consumed --
+    the heterogeneous step can be retried without losing results."""
+
+    class FailingEngine(StubEngine):
+        modality = "flaky"
+
+        def __init__(self):
+            super().__init__()
+            self.fail_next = False
+
+        def infer(self, batch):
+            if self.fail_next:
+                self.fail_next = False
+                raise RuntimeError("transient device error")
+            return super().infer(batch)
+
+    ok, flaky = StubEngine(), FailingEngine()
+    eng = StreamEngine(engines=[ok, flaky], max_streams=1)
+    eng.submit("a", object(), modality="stub")
+    eng.submit("b", object(), modality="flaky")
+    flaky.fail_next = True
+    with pytest.raises(RuntimeError):
+        eng.step()
+    # Nothing consumed, stats untouched, both windows still queued.
+    assert eng.pending() == 2
+    assert eng.stats["windows"] == 0 and eng.stats["steps"] == 0
+    assert eng.stream_stats["a"].windows == 0
+    assert eng.stream_stats["a"].queued == 1
+    # Retry serves both.
+    out = eng.step()
+    assert {(r.stream_id, r.seq) for r in out} == {("a", 0), ("b", 0)}
+    assert eng.pending() == 0
+
+
+def test_deadline_policy_validates_args():
+    with pytest.raises(ValueError):
+        DeadlinePolicy(aging=-1.0)
+    with pytest.raises(ValueError):
+        DeadlinePolicy(max_wait=0)
+    with pytest.raises(ValueError):
+        FairQuantumPolicy(fair_quantum=0)
+
+
+def test_custom_policy_pluggable():
+    """Any SlotPolicy subclass drops in: a strict round-robin that
+    re-queues the stream after every single window."""
+
+    class RoundRobin(FairQuantumPolicy):
+        def __init__(self):
+            super().__init__(fair_quantum=1)
+
+    eng = _stub_engine(1, policy=RoundRobin())
+    for k in range(2):
+        for s in range(3):
+            eng.submit(f"s{s}", object())
+    order = [r.stream_id for r in eng.run()]
+    assert order == ["s0", "s1", "s2", "s0", "s1", "s2"]
+    assert isinstance(eng.policy, SlotPolicy)

@@ -319,3 +319,134 @@ def test_stream_engine_rejects_mixed_durations(cfg, params):
                                       height=32, width=32)
     with pytest.raises(ValueError):
         eng.submit("b", bad)
+
+
+def test_stream_engine_duration_us_ctor_arg(cfg, params):
+    """The bin width can be pinned at construction: submits are validated
+    against it from the very first window (no latch-by-accident)."""
+    eng = StreamEngine(params, cfg, max_streams=2, duration_us=150_000)
+    rng = np.random.default_rng(61)
+    w300 = ev.synthetic_gesture_events(rng, 0, mean_events=1500,
+                                       height=32, width=32)  # 300 ms
+    with pytest.raises(ValueError):
+        eng.submit("a", w300)
+    assert eng.pending() == 0           # rejected submit left no state
+    assert "a" not in eng.stream_stats
+    w150 = ev.synthetic_gesture_events(rng, 0, mean_events=1500,
+                                       duration_us=150_000,
+                                       height=32, width=32)
+    eng.submit("a", w150)
+    assert len(eng.run()) == 1
+
+
+def test_stream_result_seq_is_submission_seq(cfg, params):
+    """StreamResult.seq must be the sequence number submit() returned --
+    not re-derived from completion counts -- and a rejected submit must
+    not burn a sequence number."""
+    eng = StreamEngine(params, cfg, max_streams=2)
+    rng = np.random.default_rng(62)
+    mk = lambda lbl, dur=300_000: ev.synthetic_gesture_events(
+        rng, lbl, mean_events=1500, duration_us=dur, height=32, width=32)
+    returned = {}
+    returned[("a", 0)] = eng.submit("a", mk(0))
+    returned[("b", 0)] = eng.submit("b", mk(1))
+    # A rejected submit in the middle: wrong bin width.
+    with pytest.raises(ValueError):
+        eng.submit("a", mk(2, dur=150_000))
+    returned[("a", 1)] = eng.submit("a", mk(3))
+    assert returned == {("a", 0): 0, ("b", 0): 0, ("a", 1): 1}
+    got = {(r.stream_id, r.seq) for r in eng.run()}
+    assert got == set(returned)
+    # The next submit continues the per-stream numbering contiguously.
+    assert eng.submit("a", mk(4)) == 2
+
+
+@pytest.mark.parametrize("slots", [1, 4, 7])
+def test_stream_engine_parity_across_slot_counts(cfg, params, slots):
+    """Redesigned engine-agnostic StreamEngine: event results stay bitwise
+    identical to the single-window ClosedLoopPipeline at B in {1, 4, 7}."""
+    eng = StreamEngine(params, cfg, max_streams=slots)
+    rng = np.random.default_rng(80 + slots)
+    windows = {}
+    for s in range(slots):
+        w = ev.synthetic_gesture_events(rng, s % 11,
+                                        mean_events=2000 + 700 * s,
+                                        height=32, width=32)
+        eng.submit(f"cam{s}", w)
+        windows[f"cam{s}"] = w
+    results = eng.run()
+    assert len(results) == slots
+    pipe = ClosedLoopPipeline(params, cfg)
+    for r in results:
+        assert r.modality == "event"
+        ref = pipe(windows[r.stream_id])
+        np.testing.assert_array_equal(ref.label_pred, r.result.label_pred)
+        np.testing.assert_array_equal(ref.pwm, r.result.pwm)
+        assert ref.energy_mj == r.result.energy_mj
+        assert ref.latency_ms == r.result.latency_ms
+        _assert_same_breakdown(ref.breakdown, r.result.breakdown)
+
+
+# -- heterogeneous (event + frame) serving ----------------------------------
+
+def test_mixed_modality_step_serves_both_engines(cfg, params):
+    """One step() serves event and frame streams together -- one jit'd
+    call per engine -- with per-stream Kraken breakdowns from each wing,
+    and the event results still bitwise-match the single-window loop."""
+    from repro.core import FrameTCNEngine, TCNConfig, init_tcn
+    from repro.core import frames as fr
+    from repro.core.pipeline import BatchedClosedLoop
+
+    tcfg = TCNConfig(height=32, width=32, conv1_features=4,
+                     conv2_features=8, hidden=32, num_classes=11)
+    ev_eng = BatchedClosedLoop(params, cfg)
+    fr_eng = FrameTCNEngine(init_tcn(jax.random.PRNGKey(2), tcfg), tcfg)
+    eng = StreamEngine(engines=[ev_eng, fr_eng],
+                       max_streams={"event": 2, "frame": 2})
+    rng = np.random.default_rng(90)
+    w = {s: ev.synthetic_gesture_events(rng, s, mean_events=1800,
+                                        height=32, width=32)
+         for s in range(2)}
+    f = {s: fr.synthetic_gesture_frames(rng, s, height=32, width=32)
+         for s in range(2)}
+    for s in range(2):
+        eng.submit(f"dvs{s}", w[s], modality="event")
+        eng.submit(f"cam{s}", f[s], modality="frame")
+
+    out = eng.step()
+    assert {(r.stream_id, r.modality) for r in out} == {
+        ("dvs0", "event"), ("dvs1", "event"),
+        ("cam0", "frame"), ("cam1", "frame")}
+    assert eng.pending() == 0
+    by_id = {r.stream_id: r.result for r in out}
+    # Per-engine Kraken accounting: SNE wing vs CUTIE wing stage sets.
+    assert "snn_inference" in by_id["dvs0"].breakdown["stages"]
+    assert "tcn_inference" in by_id["cam0"].breakdown["stages"]
+    assert by_id["cam0"].breakdown["stages"]["tcn_inference"]["domain"] \
+        == "cutie"
+    # Event wing unchanged by riding next to a frame engine.
+    pipe = ClosedLoopPipeline(params, cfg)
+    for s in range(2):
+        ref = pipe(w[s])
+        np.testing.assert_array_equal(ref.pwm, by_id[f"dvs{s}"].pwm)
+        assert ref.energy_mj == by_id[f"dvs{s}"].energy_mj
+    # Per-stream stats accumulated for both modalities.
+    assert eng.stream_stats["cam0"].energy_mj > 0
+    assert eng.stream_stats["dvs0"].energy_mj > 0
+    # A stream cannot switch modality.
+    with pytest.raises(ValueError):
+        eng.submit("dvs0", f[0], modality="frame")
+    # New streams need an explicit modality when engines are plural.
+    with pytest.raises(ValueError):
+        eng.submit("new", w[0])
+
+
+def test_engines_and_params_mutually_exclusive(cfg, params):
+    from repro.core.pipeline import BatchedClosedLoop
+    with pytest.raises(ValueError):
+        StreamEngine(params, cfg, engines=[BatchedClosedLoop(params, cfg)])
+    with pytest.raises(ValueError):
+        StreamEngine()
+    with pytest.raises(ValueError):
+        StreamEngine(engines=[BatchedClosedLoop(params, cfg),
+                              BatchedClosedLoop(params, cfg)])  # dup modality

@@ -1,0 +1,81 @@
+"""Bench-regression gate: compare a fresh ``BENCH_stream.json`` against
+the committed ``BENCH_baseline.json``.
+
+Fails (exit 1) when the batched closed-loop throughput at the gated
+batch size drops below ``tolerance`` x the committed baseline value.
+Wall-clock numbers move with the runner, so two escape hatches keep the
+gate honest about *code* regressions rather than machine speed:
+
+  * the tolerance is deliberately loose (default 0.8x; per-row
+    medians-of-5 with interleaved sampling keep the artifacts stable);
+  * when the absolute floor is missed, the *batched-vs-looped speedup*
+    ratio -- runner-independent, since a slower machine slows both
+    sides -- is checked against the same tolerance; a uniformly slower
+    runner passes with a warning, a genuine relative regression fails.
+
+Usage (CI runs exactly this, after ``benchmarks.kernel_bench``):
+
+    PYTHONPATH=src python -m benchmarks.check_regression
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _row(doc: dict, batch_size: int) -> dict:
+    for row in doc.get("rows", []):
+        if row.get("batch_size") == batch_size:
+            return row
+    raise SystemExit(
+        f"no batch_size={batch_size} row in {sorted(r.get('batch_size') for r in doc.get('rows', []))}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="BENCH_baseline.json",
+                    help="committed baseline artifact")
+    ap.add_argument("--fresh", default="BENCH_stream.json",
+                    help="freshly generated artifact to check")
+    ap.add_argument("--batch-size", type=int, default=4,
+                    help="gated batch size row")
+    ap.add_argument("--tolerance", type=float, default=0.8,
+                    help="fresh must be >= tolerance * baseline")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = _row(json.load(f), args.batch_size)
+    with open(args.fresh) as f:
+        fresh = _row(json.load(f), args.batch_size)
+
+    base_wps = float(base["batched_windows_per_s"])
+    fresh_wps = float(fresh["batched_windows_per_s"])
+    base_ratio = float(base["speedup"])
+    fresh_ratio = float(fresh["speedup"])
+    floor = args.tolerance * base_wps
+    ratio_floor = args.tolerance * base_ratio
+    print(f"batched windows/s @ B={args.batch_size}: "
+          f"baseline={base_wps:.1f}  fresh={fresh_wps:.1f}  "
+          f"floor={floor:.1f} ({args.tolerance:.2f}x)")
+    print(f"batched-vs-looped speedup: baseline={base_ratio:.2f}x  "
+          f"fresh={fresh_ratio:.2f}x  floor={ratio_floor:.2f}x")
+
+    if fresh_wps >= floor:
+        print("OK: no batched-throughput regression")
+        return 0
+    if fresh_ratio >= ratio_floor:
+        print(f"WARN: absolute throughput below floor ({fresh_wps:.1f} < "
+              f"{floor:.1f} windows/s) but the runner-independent "
+              f"batched-vs-looped speedup holds ({fresh_ratio:.2f}x >= "
+              f"{ratio_floor:.2f}x) -- slower machine, not a code "
+              f"regression")
+        return 0
+    print(f"FAIL: fresh {fresh_wps:.1f} < floor {floor:.1f} windows/s "
+          f"AND speedup {fresh_ratio:.2f}x < {ratio_floor:.2f}x -- "
+          f"batched path regressed")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,6 +21,20 @@ that lets the serving layer treat both wings uniformly:
                                  many distinct executables a workload
                                  compiles).
 
+Optional extensions (duck-typed -- the serving layer probes with
+``getattr`` so third-party engines implementing only the base protocol
+still plug in unchanged):
+
+  * ``infer_dispatch(batch)`` / ``infer_collect(pending)`` -- the async
+    split of ``infer``: dispatch launches the jit'd call and returns an
+    opaque pending handle WITHOUT blocking on the device; collect blocks
+    and turns the handle into per-slot results. The pipelined
+    ``StreamEngine.step`` uses these to overlap host-side packing of
+    step k+1 with device compute of step k; engines without them are
+    served synchronously.
+  * ``warmup(shape_keys)``    -- precompile executables for a set of
+    shape keys so no window pays compile time mid-stream.
+
 Concrete engines:
 
   * :class:`~repro.core.pipeline.BatchedClosedLoop` -- the event->SNN wing
@@ -108,7 +122,8 @@ class FrameTCNEngine:
         self.window_ms = window_ms
         self.layer_macs = tcn_layer_macs(cfg)
         self.total_macs = float(sum(self.layer_macs))
-        self._fused: Dict[Tuple[int, ...], Callable] = {}
+        # Explicit executable cache: shape_key -> AOT-compiled callable.
+        self._exe: Dict[Tuple[int, ...], Callable] = {}
 
     # -- protocol --------------------------------------------------------
 
@@ -133,9 +148,13 @@ class FrameTCNEngine:
     def shape_key(self, batch: fr.PaddedFrameBatch) -> Hashable:
         return (batch.batch_size, *batch.frame_shape, batch.duration_us)
 
-    def _fused_fn(self, shape: Tuple[int, ...]) -> Callable:
-        fn = self._fused.get(shape)
-        if fn is None:
+    def _executable(self, key: Tuple[int, ...]) -> Callable:
+        """AOT-compile (once) and return the executable for a shape key,
+        ``(batch_size, height, width, duration_us)`` -- compilation is
+        eager so :meth:`warmup` can pull it off the serving path."""
+        exe = self._exe.get(key)
+        if exe is None:
+            b, h, w = int(key[0]), int(key[1]), int(key[2])
             cfg = self.cfg
 
             def run(packed, pixels):
@@ -144,13 +163,48 @@ class FrameTCNEngine:
                 return (jnp.argmax(logits, -1), pwm_from_logits(logits),
                         out["activity_per_stream"])
 
-            fn = self._fused[shape] = jax.jit(run)
-        return fn
+            px_abs = jax.ShapeDtypeStruct((b, h, w, 1), jnp.float32)
+            pk_abs = jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct(jnp.shape(a),
+                                               jnp.asarray(a).dtype),
+                self.packed)
+            exe = jax.jit(run).lower(pk_abs, px_abs).compile()
+            self._exe[key] = exe
+        return exe
 
-    def infer(self, batch: fr.PaddedFrameBatch
-              ) -> List[Optional[ClosedLoopResult]]:
-        fn = self._fused_fn(batch.pixels.shape)
-        preds, pwm, activity = fn(self.packed, jnp.asarray(batch.pixels))
+    def warmup(self, shape_keys) -> None:
+        """Precompile executables for ``(batch_size, height, width[,
+        duration_us])`` shape keys (duration is not part of the compiled
+        shape for dense frames; it is accepted for symmetry with
+        ``shape_key``)."""
+        for key in shape_keys:
+            key = tuple(key)
+            if len(key) == 3:
+                key = (*key, self.duration_us)
+            if len(key) != 4:
+                raise ValueError(
+                    f"shape key must be (batch, height, width[, "
+                    f"duration_us]), got {key}")
+            if (key[1], key[2]) != (self.cfg.height, self.cfg.width):
+                raise ValueError(
+                    f"shape key geometry {key[1:3]} != engine geometry "
+                    f"({self.cfg.height}, {self.cfg.width})")
+            self._executable(key)
+
+    def compiled_shape_keys(self) -> set:
+        """Shape keys with a compiled executable (stepped or warmed)."""
+        return set(self._exe)
+
+    def infer_dispatch(self, batch: fr.PaddedFrameBatch):
+        """Launch the jit'd call without host sync; see
+        :meth:`BatchedClosedLoop.infer_dispatch`."""
+        exe = self._executable(self.shape_key(batch))
+        preds, pwm, activity = exe(self.packed, jnp.asarray(batch.pixels))
+        return (batch, preds, pwm, activity)
+
+    def infer_collect(self, pending) -> List[Optional[ClosedLoopResult]]:
+        """Fetch a dispatched batch's outputs and account each slot."""
+        batch, preds, pwm, activity = pending
         preds = np.asarray(preds)
         pwm = np.asarray(pwm)
         activity = {k: np.asarray(v) for k, v in activity.items()}
@@ -179,6 +233,11 @@ class FrameTCNEngine:
                 sustained_rate_hz=1000.0 / period_ms,
             ))
         return results
+
+    def infer(self, batch: fr.PaddedFrameBatch
+              ) -> List[Optional[ClosedLoopResult]]:
+        """Synchronous convenience: dispatch + collect back to back."""
+        return self.infer_collect(self.infer_dispatch(batch))
 
     def infer_frames(self, frames: Sequence[Optional[fr.FrameWindow]], *,
                      batch_size: Optional[int] = None,

@@ -98,10 +98,21 @@ def lif_scan_reference(
     Returns:
       (spikes, v_final): spikes has the same shape as ``currents``;
       v_final the final membrane state.
+
+    Stateful-streaming contract: the initial spike state is the one
+    *implied* by the membrane, ``s0 = (v0 >= v_th)`` -- ``v_final`` is
+    returned pre-reset, so a caller chaining windows via
+    ``v0=v_final`` gets exactly the uninterrupted scan
+    (``scan(cur[:k]) ++ scan(cur[k:], v0=v_fin)`` == ``scan(cur)``,
+    bitwise). This matches the Pallas kernel and ``lif_scan_ref``, whose
+    reset masks are computed from the carried membrane directly.
     """
     if v0 is None:
         v0 = jnp.zeros(currents.shape[1:], jnp.float32)
-    s0 = jnp.zeros(currents.shape[1:], currents.dtype)
+        s0 = jnp.zeros(currents.shape[1:], currents.dtype)
+    else:
+        s0 = spike_surrogate(v0.astype(jnp.float32), jnp.float32(p.v_th),
+                             p.surrogate_width).astype(currents.dtype)
 
     def step(carry, i_t):
         v, s = carry

@@ -89,17 +89,28 @@ class BatchedClosedLoop:
     true event count and firing rates. Empty batch slots (zero valid
     events) flow through the same computation and yield ``None`` results.
 
-    jit shapes are keyed by ``(batch_size, max_events, duration_us)``;
-    callers that keep those fixed (the streaming engine's slot buffers, or
-    the B=1 wrapper's power-of-two event buckets) compile once.
+    Executables are cached explicitly per ``shape_key`` --
+    ``(batch_size, max_events, duration_us)`` -- via the jax AOT API:
+    :meth:`warmup` precompiles a set of keys up front so the first window
+    of a new event-count bucket never pays compile time mid-stream, and
+    :meth:`compiled_shape_keys` exposes what the cache holds. Callers that
+    keep shapes fixed (the streaming engine's slot buffers, or the B=1
+    wrapper's power-of-two event buckets) compile once per bucket.
 
     This is the event wing of the :class:`~repro.core.engine.
     InferenceEngine` protocol: ``validate``/``prepare``/``infer``/
     ``shape_key`` below are what the engine-agnostic
-    :class:`~repro.serving.stream.StreamEngine` drives. ``duration_us``
-    is the one-bin-width-per-engine contract: all windows served by one
-    engine share a bin width (pass it at construction to pin it, or leave
+    :class:`~repro.serving.stream.StreamEngine` drives (plus the optional
+    ``infer_dispatch``/``infer_collect`` split it uses to pipeline device
+    compute against host packing). ``duration_us`` is the
+    one-bin-width-per-engine contract: all windows served by one engine
+    share a bin width (pass it at construction to pin it, or leave
     ``None`` to latch it from the first validated window).
+
+    ``fuse_fc=True`` routes the fc1/fc2 layers through the fused
+    synapse+LIF Pallas kernel (``kernels/fc_lif_scan.py``): their
+    synaptic-current tensors never round-trip HBM, with bitwise-identical
+    results to the unfused path.
     """
 
     modality = "event"
@@ -113,12 +124,14 @@ class BatchedClosedLoop:
         lif_scan_fn: Optional[Callable] = None,
         window_ms: float = 300.0,
         duration_us: Optional[int] = None,
+        fuse_fc: bool = False,
     ):
         self.params = params
         self.cfg = cfg
         self.model = model or KrakenModel()
         self.window_ms = window_ms
         self.duration_us = duration_us
+        self.fuse_fc = fuse_fc
         sizes = cfg.spatial_sizes()
         # SNE executes conv1/conv2/fc1/fc2; tile plans sized by each layer's
         # output volume against SNE's neuron capacity.
@@ -134,7 +147,8 @@ class BatchedClosedLoop:
             float(cfg.num_classes),
         )
         self._lif_scan_fn = lif_scan_fn
-        self._fused: Dict[int, Callable] = {}   # duration_us -> jit'd fn
+        # Explicit executable cache: shape_key -> AOT-compiled callable.
+        self._exe: Dict[Any, Callable] = {}
 
     # -- InferenceEngine protocol ----------------------------------------
 
@@ -164,26 +178,71 @@ class BatchedClosedLoop:
     def shape_key(self, batch: ev.PaddedEventBatch):
         return (batch.batch_size, batch.max_events, batch.duration_us)
 
-    def _fused_fn(self, duration_us: int) -> Callable:
-        """Voxelize + infer + readout for one window duration, jit'd once."""
-        fn = self._fused.get(duration_us)
-        if fn is None:
-            cfg, scan = self.cfg, self._lif_scan_fn
+    def _build_run(self, duration_us: int) -> Callable:
+        """Voxelize + infer + readout for one window duration (unjitted)."""
+        cfg, scan, fuse = self.cfg, self._lif_scan_fn, self.fuse_fc
 
-            def run(params, x, y, t, p, valid):
-                vox = ev.voxelize_batch(
-                    x, y, t, p, valid, duration_us=duration_us,
-                    time_bins=cfg.time_bins, height=cfg.height,
-                    width=cfg.width,
-                )
-                out = snn_apply(params, vox, cfg, mode="layer_serial",
-                                lif_scan_fn=scan)
-                logits = snn_logits(out, cfg) * 10.0
-                return (jnp.argmax(logits, -1), pwm_from_logits(logits),
-                        out["firing_rates_per_stream"])
+        def run(params, x, y, t, p, valid):
+            vox = ev.voxelize_batch(
+                x, y, t, p, valid, duration_us=duration_us,
+                time_bins=cfg.time_bins, height=cfg.height,
+                width=cfg.width,
+            )
+            out = snn_apply(params, vox, cfg, mode="layer_serial",
+                            lif_scan_fn=scan, fuse_fc=fuse)
+            logits = snn_logits(out, cfg) * 10.0
+            return (jnp.argmax(logits, -1), pwm_from_logits(logits),
+                    out["firing_rates_per_stream"])
 
-            fn = self._fused[duration_us] = jax.jit(run)
-        return fn
+        return run
+
+    def _executable(self, key) -> Callable:
+        """AOT-compile (once) and return the executable for a shape key.
+
+        ``key`` is ``(batch_size, max_events, duration_us)``. Compilation
+        happens eagerly here -- not lazily inside jit on first call -- so
+        :meth:`warmup` can pull the cost off the serving critical path.
+        """
+        exe = self._exe.get(key)
+        if exe is None:
+            b, n_ev, duration_us = key
+            ev_i32 = jax.ShapeDtypeStruct((b, n_ev), jnp.int32)
+            ev_bool = jax.ShapeDtypeStruct((b, n_ev), jnp.bool_)
+            p_abs = jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct(jnp.shape(a),
+                                               jnp.asarray(a).dtype),
+                self.params)
+            exe = jax.jit(self._build_run(int(duration_us))).lower(
+                p_abs, ev_i32, ev_i32, ev_i32, ev_i32, ev_bool).compile()
+            self._exe[key] = exe
+        return exe
+
+    def warmup(self, shape_keys) -> None:
+        """Precompile executables for the given shape keys.
+
+        Each key is ``(batch_size, max_events, duration_us)``; a 2-tuple
+        ``(batch_size, max_events)`` uses the engine's latched
+        ``duration_us``. Call before serving so no window pays compile
+        time mid-stream (``StreamEngine.warmup`` forwards here).
+        """
+        for key in shape_keys:
+            key = tuple(key)
+            if len(key) == 2:
+                if self.duration_us is None:
+                    raise ValueError(
+                        "2-tuple shape key needs a latched duration_us; "
+                        "pass (batch, max_events, duration_us) or pin "
+                        "duration_us at construction")
+                key = (*key, self.duration_us)
+            if len(key) != 3:
+                raise ValueError(
+                    f"shape key must be (batch_size, max_events[, "
+                    f"duration_us]), got {key}")
+            self._executable(key)
+
+    def compiled_shape_keys(self) -> set:
+        """Shape keys with a compiled executable (stepped or warmed)."""
+        return set(self._exe)
 
     def _account(self, num_events: int,
                  rates: Dict[str, float]) -> Dict[str, Any]:
@@ -205,15 +264,30 @@ class BatchedClosedLoop:
             layer_passes=[p.passes for p in self.plans],
         )
 
-    def infer(self, batch: ev.PaddedEventBatch
-              ) -> List[Optional[ClosedLoopResult]]:
-        """Run a padded batch; returns one result per slot (None if empty)."""
-        fn = self._fused_fn(batch.duration_us)
-        preds, pwm, rates_ps = fn(
+    def infer_dispatch(self, batch: ev.PaddedEventBatch):
+        """Launch the jit'd call for a padded batch WITHOUT host sync.
+
+        Returns an opaque pending handle for :meth:`infer_collect`. The
+        device arrays inside are jax futures (async dispatch): the caller
+        can keep packing the next batch on the host while the device
+        computes this one -- the overlap the pipelined
+        ``StreamEngine.step`` exploits.
+        """
+        exe = self._executable(self.shape_key(batch))
+        preds, pwm, rates_ps = exe(
             self.params, jnp.asarray(batch.x), jnp.asarray(batch.y),
             jnp.asarray(batch.t), jnp.asarray(batch.p),
             jnp.asarray(batch.valid),
         )
+        return (batch, preds, pwm, rates_ps)
+
+    def infer_collect(self, pending) -> List[Optional[ClosedLoopResult]]:
+        """Fetch a dispatched batch's outputs and account each stream.
+
+        This is the only point that blocks on the device (the implicit
+        ``np.asarray`` device-to-host copies).
+        """
+        batch, preds, pwm, rates_ps = pending
         preds = np.asarray(preds)
         pwm = np.asarray(pwm)
         rates_ps = {k: np.asarray(v) for k, v in rates_ps.items()}
@@ -245,6 +319,14 @@ class BatchedClosedLoop:
                 sustained_rate_hz=1000.0 / period_ms,
             ))
         return results
+
+    def infer(self, batch: ev.PaddedEventBatch
+              ) -> List[Optional[ClosedLoopResult]]:
+        """Run a padded batch; returns one result per slot (None if empty).
+
+        Synchronous convenience: dispatch + collect back to back.
+        """
+        return self.infer_collect(self.infer_dispatch(batch))
 
     def infer_windows(self, windows: Sequence[Optional[ev.EventWindow]],
                       *, max_events: Optional[int] = None,
@@ -279,10 +361,11 @@ class ClosedLoopPipeline:
         model: Optional[KrakenModel] = None,
         lif_scan_fn: Optional[Callable] = None,
         window_ms: float = 300.0,
+        fuse_fc: bool = False,
     ):
         self.batched = BatchedClosedLoop(
             params, cfg, model=model, lif_scan_fn=lif_scan_fn,
-            window_ms=window_ms)
+            window_ms=window_ms, fuse_fc=fuse_fc)
 
     # Backwards-compatible attribute surface (pre-batched callers).
     params = property(lambda self: self.batched.params)

@@ -146,6 +146,8 @@ def snn_apply(
     *,
     mode: str = "time_serial",
     lif_scan_fn=None,
+    fuse_fc: bool = False,
+    fc_lif_scan_fn=None,
 ) -> Dict[str, jnp.ndarray]:
     """Run the SCNN on a voxelized spike batch.
 
@@ -156,6 +158,14 @@ def snn_apply(
       lif_scan_fn: optional fused scan ``f(currents_T_first, LIFParams) ->
         (spikes, v_final)`` used in layer_serial mode (e.g. the Pallas
         kernel); defaults to the pure-jnp reference.
+      fuse_fc: layer_serial only -- run fc1/fc2 through the fused
+        synapse+LIF Pallas kernel (one launch computes ``spikes @ W`` and
+        the LIF update; the (T, B, N) current tensors never reach HBM).
+        Bitwise-identical to the unfused path (pinned by tests at
+        B in {1, 4, 8}).
+      fc_lif_scan_fn: optional override for the fused fc scan,
+        ``f(spikes_T_first, W, LIFParams) -> (spikes, v_final)``;
+        defaults to :func:`repro.kernels.ops.fc_lif_scan`.
 
     Returns:
       dict with ``out_spikes`` (B, T, num_classes), ``out_membrane``
@@ -163,6 +173,8 @@ def snn_apply(
       rates, and ``firing_rates_per_stream`` -- per-layer (B,) rates so
       the batched closed loop can drive the energy model per stream.
     """
+    if fuse_fc and mode != "layer_serial":
+        raise ValueError(f"fuse_fc requires mode='layer_serial', got {mode!r}")
     b, t = vox.shape[0], vox.shape[1]
     x = jnp.transpose(vox, (1, 0, 3, 4, 2))  # (T, B, H, W, C)
     i1, i2, i3, i4 = _currents_fn(params, cfg)
@@ -209,10 +221,26 @@ def snn_apply(
         s1, _ = scan(c1, lif)
         c2 = jax.vmap(i2)(s1)
         s2, _ = scan(c2, lif)
-        c3 = jax.vmap(i3)(s2)
-        s3, _ = scan(c3, lif)
-        c4 = jax.vmap(i4)(s3)
-        s4, _ = scan(c4, lif)
+        if fuse_fc:
+            fc_scan = fc_lif_scan_fn
+            if fc_scan is None:
+                # Lazy import: core -> kernels only on the fused path.
+                from repro.kernels.ops import fc_lif_scan as fc_scan
+            # Pool+flatten stays outside the kernel (cheap, bandwidth-
+            # bound); the matmul+LIF of fc1/fc2 fuse into one launch
+            # each, so their (T, B, N) current tensors never reach HBM.
+            def pool_flat(s_t):
+                pooled = _avg_pool(s_t, 2)
+                return pooled.reshape(pooled.shape[0], -1)
+
+            z = jax.vmap(pool_flat)(s2)       # (T, B, flat_dim)
+            s3, _ = fc_scan(z, params["fc1"]["w"], lif)
+            s4, _ = fc_scan(s3, params["fc2"]["w"], lif)
+        else:
+            c3 = jax.vmap(i3)(s2)
+            s3, _ = scan(c3, lif)
+            c4 = jax.vmap(i4)(s3)
+            s4, _ = scan(c4, lif)
         out_spikes = jnp.transpose(s4, (1, 0, 2))
         out_membrane = jnp.zeros_like(out_spikes)  # not tracked in this mode
         # Layer outputs are (T, B, ...): batch axis 1.

@@ -51,18 +51,33 @@ def choose_blocks(
     This is the SNE capacity computation with VMEM bytes as the capacity
     (cf. ``repro.core.tiling.plan_layer_tiles(capacity_kind='vmem_bytes')``):
     per neuron-row tile we hold block_t rows of currents and spikes plus
-    three f32 state planes.
+    three f32 state planes. The preferred block_t floor of 8 (sublane
+    efficiency) is honoured only while it fits: with a tiny budget
+    block_t is clamped down to what the budget allows (>= 1), and a
+    budget too small for even a (block_t=1, block_r=8) tile raises
+    rather than silently overcommitting VMEM.
     """
     esize = jnp.dtype(dtype).itemsize
     block_r = min(r, 64)  # 64*128 f32 state = 32 KiB; >=8 sublanes
     while True:
         state_bytes = 3 * 4 * block_r * LANES
         per_t = 2 * esize * block_r * LANES
-        block_t = max((vmem_budget - state_bytes) // per_t, 8)
-        block_t = int(min(block_t, t))
-        if state_bytes + block_t * per_t <= vmem_budget or block_r == 8:
+        fit_t = (vmem_budget - state_bytes) // per_t  # may be <= 0
+        block_t = int(min(max(fit_t, 8), t))
+        if state_bytes + block_t * per_t <= vmem_budget:
             return block_t, block_r
-        block_r //= 2
+        if block_r > 8:
+            block_r //= 2
+            continue
+        # Smallest row tile: clamp block_t below the sublane floor
+        # instead of exceeding the budget.
+        if fit_t >= 1:
+            return int(min(fit_t, t)), block_r
+        raise ValueError(
+            f"vmem_budget={vmem_budget} too small for the LIF scan: one "
+            f"(block_t=1, block_r=8) tile needs "
+            f"{state_bytes + per_t} bytes "
+            f"({state_bytes} state + {per_t} per timestep)")
 
 
 def _kernel(cur_ref, v0_ref, spk_ref, vfin_ref, v_scr,

@@ -1,6 +1,8 @@
 """Jit'd public wrappers around the Pallas kernels.
 
 ``lif_scan``       -- differentiable fused LIF scan (STBP surrogate VJP).
+``fc_lif_scan``    -- differentiable fused synapse(matmul)+LIF scan for
+                      the fully-connected layers (currents never hit HBM).
 ``ternary_matmul`` -- packed-ternary GEMM (serving path, fwd-only).
 ``pack_ternary_weights`` -- float weights -> (packed uint8, scale) in the
                             kernel's (K//4, N) layout.
@@ -15,11 +17,12 @@ import jax.numpy as jnp
 
 from repro.core.lif import LIFParams, lif_scan_reference
 from repro.core.ternary import pack2bit, ternarize
+from repro.kernels.fc_lif_scan import fc_lif_scan_pallas
 from repro.kernels.lif_scan import lif_scan_pallas, lif_scan_pallas_batched
 from repro.kernels.ternary_matmul import ternary_matmul_pallas
 
-__all__ = ["lif_scan", "lif_scan_batched", "ternary_matmul",
-           "pack_ternary_weights"]
+__all__ = ["lif_scan", "lif_scan_batched", "fc_lif_scan",
+           "fc_lif_scan_batched", "ternary_matmul", "pack_ternary_weights"]
 
 
 # ----------------------------------------------------------------------
@@ -107,6 +110,77 @@ def lif_scan_batched(
         v0 = jnp.zeros((currents.shape[0], *currents.shape[2:]),
                        currents.dtype)
     return _lif_scan_batched_cv(currents, v0, p)
+
+
+# ----------------------------------------------------------------------
+# Fused synapse+LIF scan for the fully-connected layers: the matmul and
+# the LIF update share one Pallas launch (currents never touch HBM).
+# Backward recomputes through the matmul + reference scan (same remat
+# policy as lif_scan; forward values are bit-identical to unfused).
+# ----------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _fc_lif_scan_cv(spikes, w, v0, p: LIFParams):
+    return fc_lif_scan_pallas(spikes, w, p, v0)
+
+
+def _fc_fwd(spikes, w, v0, p):
+    return _fc_lif_scan_cv(spikes, w, v0, p), (spikes, w, v0)
+
+
+def _fc_bwd(p, res, cotangents):
+    spikes, w, v0 = res
+
+    def ref(s, w_, v):
+        return lif_scan_reference(jnp.matmul(s, w_), p, v)
+
+    _, vjp = jax.vjp(ref, spikes, w, v0)
+    return vjp(cotangents)
+
+
+_fc_lif_scan_cv.defvjp(_fc_fwd, _fc_bwd)
+
+
+def fc_lif_scan(
+    spikes: jnp.ndarray,
+    w: jnp.ndarray,
+    p: LIFParams = LIFParams(),
+    v0: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused ``spikes @ w`` + LIF scan -> (out_spikes, v_final).
+
+    Drop-in for ``lif_scan_reference(spikes @ w, p, v0)`` (bitwise-equal
+    forward, same STBP surrogate gradients) with the synaptic matmul and
+    the temporal scan fused into one Pallas launch: weights and membrane
+    stay VMEM-resident, the (T, B, N) current tensor never exists in HBM
+    (see ``kernels/fc_lif_scan.py``).
+
+    ``spikes``: (T, B, K) or (T, K); ``w``: (K, N); ``v0``: (B, N)/(N,).
+    """
+    if v0 is None:
+        shape = ((spikes.shape[1], w.shape[1]) if spikes.ndim == 3
+                 else (w.shape[1],))
+        v0 = jnp.zeros(shape, spikes.dtype)
+    return _fc_lif_scan_cv(spikes, w, v0, p)
+
+
+def fc_lif_scan_batched(
+    spikes: jnp.ndarray,
+    w: jnp.ndarray,
+    p: LIFParams = LIFParams(),
+    v0: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stream-major fused fc+LIF: (B, T, K) -> ((B, T, N), (B, N)).
+
+    The kernel is natively batched (B is its sublane axis); this wrapper
+    transposes to time-major and threads the per-stream ``v0`` -- the
+    entry point for carrying fc membrane state across a stream's windows.
+    Differentiable via the same custom VJP as :func:`fc_lif_scan`.
+    """
+    if spikes.ndim != 3:
+        raise ValueError(f"need (B, T, K) spikes, got {spikes.shape}")
+    out, v_fin = fc_lif_scan(jnp.transpose(spikes, (1, 0, 2)), w, p, v0)
+    return jnp.transpose(out, (1, 0, 2)), v_fin
 
 
 # ----------------------------------------------------------------------

@@ -40,6 +40,18 @@ one tick period). Pin it with the ``duration_us`` constructor argument --
 validated on every ``submit`` -- or leave it ``None`` to latch the first
 submitted window's duration for the engine's lifetime. There is no reset:
 construct a new engine (or pass a fresh ``engines=`` set) to change it.
+
+Pipelining (``pipeline_depth >= 1``): ``step()`` dispatches each lane's
+jit'd call asynchronously (no device sync on the critical path) and
+returns the results of the step dispatched ``pipeline_depth`` steps ago,
+so host-side window packing of step k+1 overlaps device compute of step
+k. The emitted ``StreamResult`` sequence -- order and values -- is
+bitwise identical to the synchronous engine; only *when* each result is
+handed back (and therefore the wall-clock attribution) changes. Call
+``flush()`` (or ``run()``, which drains automatically) to collect the
+tail. Trade-off vs the synchronous default: windows are consumed from
+their queues at dispatch, so a device-side failure surfaces at the later
+collect, after the batch can no longer be retried by simply re-stepping.
 """
 from __future__ import annotations
 
@@ -113,6 +125,25 @@ class _Queued:
     item: Any
     seq: int
     deadline: Optional[float] = None
+
+
+@dataclasses.dataclass
+class _InflightLane:
+    """One lane's share of a dispatched (not yet collected) step.
+
+    ``entries`` is slot-aligned: ``(stream_id, seq)`` per served slot,
+    ``None`` per empty one. ``kind`` says what ``pending`` holds:
+    ``"results"`` -- the finished per-slot results (synchronous mode,
+    where infer completes before any queue state moves -- the retry-safe
+    path); ``"handle"`` -- the engine's opaque async-dispatch handle;
+    ``"batch"`` -- a prepared batch for an engine without the async
+    split, inferred (synchronously) at collect time."""
+
+    lane: "EngineLane"
+    key: Hashable
+    entries: List[Optional[tuple]]
+    kind: str
+    pending: Any
 
 
 @dataclasses.dataclass
@@ -322,17 +353,30 @@ class StreamEngine:
         model: Optional[KrakenModel] = None,
         lif_scan_fn: Optional[Callable] = None,
         window_ms: float = 300.0,
+        fuse_fc: bool = False,
+        pipeline_depth: int = 0,
     ):
+        if pipeline_depth < 0:
+            raise ValueError(
+                f"pipeline_depth must be >= 0, got {pipeline_depth}")
+        self.pipeline_depth = pipeline_depth
+        self._inflight: Deque[List[_InflightLane]] = deque()
         if engines is None:
             if params is None or cfg is None:
                 raise ValueError("give (params, cfg) or engines=")
             engines = [BatchedClosedLoop(
                 params, cfg, model=model, lif_scan_fn=lif_scan_fn,
-                window_ms=window_ms, duration_us=duration_us)]
+                window_ms=window_ms, duration_us=duration_us,
+                fuse_fc=fuse_fc)]
         else:
             if params is not None or cfg is not None:
                 raise ValueError("(params, cfg) and engines= are "
                                  "mutually exclusive")
+            if fuse_fc:
+                raise ValueError(
+                    "fuse_fc configures the internally-built event "
+                    "engine; with engines= pass "
+                    "BatchedClosedLoop(..., fuse_fc=True) yourself")
             if isinstance(engines, Mapping):
                 engines = list(engines.values())
             elif not isinstance(engines, Sequence):
@@ -416,6 +460,35 @@ class StreamEngine:
                              f"have {sorted(self._lanes)}")
         return set(self._lanes[modality].shape_keys)
 
+    def warmup(self, shape_keys, modality: Optional[str] = None) -> None:
+        """Precompile an engine's executables for the given shape keys.
+
+        ``shape_keys`` is an iterable of the engine's ``shape_key``
+        tuples -- for the event wing ``(batch_size, max_events,
+        duration_us)``, where ``batch_size`` is normally this lane's slot
+        count and ``max_events`` a power-of-two event bucket (see
+        ``events.next_pow2``). Run it before the first ``submit`` so the
+        first window of a new event-count bucket stops paying jit compile
+        time mid-stream. ``modality`` selects the engine (optional when
+        only one is configured).
+        """
+        if modality is None:
+            if len(self._lanes) != 1:
+                raise ValueError(
+                    "modality required with multiple engines; have "
+                    f"{sorted(self._lanes)}")
+            modality = next(iter(self._lanes))
+        if modality not in self._lanes:
+            raise ValueError(f"no engine for modality {modality!r}; "
+                             f"have {sorted(self._lanes)}")
+        engine = self._lanes[modality].engine
+        warm = getattr(engine, "warmup", None)
+        if warm is None:
+            raise ValueError(
+                f"engine for modality {modality!r} "
+                f"({type(engine).__name__}) does not implement warmup()")
+        warm(shape_keys)
+
     # -- submission ------------------------------------------------------
 
     def submit(self, stream_id: Hashable, window: Any, *,
@@ -479,18 +552,59 @@ class StreamEngine:
 
     def step(self) -> List[StreamResult]:
         """Serve one batch per engine with queued work: the head window of
-        every slotted stream, one jit'd call per engine. Returns the
-        completed windows across all engines.
+        every slotted stream, one jit'd call per engine.
 
-        Retry-safe across the whole heterogeneous step: queues are only
-        peeked until EVERY engine's infer has returned, so if any engine
-        raises (transient device error, OOM) no window is consumed, no
-        stat moves, and the step can simply be retried.
+        Synchronous mode (``pipeline_depth == 0``, the default): returns
+        this step's completed windows, and is retry-safe across the whole
+        heterogeneous step -- queues are only peeked until EVERY engine's
+        infer has returned, so if any engine raises (transient device
+        error, OOM) no window is consumed, no stat moves, and the step can
+        simply be retried.
+
+        Pipelined mode (``pipeline_depth >= 1``): dispatches this step's
+        jit'd calls without blocking on the device and returns the results
+        of the step dispatched ``pipeline_depth`` steps ago (empty lists
+        while the pipeline fills; ``flush()``/``run()`` drain the tail).
+        The result sequence is bitwise identical to synchronous mode;
+        windows are consumed at dispatch, so device failures surface at
+        the later collect instead of at this call.
         """
         t0 = time.perf_counter()
-        # Phase 1: assign slots and run every lane's jit'd call, peeking
-        # (not popping) the queue heads.
-        ran = []
+        if self.pipeline_depth == 0:
+            ran = self._dispatch(eager=True)
+            if not ran:
+                return []
+            out = self._collect(ran)
+        else:
+            ran = self._dispatch(eager=False)
+            if ran:
+                self._inflight.append(ran)
+            out = []
+            while len(self._inflight) > self.pipeline_depth:
+                out.extend(self._collect(self._inflight.popleft()))
+            if not ran and self._inflight:
+                # No new work: drain one in-flight step so a caller
+                # looping on step() always makes progress.
+                out.extend(self._collect(self._inflight.popleft()))
+            if not ran and not out:
+                return []
+        # A no-op call (nothing dispatched, nothing collected) does not
+        # count as a step; a failed one raises before reaching here.
+        self.stats["steps"] += 1
+        self.stats["wall_s"] += time.perf_counter() - t0
+        return out
+
+    def _dispatch(self, *, eager: bool) -> List[_InflightLane]:
+        """Assign slots and launch every lane's jit'd call.
+
+        Phase 1 peeks the queue heads and, per lane, either runs infer to
+        completion (``eager``, the synchronous retry-safe mode: an
+        exception from ANY lane leaves every queue untouched), dispatches
+        asynchronously (pipelined, engine has the async split), or just
+        prepares the batch (pipelined fallback). Phase 2 commits the pops
+        and slot run counts only after every lane's phase 1 succeeded.
+        """
+        ran: List[_InflightLane] = []
         for lane in self._lanes.values():
             self.policy.assign(lane)
             heads = [
@@ -500,38 +614,78 @@ class StreamEngine:
             if all(w is None for w in heads):
                 continue
             batch = lane.engine.prepare(heads, batch_size=len(lane.slots))
-            ran.append((lane, heads, lane.engine.shape_key(batch),
-                        lane.engine.infer(batch)))
-        if not ran:
-            return []
-        # Phase 2: every engine succeeded -- commit pops, stats, results.
-        out: List[StreamResult] = []
-        for lane, heads, key, results in ran:
-            lane.shape_keys.add(key)
-            for slot, (w, res) in enumerate(zip(heads, results)):
-                if w is None:
+            key = lane.engine.shape_key(batch)
+            dispatch = getattr(lane.engine, "infer_dispatch", None)
+            collect = getattr(lane.engine, "infer_collect", None)
+            if eager:
+                kind, pending = "results", lane.engine.infer(batch)
+            elif dispatch is not None and collect is not None:
+                kind, pending = "handle", dispatch(batch)
+            else:
+                kind, pending = "batch", batch
+            entries = [None if w is None else slot
+                       for slot, w in enumerate(heads)]
+            ran.append(_InflightLane(
+                lane=lane, key=key, entries=entries, kind=kind,
+                pending=pending))
+        # Commit: every lane dispatched -- pop the served heads.
+        for rec in ran:
+            lane = rec.lane
+            for i, slot in enumerate(rec.entries):
+                if slot is None:
                     continue
                 sid = lane.slots[slot]
                 entry = lane.queues[sid].popleft()
                 lane.slot_runs[slot] += 1
+                self.stream_stats[sid].queued -= 1
+                rec.entries[i] = (sid, entry.seq)
+        return ran
+
+    def _collect(self, ran: List[_InflightLane]) -> List[StreamResult]:
+        """Block on a dispatched step's device results and emit them."""
+        out: List[StreamResult] = []
+        for rec in ran:
+            lane = rec.lane
+            if rec.kind == "results":
+                results = rec.pending
+            elif rec.kind == "handle":
+                results = lane.engine.infer_collect(rec.pending)
+            else:
+                results = lane.engine.infer(rec.pending)
+            lane.shape_keys.add(rec.key)
+            for slot, entry in enumerate(rec.entries):
+                if entry is None:
+                    continue
+                sid, seq = entry
+                res = results[slot]
                 st = self.stream_stats[sid]
                 st.windows += 1
-                st.queued -= 1
                 st.energy_mj += res.energy_mj
                 st.latency_ms_sum += res.latency_ms
                 st.realtime_windows += int(res.realtime)
                 out.append(StreamResult(
-                    stream_id=sid, seq=entry.seq, result=res,
+                    stream_id=sid, seq=seq, result=res,
                     modality=lane.modality))
                 self.stats["windows"] += 1
-        self.stats["steps"] += 1
-        self.stats["wall_s"] += time.perf_counter() - t0
         return out
 
-    def run(self) -> List[StreamResult]:
-        """Drain every queue; returns all results in completion order."""
+    def flush(self) -> List[StreamResult]:
+        """Collect every in-flight pipelined step (oldest first)."""
         out: List[StreamResult] = []
-        while self.pending():
+        while self._inflight:
+            out.extend(self._collect(self._inflight.popleft()))
+        return out
+
+    @property
+    def in_flight(self) -> int:
+        """Dispatched-but-uncollected pipeline steps."""
+        return len(self._inflight)
+
+    def run(self) -> List[StreamResult]:
+        """Drain every queue (and the pipeline); results in completion
+        order -- identical, order and values, for any ``pipeline_depth``."""
+        out: List[StreamResult] = []
+        while self.pending() or self._inflight:
             out.extend(self.step())
         return out
 

@@ -63,8 +63,81 @@ def test_choose_blocks_fits_budget():
         bt, br = choose_blocks(t, r, jnp.float32, vmem_budget=1 << 20)
         state = 3 * 4 * br * 128
         per_t = 2 * 4 * br * 128
-        assert state + bt * per_t <= (1 << 20) or br == 8
+        assert state + bt * per_t <= (1 << 20)
         assert bt >= 1 and br >= 1
+
+
+def test_choose_blocks_degenerate_budget_clamps_below_floor():
+    """A budget that fits block_r=8 but fewer than 8 timesteps must clamp
+    block_t below the preferred floor instead of overcommitting VMEM."""
+    state = 3 * 4 * 8 * 128           # block_r=8 state planes
+    per_t = 2 * 4 * 8 * 128           # one f32 timestep at block_r=8
+    budget = state + 3 * per_t        # room for exactly 3 timesteps
+    bt, br = choose_blocks(64, 1024, jnp.float32, vmem_budget=budget)
+    assert br == 8
+    assert bt == 3                    # clamped, NOT the 8 floor
+    assert 3 * 4 * br * 128 + bt * 2 * 4 * br * 128 <= budget
+
+
+def test_choose_blocks_impossible_budget_raises():
+    with pytest.raises(ValueError, match="vmem_budget"):
+        choose_blocks(16, 64, jnp.float32, vmem_budget=1024)
+    # And the kernel surfaces the same clear error, not a silent overrun.
+    cur = jax.random.normal(jax.random.PRNGKey(0), (16, 64 * 128))
+    with pytest.raises(ValueError, match="vmem_budget"):
+        lif_scan_pallas(cur, LIFParams(), interpret=True, vmem_budget=1024)
+
+
+# -- stateful streaming: membrane carried across T-chunk boundaries --------
+
+@pytest.mark.parametrize("t,block_t", [(16, 4), (33, 8), (12, 1), (40, 16)])
+def test_v0_carried_across_t_chunks(t, block_t):
+    """Non-zero v0 (including components above threshold) must produce the
+    oracle's trajectory for every T-chunking of the kernel grid -- the
+    prerequisite for carrying membrane state across a stream's windows."""
+    cur = jax.random.normal(jax.random.PRNGKey(t * 31 + block_t),
+                            (t, 3, 130)) * 0.8
+    v0 = jax.random.uniform(jax.random.PRNGKey(7), (3, 130)) * 1.6  # > v_th
+    p = LIFParams()
+    s_ref, v_ref = lif_scan_ref(cur, p, v0)
+    s_k, v_k = lif_scan_pallas(cur, p, v0, block_t=block_t, interpret=True)
+    np.testing.assert_array_equal(np.asarray(s_ref), np.asarray(s_k))
+    np.testing.assert_allclose(np.asarray(v_ref), np.asarray(v_k),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_window_chaining_equals_uninterrupted_scan():
+    """scan(cur[:k]) ++ scan(cur[k:], v0=v_fin) == scan(cur), bitwise, for
+    the kernel AND both oracles -- v0 >= v_th carries the implied spike
+    state, so reset-to-zero applies across the window boundary."""
+    p = LIFParams()
+    cur = jax.random.normal(jax.random.PRNGKey(5), (24, 96)) * 1.2
+    for scan in (lif_scan_ref,
+                 lif_scan_reference,
+                 lambda c, pp, v=None: lif_scan_pallas(
+                     c, pp, v, interpret=True)):
+        s_whole, v_whole = scan(cur, p)
+        s_a, v_a = scan(cur[:11], p)
+        s_b, v_b = scan(cur[11:], p, v_a)
+        np.testing.assert_array_equal(
+            np.asarray(s_whole), np.concatenate([np.asarray(s_a),
+                                                 np.asarray(s_b)]))
+        np.testing.assert_allclose(np.asarray(v_whole), np.asarray(v_b),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_reference_matches_kernel_for_above_threshold_v0():
+    """core.lif.lif_scan_reference and the kernel agree bitwise even when
+    v0 has components >= v_th (the s0-implied-by-v0 contract)."""
+    p = LIFParams(alpha=0.9, v_th=0.7)
+    cur = jax.random.normal(jax.random.PRNGKey(0), (9, 3, 50)) * 0.5
+    v0 = jax.random.uniform(jax.random.PRNGKey(1), (3, 50))  # some >= 0.7
+    assert bool((np.asarray(v0) >= 0.7).any())
+    s_ref, v_ref = lif_scan_reference(cur, p, v0)
+    s_k, v_k = lif_scan_pallas(cur, p, v0, interpret=True)
+    np.testing.assert_array_equal(np.asarray(s_ref), np.asarray(s_k))
+    np.testing.assert_allclose(np.asarray(v_ref), np.asarray(v_k),
+                               rtol=1e-6)
 
 
 def test_gradients_match_stbp_reference():

@@ -450,3 +450,123 @@ def test_engines_and_params_mutually_exclusive(cfg, params):
     with pytest.raises(ValueError):
         StreamEngine(engines=[BatchedClosedLoop(params, cfg),
                               BatchedClosedLoop(params, cfg)])  # dup modality
+
+
+# -- pipelined step + warmup ------------------------------------------------
+
+def _submit_all(eng, streams=3, per_stream=4, seed=60):
+    rng = np.random.default_rng(seed)
+    for s in range(streams):
+        for k in range(per_stream):
+            eng.submit(f"cam{s}", ev.synthetic_gesture_events(
+                rng, (s + k) % 11, mean_events=1500 + 400 * k,
+                height=32, width=32))
+    return streams * per_stream
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+@pytest.mark.parametrize("fuse_fc", [False, True])
+def test_pipelined_run_bitwise_matches_sync(cfg, params, depth, fuse_fc):
+    """Any pipeline depth (and the fused fc path) must reproduce the
+    synchronous engine's StreamResult sequence exactly -- same
+    (stream, seq) order, bitwise-equal results."""
+    sync = StreamEngine(params, cfg, max_streams=3)
+    n = _submit_all(sync)
+    ref = sync.run()
+
+    eng = StreamEngine(params, cfg, max_streams=3, pipeline_depth=depth,
+                       fuse_fc=fuse_fc)
+    _submit_all(eng)
+    got = eng.run()
+    assert eng.in_flight == 0 and eng.pending() == 0
+    assert len(got) == n
+    assert ([(r.stream_id, r.seq) for r in got]
+            == [(r.stream_id, r.seq) for r in ref])
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a.result.label_pred,
+                                      b.result.label_pred)
+        np.testing.assert_array_equal(a.result.pwm, b.result.pwm)
+        assert a.result.energy_mj == b.result.energy_mj
+
+
+def test_pipelined_step_returns_one_step_late(cfg, params):
+    eng = StreamEngine(params, cfg, max_streams=3, pipeline_depth=1)
+    _submit_all(eng, streams=3, per_stream=2)
+    assert eng.step() == []           # pipeline filling
+    assert eng.in_flight == 1
+    out = eng.step()                  # step 1's results, step 2 in flight
+    assert {r.stream_id for r in out} == {"cam0", "cam1", "cam2"}
+    assert all(r.seq == 0 for r in out)
+    tail = eng.flush()                # drain without dispatching
+    assert all(r.seq == 1 for r in tail) and len(tail) == 3
+    assert eng.in_flight == 0 and eng.pending() == 0
+    # Stats agree with what was actually served.
+    assert eng.stats["windows"] == 6
+
+
+def test_pipelined_step_drains_when_queues_empty(cfg, params):
+    """A step() with no queued work but in-flight batches must make
+    progress (collect one step) rather than spin."""
+    eng = StreamEngine(params, cfg, max_streams=2, pipeline_depth=2)
+    _submit_all(eng, streams=1, per_stream=2)
+    assert eng.step() == [] and eng.step() == []   # both windows in flight
+    assert eng.pending() == 0 and eng.in_flight == 2
+    first = eng.step()                 # no dispatch -> drain oldest
+    assert [r.seq for r in first] == [0]
+    second = eng.step()
+    assert [r.seq for r in second] == [1]
+    assert eng.step() == [] and eng.in_flight == 0
+
+
+def test_pipelined_stub_engine_without_async_split():
+    """Engines that only implement the base protocol still work under
+    pipelining (served synchronously, one step late)."""
+    from tests.test_slot_policy import StubEngine
+    eng = StreamEngine(engines=[StubEngine()], max_streams=2,
+                       pipeline_depth=1)
+    eng.submit("a", object())
+    eng.submit("b", object())
+    assert eng.step() == []
+    out = eng.run()
+    assert {(r.stream_id, r.seq) for r in out} == {("a", 0), ("b", 0)}
+
+
+def test_warmup_precompiles_shape_buckets(cfg, params):
+    eng = StreamEngine(params, cfg, max_streams=4, duration_us=300_000)
+    loop = eng.loop
+    assert loop.compiled_shape_keys() == set()
+    eng.warmup([(4, 2048, 300_000), (4, 4096, 300_000)])
+    assert loop.compiled_shape_keys() == {(4, 2048, 300_000),
+                                          (4, 4096, 300_000)}
+    # Serving a warmed bucket adds no new executable.
+    rng = np.random.default_rng(70)
+    eng.submit("a", ev.synthetic_gesture_events(rng, 0, mean_events=1800,
+                                                height=32, width=32))
+    eng.run()
+    assert loop.compiled_shape_keys() == {(4, 2048, 300_000),
+                                          (4, 4096, 300_000)}
+    assert eng.compiled_shapes() == {(4, 2048, 300_000)}
+
+
+def test_warmup_validation(cfg, params):
+    eng = StreamEngine(params, cfg, max_streams=2)
+    # No latched duration yet: a 2-tuple key cannot be resolved.
+    with pytest.raises(ValueError, match="duration"):
+        eng.warmup([(2, 2048)])
+    eng2 = StreamEngine(params, cfg, max_streams=2, duration_us=300_000)
+    eng2.warmup([(2, 2048)])          # 2-tuple uses the pinned duration
+    assert eng2.loop.compiled_shape_keys() == {(2, 2048, 300_000)}
+    from tests.test_slot_policy import StubEngine
+    stub = StreamEngine(engines=[StubEngine()], max_streams=1)
+    with pytest.raises(ValueError, match="warmup"):
+        stub.warmup([(1,)])
+
+
+def test_fuse_fc_with_engines_form_rejected(cfg, params):
+    with pytest.raises(ValueError, match="fuse_fc"):
+        StreamEngine(engines=[BatchedClosedLoop(params, cfg)], fuse_fc=True)
+
+
+def test_pipeline_depth_validation(cfg, params):
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        StreamEngine(params, cfg, pipeline_depth=-1)

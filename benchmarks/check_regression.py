@@ -13,6 +13,13 @@ gate honest about *code* regressions rather than machine speed:
     sides -- is checked against the same tolerance; a uniformly slower
     runner passes with a warning, a genuine relative regression fails.
 
+The ``stateful_rows`` cell is gated the same way: absolute stateful
+windows/s against the baseline, with the runner-independent
+stateful-vs-stateless ratio as the fallback -- plus a hard floor on that
+ratio itself (``--stateful-ratio-floor``, default 0.95): carried state
+must cost less than 5% of stateless throughput on ANY runner, since both
+sides of the ratio run on the same machine.
+
 Usage (CI runs exactly this, after ``benchmarks.kernel_bench``):
 
     PYTHONPATH=src python -m benchmarks.check_regression
@@ -24,12 +31,39 @@ import json
 import sys
 
 
-def _row(doc: dict, batch_size: int) -> dict:
-    for row in doc.get("rows", []):
+def _row(doc: dict, batch_size: int, key: str = "rows") -> dict:
+    for row in doc.get(key, []):
         if row.get("batch_size") == batch_size:
             return row
     raise SystemExit(
-        f"no batch_size={batch_size} row in {sorted(r.get('batch_size') for r in doc.get('rows', []))}")
+        f"no batch_size={batch_size} row in {key}="
+        f"{sorted(r.get('batch_size') for r in doc.get(key, []))}")
+
+
+def _gate(name: str, base_abs: float, fresh_abs: float,
+          base_ratio: float, fresh_ratio: float, ratio_name: str,
+          tolerance: float) -> bool:
+    """Absolute floor with runner-independent ratio fallback; returns
+    True when the cell passes."""
+    floor = tolerance * base_abs
+    ratio_floor = tolerance * base_ratio
+    print(f"{name}: baseline={base_abs:.1f}  fresh={fresh_abs:.1f}  "
+          f"floor={floor:.1f} ({tolerance:.2f}x)")
+    print(f"{ratio_name}: baseline={base_ratio:.2f}x  "
+          f"fresh={fresh_ratio:.2f}x  floor={ratio_floor:.2f}x")
+    if fresh_abs >= floor:
+        print(f"OK: no {name} regression")
+        return True
+    if fresh_ratio >= ratio_floor:
+        print(f"WARN: {name} below floor ({fresh_abs:.1f} < {floor:.1f}) "
+              f"but the runner-independent {ratio_name} holds "
+              f"({fresh_ratio:.2f}x >= {ratio_floor:.2f}x) -- slower "
+              f"machine, not a code regression")
+        return True
+    print(f"FAIL: {name} {fresh_abs:.1f} < floor {floor:.1f} AND "
+          f"{ratio_name} {fresh_ratio:.2f}x < {ratio_floor:.2f}x -- "
+          f"regressed")
+    return False
 
 
 def main(argv=None) -> int:
@@ -42,39 +76,61 @@ def main(argv=None) -> int:
                     help="gated batch size row")
     ap.add_argument("--tolerance", type=float, default=0.8,
                     help="fresh must be >= tolerance * baseline")
+    ap.add_argument("--stateful-ratio-floor", type=float, default=0.95,
+                    help="hard floor on fresh stateful/stateless "
+                         "throughput (runner-independent)")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
-        base = _row(json.load(f), args.batch_size)
+        base_doc = json.load(f)
     with open(args.fresh) as f:
-        fresh = _row(json.load(f), args.batch_size)
+        fresh_doc = json.load(f)
 
-    base_wps = float(base["batched_windows_per_s"])
-    fresh_wps = float(fresh["batched_windows_per_s"])
-    base_ratio = float(base["speedup"])
-    fresh_ratio = float(fresh["speedup"])
-    floor = args.tolerance * base_wps
-    ratio_floor = args.tolerance * base_ratio
-    print(f"batched windows/s @ B={args.batch_size}: "
-          f"baseline={base_wps:.1f}  fresh={fresh_wps:.1f}  "
-          f"floor={floor:.1f} ({args.tolerance:.2f}x)")
-    print(f"batched-vs-looped speedup: baseline={base_ratio:.2f}x  "
-          f"fresh={fresh_ratio:.2f}x  floor={ratio_floor:.2f}x")
+    base = _row(base_doc, args.batch_size)
+    fresh = _row(fresh_doc, args.batch_size)
+    ok = _gate(
+        f"batched windows/s @ B={args.batch_size}",
+        float(base["batched_windows_per_s"]),
+        float(fresh["batched_windows_per_s"]),
+        float(base["speedup"]), float(fresh["speedup"]),
+        "batched-vs-looped speedup", args.tolerance)
 
-    if fresh_wps >= floor:
-        print("OK: no batched-throughput regression")
-        return 0
-    if fresh_ratio >= ratio_floor:
-        print(f"WARN: absolute throughput below floor ({fresh_wps:.1f} < "
-              f"{floor:.1f} windows/s) but the runner-independent "
-              f"batched-vs-looped speedup holds ({fresh_ratio:.2f}x >= "
-              f"{ratio_floor:.2f}x) -- slower machine, not a code "
-              f"regression")
-        return 0
-    print(f"FAIL: fresh {fresh_wps:.1f} < floor {floor:.1f} windows/s "
-          f"AND speedup {fresh_ratio:.2f}x < {ratio_floor:.2f}x -- "
-          f"batched path regressed")
-    return 1
+    # The stateful serving cell. A fresh run missing it is a harness
+    # regression and fails. The baseline-relative gate needs the cell in
+    # both artifacts (a baseline predating stateful_rows only warns, so
+    # the gate stays usable across the artifact transition) -- but the
+    # hard runner-independent ratio floor needs only the FRESH run
+    # (both sides of the ratio came off the same machine), so it is
+    # enforced unconditionally.
+    if "stateful_rows" not in fresh_doc:
+        print("FAIL: fresh artifact has no stateful_rows cell")
+        ok = False
+    else:
+        sfresh = _row(fresh_doc, args.batch_size, key="stateful_rows")
+        fresh_ratio = float(sfresh["stateful_over_stateless"])
+        if "stateful_rows" not in base_doc:
+            print("WARN: baseline has no stateful_rows cell (predates "
+                  "stateful streaming); skipping the baseline-relative "
+                  "gate -- refresh the baseline")
+        else:
+            sbase = _row(base_doc, args.batch_size, key="stateful_rows")
+            ok &= _gate(
+                f"stateful windows/s @ B={args.batch_size}",
+                float(sbase["stateful_windows_per_s"]),
+                float(sfresh["stateful_windows_per_s"]),
+                float(sbase["stateful_over_stateless"]), fresh_ratio,
+                "stateful-vs-stateless ratio", args.tolerance)
+        if fresh_ratio < args.stateful_ratio_floor:
+            print(f"FAIL: stateful serving costs too much on this very "
+                  f"runner: stateful/stateless {fresh_ratio:.3f} < "
+                  f"{args.stateful_ratio_floor:.2f}")
+            ok = False
+        else:
+            print(f"OK: stateful/stateless {fresh_ratio:.3f} >= "
+                  f"{args.stateful_ratio_floor:.2f} (state carry is "
+                  f"effectively free)")
+
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

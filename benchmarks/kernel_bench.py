@@ -8,7 +8,9 @@ and ternary_matmul's 8x weight-byte reduction, both derived from shapes.
 ``stream_rows`` additionally measures closed-loop throughput (windows/s)
 of the batched StreamEngine (fused fc kernels + pipelined step) against
 the looped single-window pipeline at several batch sizes, and writes a
-``BENCH_stream.json`` artifact. ``hetero_rows`` measures the two
+``BENCH_stream.json`` artifact; ``stateful_rows`` adds the stateful-vs-
+stateless serving cell (carried LIF membranes on vs off, same engine) to
+the same artifact. ``hetero_rows`` measures the two
 accelerator wings through the unified engine protocol -- event-SNN vs
 frame-TCN throughput, alone and mixed in one engine -- and writes
 ``BENCH_hetero.json``.
@@ -213,6 +215,88 @@ def stream_rows(batch_sizes=(1, 2, 4, 8), windows_per_stream=16,
     return rows
 
 
+def stateful_rows(batch_sizes=(1, 4, 8), windows_per_stream=16,
+                  repeats=REPEATS, out_json="BENCH_stream.json",
+                  fuse_fc=True, pipeline_depth=1):
+    """Stateful vs stateless serving throughput (windows/s) at several
+    batch sizes: the same StreamEngine hot path (fused fc, pipelined
+    step), with every stream either carrying its LIF membranes across
+    windows (``stateful=True``) or resetting per window (the default).
+
+    The state plumbing is designed to be free on the hot path -- a lane
+    with no stateful streams is served through the legacy stateless call
+    forms untouched, and a stable stateful assignment takes the identity
+    fast path -- so the ratio
+    (stateful / stateless) should sit at ~1.0; the regression gate
+    (``benchmarks/check_regression.py``) holds it above 0.95. Results
+    are appended to the ``stream_rows`` artifact under
+    ``stateful_rows``.
+    """
+    cfg = SNNConfig(height=32, width=32, time_bins=8, conv1_features=4,
+                    conv2_features=8, hidden=32, num_classes=11)
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    max_b = max(batch_sizes)
+    windows = {
+        s: [ev.synthetic_gesture_events(rng, (s + k) % 11, mean_events=3000,
+                                        height=32, width=32)
+            for k in range(windows_per_stream)]
+        for s in range(max_b)
+    }
+
+    def cell(b, stateful):
+        eng = StreamEngine(params, cfg, max_streams=b, fuse_fc=fuse_fc,
+                           pipeline_depth=pipeline_depth)
+
+        def submit_all():
+            for s in range(b):
+                for w in windows[s]:
+                    eng.submit(s, w, stateful=stateful)
+
+        submit_all()            # warm-up: compile the (B, bucket) shapes
+        eng.run()
+
+        def measure():
+            submit_all()
+            t0 = time.perf_counter()
+            n = len(eng.run())
+            return n / (time.perf_counter() - t0)
+
+        return measure
+
+    cells = {b: (cell(b, False), cell(b, True)) for b in batch_sizes}
+    samples = {b: ([], []) for b in batch_sizes}
+    for _ in range(repeats):
+        for b in batch_sizes:
+            stateless, stateful = cells[b]
+            samples[b][0].append(stateless())
+            samples[b][1].append(stateful())
+
+    rows, artifact = [], []
+    for b in batch_sizes:
+        wps_less = float(np.median(samples[b][0]))
+        wps_full = float(np.median(samples[b][1]))
+        ratio = wps_full / wps_less
+        rows.append((f"stream_stateful_B{b}", 1e6 / wps_full,
+                     f"stateful_wps={wps_full:.1f};stateless_wps="
+                     f"{wps_less:.1f};ratio={ratio:.3f}"))
+        artifact.append({"batch_size": b,
+                         "windows_per_stream": windows_per_stream,
+                         "stateless_windows_per_s": wps_less,
+                         "stateful_windows_per_s": wps_full,
+                         "stateful_over_stateless": ratio})
+    if out_json:
+        try:
+            with open(out_json) as f:
+                doc = json.load(f)
+        except FileNotFoundError:
+            doc = {"benchmark": "stream_closed_loop"}
+        doc["stateful_rows"] = artifact
+        with open(out_json, "w") as f:
+            json.dump(doc, f, indent=2)
+    return rows
+
+
 def hetero_rows(slots=4, windows_per_stream=8,
                 out_json="BENCH_hetero.json"):
     """Unified-engine throughput: the event-SNN wing vs the frame-TCN wing
@@ -282,7 +366,8 @@ def hetero_rows(slots=4, windows_per_stream=8,
 
 def main():
     for name, us, derived in (lif_rows() + ternary_rows() + fc_fusion_rows()
-                              + stream_rows() + hetero_rows()):
+                              + stream_rows() + stateful_rows()
+                              + hetero_rows()):
         print(f"{name},{us:.1f},{derived}")
 
 

@@ -32,7 +32,7 @@ def run(n_windows: int = 3, seed: int = 0):
     cfg = get_config("colibries")
     params = init_snn(jax.random.PRNGKey(seed), cfg)
     pipe = ClosedLoopPipeline(params, cfg,
-                              lif_scan_fn=lambda c, p: lif_scan(c, p))
+                              lif_scan_fn=lif_scan)
     rng = np.random.default_rng(seed)
     rows = []
     t_wall = time.perf_counter()

@@ -32,7 +32,7 @@ def main():
 
     # Closed loop: acquire -> preprocess -> SNE inference -> PWM.
     pipe = ClosedLoopPipeline(params, cfg,
-                              lif_scan_fn=lambda c, p: lif_scan(c, p))
+                              lif_scan_fn=lif_scan)
     res = pipe(window)
 
     print(f"predicted class: {res.label_pred[0]}  (true: {window.label})")

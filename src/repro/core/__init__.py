@@ -20,7 +20,8 @@ Submodules:
               wing; modelled CUTIE frame wing)
 """
 from repro.core.lif import LIFParams, lif_scan_reference, lif_step, spike_surrogate
-from repro.core.snn import SNNConfig, init_snn, snn_apply, snn_logits, snn_loss
+from repro.core.snn import (SNNConfig, SNN_STATE_LAYERS, init_snn,
+                            snn_apply, snn_init_state, snn_logits, snn_loss)
 from repro.core.ternary import pack2bit, ternarize, ternary_ste, unpack2bit
 from repro.core.tiling import SNE_NEURON_CAPACITY, TilePlan, plan_layer_tiles, plan_network
 from repro.core.energy import (KRAKEN_DOMAINS, CUTIE_DOMAIN, FRAME_DOMAINS,
@@ -33,7 +34,8 @@ from repro.core.engine import FrameTCNEngine, InferenceEngine
 
 __all__ = [
     "LIFParams", "lif_scan_reference", "lif_step", "spike_surrogate",
-    "SNNConfig", "init_snn", "snn_apply", "snn_logits", "snn_loss",
+    "SNNConfig", "SNN_STATE_LAYERS", "init_snn", "snn_apply",
+    "snn_init_state", "snn_logits", "snn_loss",
     "pack2bit", "ternarize", "ternary_ste", "unpack2bit",
     "SNE_NEURON_CAPACITY", "TilePlan", "plan_layer_tiles", "plan_network",
     "KRAKEN_DOMAINS", "CUTIE_DOMAIN", "FRAME_DOMAINS", "KrakenModel",

@@ -13,7 +13,18 @@ that lets the serving layer treat both wings uniformly:
                                  queue state changes;
   * ``prepare(items, batch_size)`` -- pad per-slot items into the engine's
                                  fixed batch buffer;
-  * ``infer(batch)``          -- one jit'd call, one result per slot;
+  * ``init_state(batch_size)`` -- the engine's zero carried-state pytree,
+                                 slot-major (leading axis = batch slot).
+                                 Stateless engines return an EMPTY pytree
+                                 (``{}``) so the contract stays uniform;
+  * ``infer(batch)``          -- one jit'd call, one result per slot.
+                                 With carried state:
+                                 ``infer(batch, state) -> (results,
+                                 new_state)`` -- ``new_state`` is a
+                                 device pytree, feedable straight back
+                                 into the next call so per-stream state
+                                 (e.g. the SNN's LIF membranes) chains
+                                 windows into one uninterrupted scan;
   * ``shape_key(batch)``      -- the jit compilation key of a prepared
                                  batch (engines with data-dependent
                                  padding, like the event engine's
@@ -22,16 +33,21 @@ that lets the serving layer treat both wings uniformly:
                                  compiles).
 
 Optional extensions (duck-typed -- the serving layer probes with
-``getattr`` so third-party engines implementing only the base protocol
-still plug in unchanged):
+``getattr`` so third-party engines implementing only the base protocol,
+or even only its stateless pre-state subset, still plug in unchanged --
+an engine without ``init_state`` is simply served stateless):
 
-  * ``infer_dispatch(batch)`` / ``infer_collect(pending)`` -- the async
-    split of ``infer``: dispatch launches the jit'd call and returns an
-    opaque pending handle WITHOUT blocking on the device; collect blocks
-    and turns the handle into per-slot results. The pipelined
-    ``StreamEngine.step`` uses these to overlap host-side packing of
-    step k+1 with device compute of step k; engines without them are
-    served synchronously.
+  * ``infer_dispatch(batch[, state])`` / ``infer_collect(pending)`` --
+    the async split of ``infer``: dispatch launches the jit'd call and
+    returns an opaque pending handle WITHOUT blocking on the device
+    (with ``state``: ``(pending, new_state)``, where ``new_state`` is
+    made of jax async-dispatch futures -- the pipelined serving path
+    threads it into the NEXT dispatch so carried state stays
+    device-resident between steps, never round-tripping the host);
+    collect blocks and turns the handle into per-slot results. The
+    pipelined ``StreamEngine.step`` uses these to overlap host-side
+    packing of step k+1 with device compute of step k; engines without
+    them are served synchronously.
   * ``warmup(shape_keys)``    -- precompile executables for a set of
     shape keys so no window pays compile time mid-stream.
 
@@ -84,8 +100,15 @@ class InferenceEngine(Protocol):
         """Pad one item per slot (None = empty slot) into a batch."""
         ...
 
-    def infer(self, batch: Any) -> List[Optional[ClosedLoopResult]]:
-        """Run one jit'd call; one result per slot, None for empty slots."""
+    def init_state(self, batch_size: int) -> Any:
+        """Zero carried-state pytree, slot-major; empty if stateless."""
+        ...
+
+    def infer(self, batch: Any, state: Any = None):
+        """Run one jit'd call; one result per slot, None for empty slots.
+
+        Without ``state``: returns the result list (stateless legacy
+        call). With ``state``: returns ``(results, new_state)``."""
         ...
 
     def shape_key(self, batch: Any) -> Hashable:
@@ -148,6 +171,15 @@ class FrameTCNEngine:
     def shape_key(self, batch: fr.PaddedFrameBatch) -> Hashable:
         return (batch.batch_size, *batch.frame_shape, batch.duration_us)
 
+    def init_state(self, batch_size: int) -> Dict:
+        """The CUTIE wing is feedforward per frame: no carried state.
+
+        Returns the empty pytree so the engine still satisfies the
+        uniform state contract -- stateful serving threads ``{}`` through
+        unchanged, and a ``stateful=True`` frame stream is simply a
+        no-op carry."""
+        return {}
+
     def _executable(self, key: Tuple[int, ...]) -> Callable:
         """AOT-compile (once) and return the executable for a shape key,
         ``(batch_size, height, width, duration_us)`` -- compilation is
@@ -195,12 +227,15 @@ class FrameTCNEngine:
         """Shape keys with a compiled executable (stepped or warmed)."""
         return set(self._exe)
 
-    def infer_dispatch(self, batch: fr.PaddedFrameBatch):
+    def infer_dispatch(self, batch: fr.PaddedFrameBatch, state=None):
         """Launch the jit'd call without host sync; see
-        :meth:`BatchedClosedLoop.infer_dispatch`."""
+        :meth:`BatchedClosedLoop.infer_dispatch`. With ``state`` (the
+        empty pytree) returns ``(pending, state)`` -- the uniform
+        stateful dispatch shape, carrying nothing."""
         exe = self._executable(self.shape_key(batch))
         preds, pwm, activity = exe(self.packed, jnp.asarray(batch.pixels))
-        return (batch, preds, pwm, activity)
+        pending = (batch, preds, pwm, activity)
+        return pending if state is None else (pending, state)
 
     def infer_collect(self, pending) -> List[Optional[ClosedLoopResult]]:
         """Fetch a dispatched batch's outputs and account each slot."""
@@ -234,10 +269,13 @@ class FrameTCNEngine:
             ))
         return results
 
-    def infer(self, batch: fr.PaddedFrameBatch
-              ) -> List[Optional[ClosedLoopResult]]:
-        """Synchronous convenience: dispatch + collect back to back."""
-        return self.infer_collect(self.infer_dispatch(batch))
+    def infer(self, batch: fr.PaddedFrameBatch, state=None):
+        """Synchronous convenience: dispatch + collect back to back.
+        With ``state``: returns ``(results, state)`` (no-op carry)."""
+        if state is None:
+            return self.infer_collect(self.infer_dispatch(batch))
+        pending, new_state = self.infer_dispatch(batch, state)
+        return self.infer_collect(pending), new_state
 
     def infer_frames(self, frames: Sequence[Optional[fr.FrameWindow]], *,
                      batch_size: Optional[int] = None,

@@ -36,6 +36,7 @@ runs alone or inside a batch -- asserted by the parity tests.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -44,7 +45,7 @@ import numpy as np
 
 from repro.core import events as ev
 from repro.core.energy import KrakenModel, NOMINAL
-from repro.core.snn import SNNConfig, snn_apply, snn_logits
+from repro.core.snn import SNNConfig, snn_apply, snn_init_state, snn_logits
 from repro.core.tiling import SNE_NEURON_CAPACITY, plan_network
 
 __all__ = ["ClosedLoopResult", "BatchedClosedLoop", "ClosedLoopPipeline",
@@ -68,6 +69,37 @@ def pwm_from_logits(logits: jnp.ndarray, num_channels: int = 4) -> jnp.ndarray:
     # per-row reduction is batch-size invariant (bitwise B=1 == batched).
     duty = (probs[..., :, None] * jnp.asarray(mix)).sum(axis=-2)
     return jnp.clip(0.5 + 0.5 * duty, 0.0, 1.0)
+
+
+def _check_scan_fn(fn: Optional[Callable]) -> None:
+    """Reject two-argument legacy ``lif_scan_fn`` callables up front.
+
+    The engine threads carried state (``v0``) through its scan hook, so
+    a pre-stateful-streaming ``lambda c, p: ...`` would only fail with
+    an opaque TypeError deep inside the first jit trace. Catch it at
+    construction with a message that names the fix. Callables whose
+    signature cannot be inspected are let through (they fail loudly at
+    trace time if genuinely incompatible).
+    """
+    if fn is None:
+        return
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return
+    n_pos = 0
+    for p in sig.parameters.values():
+        if p.kind == p.VAR_POSITIONAL:
+            return
+        if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD):
+            n_pos += 1
+    if n_pos < 3:
+        raise ValueError(
+            f"lif_scan_fn must accept (currents, lif_params, v0): the "
+            f"engine threads carried state through the scan (stateful "
+            f"streaming). Pass repro.kernels.ops.lif_scan itself -- it "
+            f"already takes v0 -- instead of a two-argument wrapper "
+            f"(got signature {sig})")
 
 
 @dataclasses.dataclass
@@ -111,6 +143,20 @@ class BatchedClosedLoop:
     synapse+LIF Pallas kernel (``kernels/fc_lif_scan.py``): their
     synaptic-current tensors never round-trip HBM, with bitwise-identical
     results to the unfused path.
+
+    Carried state (stateful streaming): the SNN is stateful across the
+    control loop, and this engine exposes that as a first-class slot-major
+    pytree -- one (B, ...) membrane plane per LIF layer. ``init_state(B)``
+    makes the zero (cold-start) state; ``infer(batch, state)`` returns
+    ``(results, new_state)``, and feeding ``new_state`` back chains the
+    windows bitwise-exactly into one uninterrupted scan (the ``s0 = v0 >=
+    v_th`` contract from ``core/lif.py``). The state stays a device
+    pytree end to end: ``infer_dispatch(batch, state)`` returns the new
+    state as jax async-dispatch futures, so a pipelined caller threads
+    membranes from step to step without any host round-trip. Calls
+    without ``state`` run the same executable from the zero state and
+    drop the final state -- the legacy stateless behaviour, bitwise
+    unchanged.
     """
 
     modality = "event"
@@ -146,11 +192,31 @@ class BatchedClosedLoop:
             float(cfg.hidden),
             float(cfg.num_classes),
         )
+        _check_scan_fn(lif_scan_fn)
         self._lif_scan_fn = lif_scan_fn
         # Explicit executable cache: shape_key -> AOT-compiled callable.
         self._exe: Dict[Any, Callable] = {}
+        # Zero-state cache: stateless dispatches reuse one zero pytree per
+        # batch size instead of re-allocating it every step.
+        self._zero_state: Dict[int, Any] = {}
 
     # -- InferenceEngine protocol ----------------------------------------
+
+    def init_state(self, batch_size: int):
+        """The zero carried-state pytree for ``batch_size`` slots.
+
+        Slot-major: one (batch_size, ...) f32 membrane plane per LIF
+        layer (see :func:`repro.core.snn.snn_init_state`). Zero membrane
+        is the cold-start condition, so a window inferred from
+        ``init_state`` is bitwise identical to a stateless call.
+        """
+        return snn_init_state(self.cfg, batch_size)
+
+    def _zero_state_for(self, batch_size: int):
+        st = self._zero_state.get(batch_size)
+        if st is None:
+            st = self._zero_state[batch_size] = self.init_state(batch_size)
+        return st
 
     def validate(self, window: ev.EventWindow) -> None:
         """Submission-time check: latch/enforce the engine bin width."""
@@ -179,20 +245,26 @@ class BatchedClosedLoop:
         return (batch.batch_size, batch.max_events, batch.duration_us)
 
     def _build_run(self, duration_us: int) -> Callable:
-        """Voxelize + infer + readout for one window duration (unjitted)."""
+        """Voxelize + infer + readout for one window duration (unjitted).
+
+        One executable serves both the stateless and the stateful path:
+        it always takes the slot-major state pytree and always returns
+        the per-layer final membranes (stateless callers feed the cached
+        zero state and drop the output).
+        """
         cfg, scan, fuse = self.cfg, self._lif_scan_fn, self.fuse_fc
 
-        def run(params, x, y, t, p, valid):
+        def run(params, x, y, t, p, valid, state):
             vox = ev.voxelize_batch(
                 x, y, t, p, valid, duration_us=duration_us,
                 time_bins=cfg.time_bins, height=cfg.height,
                 width=cfg.width,
             )
             out = snn_apply(params, vox, cfg, mode="layer_serial",
-                            lif_scan_fn=scan, fuse_fc=fuse)
+                            lif_scan_fn=scan, fuse_fc=fuse, state=state)
             logits = snn_logits(out, cfg) * 10.0
             return (jnp.argmax(logits, -1), pwm_from_logits(logits),
-                    out["firing_rates_per_stream"])
+                    out["firing_rates_per_stream"], out["state"])
 
         return run
 
@@ -208,12 +280,13 @@ class BatchedClosedLoop:
             b, n_ev, duration_us = key
             ev_i32 = jax.ShapeDtypeStruct((b, n_ev), jnp.int32)
             ev_bool = jax.ShapeDtypeStruct((b, n_ev), jnp.bool_)
-            p_abs = jax.tree_util.tree_map(
+            abstract = lambda tree: jax.tree_util.tree_map(
                 lambda a: jax.ShapeDtypeStruct(jnp.shape(a),
                                                jnp.asarray(a).dtype),
-                self.params)
+                tree)
             exe = jax.jit(self._build_run(int(duration_us))).lower(
-                p_abs, ev_i32, ev_i32, ev_i32, ev_i32, ev_bool).compile()
+                abstract(self.params), ev_i32, ev_i32, ev_i32, ev_i32,
+                ev_bool, abstract(self._zero_state_for(b))).compile()
             self._exe[key] = exe
         return exe
 
@@ -257,29 +330,41 @@ class BatchedClosedLoop:
             rates["conv2"] * vol("conv2") * t,        # into fc1
             rates["fc1"] * vol("fc1") * t,            # into fc2
         )
-        return self.model.closed_loop(
+        acct = self.model.closed_loop(
             events=float(num_events),
             layer_in_spikes=layer_in_spikes,
             layer_fanout=self.fanouts,
             layer_passes=[p.passes for p in self.plans],
         )
+        # Per-layer mean firing rates for this window: observable per
+        # stream (e.g. to watch carried membrane shift the dynamics).
+        acct["firing_rates"] = dict(rates)
+        return acct
 
-    def infer_dispatch(self, batch: ev.PaddedEventBatch):
+    def infer_dispatch(self, batch: ev.PaddedEventBatch, state=None):
         """Launch the jit'd call for a padded batch WITHOUT host sync.
 
-        Returns an opaque pending handle for :meth:`infer_collect`. The
-        device arrays inside are jax futures (async dispatch): the caller
-        can keep packing the next batch on the host while the device
-        computes this one -- the overlap the pipelined
-        ``StreamEngine.step`` exploits.
+        Returns an opaque pending handle for :meth:`infer_collect` -- or,
+        when ``state`` is given (a slot-major pytree from
+        :meth:`init_state` or a previous dispatch), the pair
+        ``(pending, new_state)``. The device arrays inside are jax
+        futures (async dispatch): the caller can keep packing the next
+        batch on the host while the device computes this one -- the
+        overlap the pipelined ``StreamEngine.step`` exploits -- and
+        ``new_state`` is itself made of futures, so chaining it into the
+        next dispatch keeps membranes device-resident with no host sync.
         """
+        stateless = state is None
+        if stateless:
+            state = self._zero_state_for(batch.batch_size)
         exe = self._executable(self.shape_key(batch))
-        preds, pwm, rates_ps = exe(
+        preds, pwm, rates_ps, new_state = exe(
             self.params, jnp.asarray(batch.x), jnp.asarray(batch.y),
             jnp.asarray(batch.t), jnp.asarray(batch.p),
-            jnp.asarray(batch.valid),
+            jnp.asarray(batch.valid), state,
         )
-        return (batch, preds, pwm, rates_ps)
+        pending = (batch, preds, pwm, rates_ps)
+        return pending if stateless else (pending, new_state)
 
     def infer_collect(self, pending) -> List[Optional[ClosedLoopResult]]:
         """Fetch a dispatched batch's outputs and account each stream.
@@ -320,13 +405,18 @@ class BatchedClosedLoop:
             ))
         return results
 
-    def infer(self, batch: ev.PaddedEventBatch
-              ) -> List[Optional[ClosedLoopResult]]:
+    def infer(self, batch: ev.PaddedEventBatch, state=None):
         """Run a padded batch; returns one result per slot (None if empty).
 
-        Synchronous convenience: dispatch + collect back to back.
+        Synchronous convenience: dispatch + collect back to back. With
+        ``state`` (slot-major carried-state pytree) returns
+        ``(results, new_state)``; without it, just the results (the
+        legacy stateless call, run from the zero state).
         """
-        return self.infer_collect(self.infer_dispatch(batch))
+        if state is None:
+            return self.infer_collect(self.infer_dispatch(batch))
+        pending, new_state = self.infer_dispatch(batch, state)
+        return self.infer_collect(pending), new_state
 
     def infer_windows(self, windows: Sequence[Optional[ev.EventWindow]],
                       *, max_events: Optional[int] = None,

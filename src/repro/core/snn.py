@@ -36,11 +36,19 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.lif import LIFParams, lif_scan_reference, lif_step
+from repro.core.lif import (LIFParams, lif_scan_reference, lif_step,
+                            spike_surrogate)
 
-__all__ = ["SNNConfig", "init_snn", "snn_apply", "snn_logits", "snn_loss"]
+__all__ = ["SNNConfig", "init_snn", "snn_init_state", "snn_apply",
+           "snn_logits", "snn_loss", "SNN_STATE_LAYERS"]
 
 Params = Dict[str, Any]
+
+# The LIF layers whose membrane is carried state, in execution order. This
+# names the leaves of the state pytree threaded through the serving stack
+# (``snn_init_state`` / ``snn_apply(..., state=...)`` / the
+# ``InferenceEngine`` state contract).
+SNN_STATE_LAYERS = ("conv1", "conv2", "fc1", "fc2")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +113,25 @@ def init_snn(rng: jax.Array, cfg: SNNConfig, dtype=jnp.float32) -> Params:
     }
 
 
+def snn_init_state(cfg: SNNConfig, batch_size: int,
+                   dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    """The zero carried-state pytree for a batch of ``batch_size`` streams.
+
+    One slot-major (B, ...) membrane plane per LIF layer
+    (:data:`SNN_STATE_LAYERS`). Zero membrane is exactly the network's
+    cold-start condition: ``snn_apply(..., state=snn_init_state(...))``
+    is bitwise identical to ``snn_apply(..., state=None)``.
+    """
+    h0, w0 = cfg.post_pool0
+    z = lambda *shape: jnp.zeros((batch_size, *shape), dtype)
+    return {
+        "conv1": z(h0, w0, cfg.conv1_features),
+        "conv2": z(h0 // 2, w0 // 2, cfg.conv2_features),
+        "fc1": z(cfg.hidden),
+        "fc2": z(cfg.num_classes),
+    }
+
+
 def _avg_pool(x: jnp.ndarray, k: int) -> jnp.ndarray:
     """Average pool NHWC by k with stride k (SNN pooling on spike maps)."""
     return jax.lax.reduce_window(
@@ -148,6 +175,7 @@ def snn_apply(
     lif_scan_fn=None,
     fuse_fc: bool = False,
     fc_lif_scan_fn=None,
+    state: Dict[str, jnp.ndarray] | None = None,
 ) -> Dict[str, jnp.ndarray]:
     """Run the SCNN on a voxelized spike batch.
 
@@ -155,23 +183,34 @@ def snn_apply(
       params: from ``init_snn``.
       vox: (B, T, 2, H, W) float spikes (from ``events.voxelize_batch``).
       mode: ``time_serial`` (STBP view) or ``layer_serial`` (SNE view).
-      lif_scan_fn: optional fused scan ``f(currents_T_first, LIFParams) ->
-        (spikes, v_final)`` used in layer_serial mode (e.g. the Pallas
-        kernel); defaults to the pure-jnp reference.
+      lif_scan_fn: optional fused scan ``f(currents_T_first, LIFParams[,
+        v0]) -> (spikes, v_final)`` used in layer_serial mode (e.g. the
+        Pallas kernel); defaults to the pure-jnp reference. The ``v0``
+        positional is only passed when ``state`` is given, so legacy
+        two-argument callables keep working for stateless calls.
       fuse_fc: layer_serial only -- run fc1/fc2 through the fused
         synapse+LIF Pallas kernel (one launch computes ``spikes @ W`` and
         the LIF update; the (T, B, N) current tensors never reach HBM).
         Bitwise-identical to the unfused path (pinned by tests at
         B in {1, 4, 8}).
       fc_lif_scan_fn: optional override for the fused fc scan,
-        ``f(spikes_T_first, W, LIFParams) -> (spikes, v_final)``;
+        ``f(spikes_T_first, W, LIFParams[, v0]) -> (spikes, v_final)``;
         defaults to :func:`repro.kernels.ops.fc_lif_scan`.
+      state: optional carried state from :func:`snn_init_state` (or a
+        previous call's ``out["state"]``): per-layer (B, ...) membrane
+        planes. The initial spike state is the one *implied* by the
+        membrane (``s0 = v0 >= v_th``), matching the kernel/oracle
+        window-chaining contract: running T steps in W chained chunks is
+        bitwise identical to one uninterrupted T-step run, in every mode.
+        ``None`` starts from rest (zero membrane).
 
     Returns:
       dict with ``out_spikes`` (B, T, num_classes), ``out_membrane``
       (B, T, num_classes) in time_serial mode, per-layer mean firing
-      rates, and ``firing_rates_per_stream`` -- per-layer (B,) rates so
-      the batched closed loop can drive the energy model per stream.
+      rates, ``firing_rates_per_stream`` -- per-layer (B,) rates so
+      the batched closed loop can drive the energy model per stream --
+      and ``state``: the per-layer (B, ...) final membranes, feedable
+      back as ``state`` to continue the stream.
     """
     if fuse_fc and mode != "layer_serial":
         raise ValueError(f"fuse_fc requires mode='layer_serial', got {mode!r}")
@@ -188,16 +227,31 @@ def snn_apply(
         return s.mean(axis=axes)
 
     if mode == "time_serial":
-        h0, w0 = cfg.post_pool0
-        zeros = lambda shape: jnp.zeros((b, *shape), x.dtype)
-        carry = {
-            "v1": zeros((h0, w0, cfg.conv1_features)),
-            "s1": zeros((h0, w0, cfg.conv1_features)),
-            "v2": zeros((h0 // 2, w0 // 2, cfg.conv2_features)),
-            "s2": zeros((h0 // 2, w0 // 2, cfg.conv2_features)),
-            "v3": zeros((cfg.hidden,)), "s3": zeros((cfg.hidden,)),
-            "v4": zeros((cfg.num_classes,)), "s4": zeros((cfg.num_classes,)),
-        }
+        if state is None:
+            h0, w0 = cfg.post_pool0
+            zeros = lambda shape: jnp.zeros((b, *shape), x.dtype)
+            carry = {
+                "v1": zeros((h0, w0, cfg.conv1_features)),
+                "s1": zeros((h0, w0, cfg.conv1_features)),
+                "v2": zeros((h0 // 2, w0 // 2, cfg.conv2_features)),
+                "s2": zeros((h0 // 2, w0 // 2, cfg.conv2_features)),
+                "v3": zeros((cfg.hidden,)), "s3": zeros((cfg.hidden,)),
+                "v4": zeros((cfg.num_classes,)),
+                "s4": zeros((cfg.num_classes,)),
+            }
+        else:
+            # Window-chaining contract: the carried membrane implies the
+            # spike state (s0 = v0 >= v_th), exactly as in
+            # ``lif_scan_reference`` and the Pallas kernels.
+            def v_s(v):
+                v = v.astype(jnp.float32)
+                s = spike_surrogate(v, jnp.float32(lif.v_th),
+                                    lif.surrogate_width).astype(x.dtype)
+                return v, s
+
+            carry = {}
+            for i, name in enumerate(SNN_STATE_LAYERS, start=1):
+                carry[f"v{i}"], carry[f"s{i}"] = v_s(state[name])
 
         def step(c, x_t):
             v1, s1 = lif_step(c["v1"], c["s1"], i1(x_t), lif)
@@ -210,22 +264,31 @@ def snn_apply(
                      rate_b(s3, 0), rate_b(s4, 0))        # each (B,)
             return new, (s4, v4, rates)
 
-        _, (out_s, out_v, rates) = jax.lax.scan(step, carry, x)
+        fin, (out_s, out_v, rates) = jax.lax.scan(step, carry, x)
         out_spikes = jnp.transpose(out_s, (1, 0, 2))     # (B, T, classes)
         out_membrane = jnp.transpose(out_v, (1, 0, 2))
         r1, r2, r3, r4 = (r.mean(axis=0) for r in rates)  # (T, B) -> (B,)
+        state_out = {name: fin[f"v{i}"]
+                     for i, name in enumerate(SNN_STATE_LAYERS, start=1)}
     elif mode == "layer_serial":
-        scan = lif_scan_fn or (lambda cur, p: lif_scan_reference(cur, p))
+        scan = lif_scan_fn or lif_scan_reference
+        # v0 is only passed when carried state is given, so legacy
+        # two-argument lif_scan_fn callables stay valid stateless.
+        run_scan = (lambda cur, v0: scan(cur, lif) if v0 is None
+                    else scan(cur, lif, v0))
+        v0 = lambda name: None if state is None else state[name]
         # Layer 2: conv1 + LIF over the full train.
         c1 = jax.vmap(i1)(x)                  # (T, B, h0, w0, f1)
-        s1, _ = scan(c1, lif)
+        s1, vf1 = run_scan(c1, v0("conv1"))
         c2 = jax.vmap(i2)(s1)
-        s2, _ = scan(c2, lif)
+        s2, vf2 = run_scan(c2, v0("conv2"))
         if fuse_fc:
             fc_scan = fc_lif_scan_fn
             if fc_scan is None:
                 # Lazy import: core -> kernels only on the fused path.
                 from repro.kernels.ops import fc_lif_scan as fc_scan
+            run_fc = (lambda s, w, v: fc_scan(s, w, lif) if v is None
+                      else fc_scan(s, w, lif, v))
             # Pool+flatten stays outside the kernel (cheap, bandwidth-
             # bound); the matmul+LIF of fc1/fc2 fuse into one launch
             # each, so their (T, B, N) current tensors never reach HBM.
@@ -234,17 +297,18 @@ def snn_apply(
                 return pooled.reshape(pooled.shape[0], -1)
 
             z = jax.vmap(pool_flat)(s2)       # (T, B, flat_dim)
-            s3, _ = fc_scan(z, params["fc1"]["w"], lif)
-            s4, _ = fc_scan(s3, params["fc2"]["w"], lif)
+            s3, vf3 = run_fc(z, params["fc1"]["w"], v0("fc1"))
+            s4, vf4 = run_fc(s3, params["fc2"]["w"], v0("fc2"))
         else:
             c3 = jax.vmap(i3)(s2)
-            s3, _ = scan(c3, lif)
+            s3, vf3 = run_scan(c3, v0("fc1"))
             c4 = jax.vmap(i4)(s3)
-            s4, _ = scan(c4, lif)
+            s4, vf4 = run_scan(c4, v0("fc2"))
         out_spikes = jnp.transpose(s4, (1, 0, 2))
         out_membrane = jnp.zeros_like(out_spikes)  # not tracked in this mode
         # Layer outputs are (T, B, ...): batch axis 1.
         r1, r2, r3, r4 = (rate_b(s, 1) for s in (s1, s2, s3, s4))
+        state_out = {"conv1": vf1, "conv2": vf2, "fc1": vf3, "fc2": vf4}
     else:
         raise ValueError(f"unknown mode: {mode}")
 
@@ -254,6 +318,7 @@ def snn_apply(
         "out_membrane": out_membrane,
         "firing_rates": {k: v.mean() for k, v in per_stream.items()},
         "firing_rates_per_stream": per_stream,
+        "state": state_out,
     }
 
 

@@ -41,6 +41,27 @@ validated on every ``submit`` -- or leave it ``None`` to latch the first
 submitted window's duration for the engine's lifetime. There is no reset:
 construct a new engine (or pass a fresh ``engines=`` set) to change it.
 
+Stateful streaming (``submit(..., stateful=True)``): the paper's SNN is
+stateful across the control loop -- the LIF membranes integrate evidence
+continuously -- yet a stateless server resets them at every window
+boundary. A stream submitted with ``stateful=True`` instead carries its
+engine state (the event wing: per-layer membrane planes) from window to
+window: the lane keeps a slot-major state pytree next to its batch
+slots, and on every dispatch each slot is fed the carry of the stream it
+currently holds. State follows the STREAM, not the slot index: when the
+policy moves a stream to another slot (rotation, deadline preemption) its
+carry is gathered along; when a stream loses its slot its carry is
+parked and re-attached on the next slot it wins. Slots are always
+zeroed on admission -- a stream newly admitted into a slot previously
+held by another (a "dirty" slot) starts from the cold-start state,
+bitwise identical to a fresh B=1 run -- and stateless streams are fed
+the zero state every window, so their results never depend on slot
+history. ``reset_state(stream_id)`` zeroes a live stream's carry (the
+gesture-boundary escape hatch) and ``retire(stream_id)`` drops a stream
+and its state entirely. The state pytree is device-resident end to end:
+in pipelined mode the carry chains dispatch-to-dispatch as jax
+async-dispatch futures and never round-trips the host.
+
 Pipelining (``pipeline_depth >= 1``): ``step()`` dispatches each lane's
 jit'd call asynchronously (no device sync on the critical path) and
 returns the results of the step dispatched ``pipeline_depth`` steps ago,
@@ -61,6 +82,9 @@ import time
 from collections import deque
 from typing import (Any, Callable, Deque, Dict, Hashable, List, Mapping,
                     Optional, Sequence, Union)
+
+import jax
+import jax.numpy as jnp
 
 from repro.core.energy import KrakenModel
 from repro.core.engine import InferenceEngine
@@ -154,6 +178,16 @@ class EngineLane:
     ids (or the free sentinel); ``queues`` maps every stream of this
     modality to its FIFO of :class:`_Queued` entries; ``waiting`` holds
     streams without a slot, in arrival order.
+
+    Carried-state fields (engines exposing ``init_state``):
+    ``state`` is the slot-major device pytree fed to the NEXT dispatch
+    row-aligned with ``slots`` at that dispatch; ``state_streams`` tracks,
+    per row, which stateful stream's carry the row holds (rows of
+    stateless or free slots are dead and zeroed on reuse); ``parked``
+    holds the carries of stateful streams that currently have no slot;
+    ``stateful`` is the set of streams that opted into carry at submit.
+    Invariant: a stateful stream's carry lives in exactly one of a state
+    row or ``parked`` (or nowhere, meaning cold start).
     """
 
     modality: str
@@ -163,6 +197,12 @@ class EngineLane:
     waiting: Deque[Hashable]
     queues: Dict[Hashable, Deque[_Queued]]
     shape_keys: set
+    supports_state: bool = False
+    stateful: set = dataclasses.field(default_factory=set)
+    state: Any = None
+    state_streams: List[Hashable] = dataclasses.field(default_factory=list)
+    parked: Dict[Hashable, Any] = dataclasses.field(default_factory=dict)
+    zero_state: Any = None
 
     def pending(self) -> int:
         return sum(len(q) for q in self.queues.values())
@@ -180,6 +220,12 @@ class SlotPolicy:
     slots from the waiting line. Policies must keep the invariant that a
     schedulable stream is tracked by exactly one of: a held slot or a
     waiting-line entry.
+
+    Policies keeping per-stream bookkeeping (aging counters, histories)
+    should additionally implement ``forget(stream_id)`` -- the engine
+    calls it when a stream is retired, so a later stream reusing the id
+    cannot inherit the old stream's bookkeeping. The hook is duck-typed
+    (probed with ``getattr``), like the engines' optional extensions.
     """
 
     def assign(self, lane: EngineLane) -> None:
@@ -311,6 +357,11 @@ class DeadlinePolicy(FairQuantumPolicy):
         self._waited.pop(best, None)
         return best
 
+    def forget(self, stream_id: Hashable) -> None:
+        """Drop the stream's aging counter (engine calls this on retire
+        so a reused id starts with fresh aging)."""
+        self._waited.pop(stream_id, None)
+
 
 # ----------------------------------------------------------------------
 # The engine-agnostic streaming scheduler.
@@ -418,7 +469,9 @@ class StreamEngine:
             self._lanes[e.modality] = EngineLane(
                 modality=e.modality, engine=e,
                 slots=[_FREE] * slots, slot_runs=[0] * slots,
-                waiting=deque(), queues={}, shape_keys=set())
+                waiting=deque(), queues={}, shape_keys=set(),
+                supports_state=hasattr(e, "init_state"),
+                state_streams=[_FREE] * slots)
 
         self._stream_lane: Dict[Hashable, str] = {}
         self._seq: Dict[Hashable, int] = {}
@@ -493,7 +546,8 @@ class StreamEngine:
 
     def submit(self, stream_id: Hashable, window: Any, *,
                modality: Optional[str] = None,
-               deadline: Optional[float] = None) -> int:
+               deadline: Optional[float] = None,
+               stateful: Optional[bool] = None) -> int:
         """Queue one window on a stream; returns its per-stream sequence
         number (the same value later reported by ``StreamResult.seq``).
         Never blocks; the window runs at the next step in which its
@@ -502,18 +556,38 @@ class StreamEngine:
         ``modality`` selects the engine for a NEW stream (optional when
         only one engine is configured); known streams are bound to their
         lane. ``deadline`` is scheduling metadata consumed by
-        deadline-aware policies (smaller = more urgent).
+        deadline-aware policies (smaller = more urgent). ``stateful=True``
+        opts a NEW stream into carried state: its engine state (the event
+        wing: LIF membranes) chains across its windows, following the
+        stream through any slot reassignment, until ``reset_state`` or
+        ``retire``. Like modality, statefulness is latched for the
+        stream's life (default False; pass ``None`` to leave a known
+        stream's binding alone).
         """
         lane = self._resolve_lane(stream_id, modality)
         # Validation happens BEFORE any queue/seq state changes, so a
         # rejected submit neither burns a sequence number nor corrupts
         # scheduling state.
+        if stateful and not lane.supports_state:
+            raise ValueError(
+                f"engine for modality {lane.modality!r} "
+                f"({type(lane.engine).__name__}) has no carried-state "
+                f"support (no init_state); submit stateless")
+        known = stream_id in lane.queues
+        if (known and stateful is not None
+                and bool(stateful) != (stream_id in lane.stateful)):
+            raise ValueError(
+                f"stream {stream_id!r} is bound to stateful="
+                f"{stream_id in lane.stateful}; statefulness is latched "
+                f"at the stream's first submit")
         lane.engine.validate(window)
-        if stream_id not in lane.queues:
+        if not known:
             lane.queues[stream_id] = deque()
             self._stream_lane[stream_id] = lane.modality
             self._seq[stream_id] = 0
             self.stream_stats[stream_id] = StreamStats()
+            if stateful:
+                lane.stateful.add(stream_id)
         seq = self._seq[stream_id]
         self._seq[stream_id] = seq + 1
         lane.queues[stream_id].append(_Queued(window, seq, deadline))
@@ -547,6 +621,161 @@ class StreamEngine:
     def pending(self) -> int:
         """Windows queued across all streams and engines."""
         return sum(lane.pending() for lane in self._lanes.values())
+
+    # -- carried state ---------------------------------------------------
+
+    def _lane_of(self, stream_id: Hashable) -> EngineLane:
+        modality = self._stream_lane.get(stream_id)
+        if modality is None:
+            raise KeyError(f"unknown stream {stream_id!r}")
+        return self._lanes[modality]
+
+    def stateful_of(self, stream_id: Hashable) -> bool:
+        """Whether a known stream carries state across its windows."""
+        return stream_id in self._lane_of(stream_id).stateful
+
+    def reset_state(self, stream_id: Hashable) -> None:
+        """Zero a stateful stream's carried state without retiring it --
+        the gesture-boundary escape hatch: the stream's NEXT dispatched
+        window starts from the cold-start state, exactly as if the
+        stream were newly admitted. Applies from the next dispatch;
+        windows already in flight were dispatched with the old carry.
+        """
+        lane = self._lane_of(stream_id)
+        if stream_id not in lane.stateful:
+            raise ValueError(f"stream {stream_id!r} is not stateful")
+        lane.parked.pop(stream_id, None)
+        for j, owner in enumerate(lane.state_streams):
+            if owner is not _FREE and owner == stream_id:
+                lane.state_streams[j] = _FREE
+
+    def retire(self, stream_id: Hashable) -> int:
+        """Remove a stream entirely: queue, slot, waiting entry, and
+        carried state. Returns the number of queued windows discarded.
+
+        The slot it held is freed with its buffers dead: the next stream
+        admitted there starts from the zero state (the dirty-slot
+        regression tests pin this down). Raises if the stream still has
+        windows in flight (``flush()`` first). ``stream_stats`` keeps the
+        history until the id is reused; a later submit with the same id
+        is a brand-new stream (fresh seq numbering, fresh state).
+        """
+        lane = self._lane_of(stream_id)
+        for step_recs in self._inflight:
+            for rec in step_recs:
+                for entry in rec.entries:
+                    if entry is not None and entry[0] == stream_id:
+                        raise ValueError(
+                            f"stream {stream_id!r} has in-flight "
+                            f"windows; flush() before retiring")
+        dropped = len(lane.queues.pop(stream_id))
+        if stream_id in lane.waiting:
+            lane.waiting.remove(stream_id)
+        for i, sid in enumerate(lane.slots):
+            if sid is not _FREE and sid == stream_id:
+                lane.slots[i] = _FREE
+                lane.slot_runs[i] = 0
+        for j, owner in enumerate(lane.state_streams):
+            if owner is not _FREE and owner == stream_id:
+                lane.state_streams[j] = _FREE
+        lane.parked.pop(stream_id, None)
+        lane.stateful.discard(stream_id)
+        del self._stream_lane[stream_id]
+        self._seq.pop(stream_id, None)
+        self.stream_stats[stream_id].queued -= dropped
+        # Policies with per-stream bookkeeping (e.g. DeadlinePolicy's
+        # aging counters) drop it via the duck-typed forget hook, so a
+        # reused id cannot inherit the retired stream's state.
+        forget = getattr(self.policy, "forget", None)
+        if forget is not None:
+            forget(stream_id)
+        return dropped
+
+    def _lane_state_in(self, lane: EngineLane):
+        """Phase-1 state planning for one lane's dispatch.
+
+        Returns ``(state_in, commit)``: the slot-major state pytree to
+        dispatch with (``None`` for engines without state support) and a
+        ``commit(new_state)`` thunk that advances the lane's state
+        tracking -- called only after EVERY lane's phase 1 succeeded, so
+        a failed synchronous step leaves carried state as untouched as it
+        leaves the queues.
+        """
+        if not lane.supports_state or not lane.stateful:
+            # No stream on this lane carries state: serve it through the
+            # legacy stateless call forms. Engines start from their own
+            # zero state internally (bitwise identical), the lane pays
+            # nothing per step, and a split-less engine keeps the
+            # pipelined deferred-"batch" fallback it would lose on the
+            # stateful path.
+            return None, None
+        if lane.state is None:       # first stateful dispatch: zero state
+            lane.zero_state = lane.engine.init_state(len(lane.slots))
+            lane.state = lane.zero_state
+
+        slots = list(lane.slots)
+        pos = {owner: j for j, owner in enumerate(lane.state_streams)
+               if owner is not _FREE}
+        # Per slot: ("row", j) = carry already in the buffer at row j;
+        # ("parked", sid) = carry parked off-buffer; None = zero row
+        # (free slot, stateless stream, or cold-start stateful stream).
+        src: List[Any] = []
+        for sid in slots:
+            if sid is _FREE or sid not in lane.stateful:
+                src.append(None)
+            elif sid in pos:
+                src.append(("row", pos[sid]))
+            elif sid in lane.parked:
+                src.append(("parked", sid))
+            else:
+                src.append(None)
+        # Fast path: every occupied slot is a stateful stream whose carry
+        # already sits in its own row. Free slots' rows are dead (their
+        # results are discarded), so they never force a rebuild.
+        identity = all(sid is _FREE or s == ("row", i)
+                       for i, (sid, s) in enumerate(zip(slots, src)))
+        if identity:
+            state_in = lane.state
+        else:
+            leaves, treedef = jax.tree_util.tree_flatten(lane.state)
+            zeros = jax.tree_util.tree_flatten(lane.zero_state)[0]
+            parked = {s[1]: jax.tree_util.tree_flatten(lane.parked[s[1]])[0]
+                      for s in src if s is not None and s[0] == "parked"}
+            new_leaves = []
+            for li, leaf in enumerate(leaves):
+                rows = []
+                for s in src:
+                    if s is None:
+                        rows.append(zeros[li][0])
+                    elif s[0] == "row":
+                        rows.append(leaf[s[1]])
+                    else:
+                        rows.append(parked[s[1]][li])
+                new_leaves.append(jnp.stack(rows))
+            state_in = jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+        old_state = lane.state
+        old_owners = list(lane.state_streams)
+        scheduled = {sid for sid in slots if sid is not _FREE}
+
+        def commit(new_state):
+            for j, owner in enumerate(old_owners):
+                if owner is _FREE or owner in scheduled:
+                    continue
+                # The stream lost its slot this step: park its carry
+                # (from the PRE-dispatch buffer) so it can follow the
+                # stream to whichever slot it wins next.
+                lane.parked[owner] = jax.tree_util.tree_map(
+                    lambda a: a[j], old_state)
+            for sid in scheduled:
+                lane.parked.pop(sid, None)
+            lane.state = new_state
+            lane.state_streams = [
+                sid if (sid is not _FREE and sid in lane.stateful)
+                else _FREE
+                for sid in slots]
+
+        return state_in, commit
 
     # -- scheduling ------------------------------------------------------
 
@@ -601,10 +830,12 @@ class StreamEngine:
         completion (``eager``, the synchronous retry-safe mode: an
         exception from ANY lane leaves every queue untouched), dispatches
         asynchronously (pipelined, engine has the async split), or just
-        prepares the batch (pipelined fallback). Phase 2 commits the pops
-        and slot run counts only after every lane's phase 1 succeeded.
+        prepares the batch (pipelined fallback). Phase 2 commits the pops,
+        slot run counts, and carried-state tracking only after every
+        lane's phase 1 succeeded.
         """
         ran: List[_InflightLane] = []
+        state_commits: List[tuple] = []
         for lane in self._lanes.values():
             self.policy.assign(lane)
             heads = [
@@ -615,20 +846,43 @@ class StreamEngine:
                 continue
             batch = lane.engine.prepare(heads, batch_size=len(lane.slots))
             key = lane.engine.shape_key(batch)
+            state_in, state_commit = self._lane_state_in(lane)
             dispatch = getattr(lane.engine, "infer_dispatch", None)
             collect = getattr(lane.engine, "infer_collect", None)
-            if eager:
-                kind, pending = "results", lane.engine.infer(batch)
-            elif dispatch is not None and collect is not None:
-                kind, pending = "handle", dispatch(batch)
+            has_split = dispatch is not None and collect is not None
+            new_state = None
+            if eager or (state_in is not None and not has_split):
+                # Synchronous infer. A stateful engine WITHOUT the async
+                # split also lands here under pipelining: its carry must
+                # advance in dispatch order, so its infer cannot wait
+                # for the (later) collect.
+                if state_in is None:
+                    kind, pending = "results", lane.engine.infer(batch)
+                else:
+                    results, new_state = lane.engine.infer(batch, state_in)
+                    kind, pending = "results", results
+            elif has_split:
+                if state_in is None:
+                    kind, pending = "handle", dispatch(batch)
+                else:
+                    # Async dispatch: new_state is a pytree of device
+                    # futures, threaded into the NEXT dispatch without
+                    # ever blocking on (or copying to) the host.
+                    pending, new_state = dispatch(batch, state_in)
+                    kind = "handle"
             else:
                 kind, pending = "batch", batch
+            if state_commit is not None:
+                state_commits.append((state_commit, new_state))
             entries = [None if w is None else slot
                        for slot, w in enumerate(heads)]
             ran.append(_InflightLane(
                 lane=lane, key=key, entries=entries, kind=kind,
                 pending=pending))
-        # Commit: every lane dispatched -- pop the served heads.
+        # Commit: every lane dispatched -- pop the served heads and
+        # advance each lane's carried state.
+        for commit, new_state in state_commits:
+            commit(new_state)
         for rec in ran:
             lane = rec.lane
             for i, slot in enumerate(rec.entries):

@@ -1,0 +1,83 @@
+"""The bench-regression gate: absolute floors, runner-independent ratio
+fallbacks, and the stateful-cell gating (including the hard
+stateful/stateless floor that must hold even against a baseline that
+predates stateful_rows)."""
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_regression",
+    os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                 "check_regression.py"))
+check_regression = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(check_regression)
+
+
+def _doc(batched=600.0, looped=300.0, stateful=590.0, stateless=600.0,
+         with_stateful=True):
+    doc = {"rows": [{"batch_size": 4,
+                     "batched_windows_per_s": batched,
+                     "looped_windows_per_s": looped,
+                     "speedup": batched / looped}]}
+    if with_stateful:
+        doc["stateful_rows"] = [{
+            "batch_size": 4,
+            "stateless_windows_per_s": stateless,
+            "stateful_windows_per_s": stateful,
+            "stateful_over_stateless": stateful / stateless}]
+    return doc
+
+
+def _run(tmp_path, base, fresh, extra=()):
+    bp, fp = tmp_path / "base.json", tmp_path / "fresh.json"
+    bp.write_text(json.dumps(base))
+    fp.write_text(json.dumps(fresh))
+    return check_regression.main(
+        ["--baseline", str(bp), "--fresh", str(fp), *extra])
+
+
+def test_identical_artifacts_pass(tmp_path):
+    assert _run(tmp_path, _doc(), _doc()) == 0
+
+
+def test_absolute_regression_fails(tmp_path):
+    # Throughput halved AND the batched-vs-looped ratio collapsed.
+    assert _run(tmp_path, _doc(),
+                _doc(batched=300.0, looped=290.0)) == 1
+
+
+def test_slow_runner_passes_via_ratio_fallback(tmp_path):
+    # Uniformly slower machine: absolute floors missed, ratios hold.
+    assert _run(tmp_path, _doc(),
+                _doc(batched=300.0, looped=150.0,
+                     stateful=295.0, stateless=300.0)) == 0
+
+
+def test_stateful_cell_regression_fails(tmp_path):
+    # Stateful throughput collapsed relative to its own stateless cell.
+    assert _run(tmp_path, _doc(),
+                _doc(stateful=350.0, stateless=600.0)) == 1
+
+
+def test_missing_fresh_stateful_cell_fails(tmp_path):
+    assert _run(tmp_path, _doc(), _doc(with_stateful=False)) == 1
+
+
+def test_old_baseline_skips_relative_gate_but_keeps_hard_floor(tmp_path):
+    """A baseline predating stateful_rows must not disable stateful
+    gating entirely: the runner-independent hard floor only needs the
+    fresh artifact, so a 30%-cost state carry still fails."""
+    old_base = _doc(with_stateful=False)
+    assert _run(tmp_path, old_base, _doc()) == 0
+    assert _run(tmp_path, old_base,
+                _doc(stateful=420.0, stateless=600.0)) == 1
+
+
+def test_stateful_ratio_floor_is_configurable(tmp_path):
+    fresh = _doc(stateful=540.0, stateless=600.0)     # ratio 0.90
+    assert _run(tmp_path, _doc(), fresh) == 1
+    assert _run(tmp_path, _doc(), fresh,
+                extra=("--stateful-ratio-floor", "0.85")) == 0

@@ -1,0 +1,502 @@
+"""Stateful streaming: per-stream carried state (LIF membranes) threaded
+through the whole serving stack.
+
+The contract under test, at every layer:
+
+  * ``snn_apply`` -- running T steps in W chained chunks (feeding each
+    chunk the previous chunk's ``state``) is bitwise identical to one
+    uninterrupted T-step run, in every execution mode (time_serial,
+    layer_serial, fused fc, Pallas kernel).
+  * ``BatchedClosedLoop`` -- ``init_state`` / ``infer(batch, state)``
+    expose that chain per batch slot; the zero state reproduces the
+    stateless call bitwise.
+  * ``StreamEngine`` -- a stream served in W windows with
+    ``stateful=True`` equals the single uninterrupted scan, at
+    B in {1, 4, 8}, sync and pipelined, kernel and reference paths;
+    state follows the STREAM through slot reassignment (not the slot
+    index), slots are zeroed on admission (dirty-slot regression), and
+    ``reset_state`` / ``retire`` drop a carry on demand.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SNNConfig, init_snn, snn_apply, snn_init_state
+from repro.core import events as ev
+from repro.core.pipeline import (BatchedClosedLoop, ClosedLoopPipeline,
+                                 pwm_from_logits)
+from repro.kernels import lif_scan
+from repro.serving import DeadlinePolicy, StreamEngine
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return SNNConfig(height=32, width=32, time_bins=4, conv1_features=4,
+                     conv2_features=8, hidden=32, num_classes=11)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_snn(jax.random.PRNGKey(0), cfg)
+
+
+def _windows(n, seed=0, mean_events=1500):
+    rng = np.random.default_rng(seed)
+    return [ev.synthetic_gesture_events(rng, i % 11, mean_events=mean_events,
+                                        height=32, width=32)
+            for i in range(n)]
+
+
+def _vox_stream(windows, cfg):
+    """Voxelize a window sequence as ONE uninterrupted event stream:
+    concatenated events, W * time_bins bins -- bitwise the concatenation
+    of the per-window grids (same bin width)."""
+    d = windows[0].duration_us
+    x = np.concatenate([w.x for w in windows])
+    y = np.concatenate([w.y for w in windows])
+    t = np.concatenate([w.t + k * d for k, w in enumerate(windows)])
+    p = np.concatenate([w.p for w in windows])
+    return ev.voxelize(
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(t), jnp.asarray(p),
+        duration_us=d * len(windows), time_bins=cfg.time_bins * len(windows),
+        height=cfg.height, width=cfg.width)
+
+
+def _readout(spikes_bt):
+    """The engine's readout on a (B, T', classes) spike train slice."""
+    logits = spikes_bt.mean(axis=1) * 10.0
+    return (np.asarray(jnp.argmax(logits, -1)),
+            np.asarray(pwm_from_logits(logits)))
+
+
+def _uninterrupted_oracle(params, cfg, streams):
+    """Per-(stream, window) readouts sliced from ONE uninterrupted scan
+    over each stream's whole event sequence."""
+    ids = sorted(streams)
+    vox = jnp.stack([_vox_stream(streams[sid], cfg) for sid in ids])
+    out = snn_apply(params, vox, cfg, mode="layer_serial")
+    per_window = {}
+    w = cfg.time_bins
+    for k in range(next(iter(streams.values())).__len__()):
+        per_window[k] = _readout(out["out_spikes"][:, k * w:(k + 1) * w])
+    return ids, per_window
+
+
+def _assert_matches_oracle(results, ids, per_window):
+    for r in results:
+        b = ids.index(r.stream_id)
+        preds, pwm = per_window[r.seq]
+        np.testing.assert_array_equal(r.result.label_pred, preds[b:b + 1])
+        np.testing.assert_array_equal(r.result.pwm, pwm[b:b + 1])
+
+
+# -- snn_apply: the chaining contract in every mode --------------------------
+
+@pytest.mark.parametrize("mode,kw", [
+    ("time_serial", {}),
+    ("layer_serial", {}),
+    ("layer_serial", {"fuse_fc": True}),
+    ("layer_serial", {"lif_scan_fn": lif_scan}),
+], ids=["time_serial", "layer_serial", "fused_fc", "pallas_kernel"])
+def test_snn_apply_chaining_matches_uninterrupted(cfg, params, mode, kw):
+    """W chained chunks == one uninterrupted scan: spikes bitwise, final
+    state bitwise, in every execution order."""
+    b, t = 3, 8
+    vox = (jax.random.uniform(jax.random.PRNGKey(1), (b, t, 2, 32, 32))
+           < 0.05).astype(jnp.float32)
+    full = snn_apply(params, vox, cfg, mode=mode, **kw)
+    state = snn_init_state(cfg, b)
+    chunks = []
+    for lo, hi in ((0, 3), (3, 5), (5, 8)):
+        out = snn_apply(params, vox[:, lo:hi], cfg, mode=mode,
+                        state=state, **kw)
+        state = out["state"]
+        chunks.append(out["out_spikes"])
+    np.testing.assert_array_equal(
+        np.asarray(jnp.concatenate(chunks, axis=1)),
+        np.asarray(full["out_spikes"]))
+    for name, v in full["state"].items():
+        assert state[name].shape == (b, *v.shape[1:])
+        np.testing.assert_array_equal(np.asarray(state[name]),
+                                      np.asarray(v))
+
+
+def test_snn_apply_zero_state_equals_stateless(cfg, params):
+    """snn_init_state is the cold-start condition: explicit zero state
+    reproduces the stateless call bitwise (the property that lets one
+    executable serve both paths)."""
+    vox = (jax.random.uniform(jax.random.PRNGKey(2), (2, 4, 2, 32, 32))
+           < 0.05).astype(jnp.float32)
+    for mode in ("time_serial", "layer_serial"):
+        a = snn_apply(params, vox, cfg, mode=mode)
+        z = snn_apply(params, vox, cfg, mode=mode,
+                      state=snn_init_state(cfg, 2))
+        np.testing.assert_array_equal(np.asarray(a["out_spikes"]),
+                                      np.asarray(z["out_spikes"]))
+
+
+# -- BatchedClosedLoop: the engine-level state API ---------------------------
+
+def test_batched_loop_stateful_infer_contract(cfg, params):
+    ws = _windows(3, seed=3)
+    loop = BatchedClosedLoop(params, cfg)
+    batch = ev.pad_event_windows(ws)
+    state = loop.init_state(batch.batch_size)
+    assert set(state) == {"conv1", "conv2", "fc1", "fc2"}
+    assert all(v.shape[0] == batch.batch_size for v in state.values())
+    # Zero state == stateless, bitwise, and new_state is slot-major.
+    stateless = loop.infer(batch)
+    results, new_state = loop.infer(batch, state)
+    for a, b in zip(stateless, results):
+        np.testing.assert_array_equal(a.pwm, b.pwm)
+        assert a.energy_mj == b.energy_mj
+    assert all(new_state[k].shape == state[k].shape for k in state)
+    # The carried membrane is live (some slot moved off zero).
+    assert any(float(jnp.abs(v).sum()) > 0 for v in new_state.values())
+
+
+def test_batched_loop_window_chaining(cfg, params):
+    """infer(batch, state) chained over W windows == the uninterrupted
+    scan, per batch slot."""
+    streams = {s: _windows(3, seed=10 + s) for s in range(2)}
+    ids, per_window = _uninterrupted_oracle(params, cfg, streams)
+    loop = BatchedClosedLoop(params, cfg)
+    state = loop.init_state(2)
+    for k in range(3):
+        batch = ev.pad_event_windows([streams[sid][k] for sid in ids])
+        results, state = loop.infer(batch, state)
+        preds, pwm = per_window[k]
+        for b, res in enumerate(results):
+            np.testing.assert_array_equal(res.label_pred, preds[b:b + 1])
+            np.testing.assert_array_equal(res.pwm, pwm[b:b + 1])
+
+
+# -- StreamEngine: W-window stateful serving == uninterrupted scan -----------
+
+@pytest.mark.parametrize("pipeline_depth", [0, 1], ids=["sync", "pipelined"])
+@pytest.mark.parametrize("path", ["reference", "kernel"])
+@pytest.mark.parametrize("b", [1, 4, 8])
+def test_stream_engine_stateful_chaining(cfg, params, b, path,
+                                         pipeline_depth):
+    """The acceptance criterion: a stream served in W windows with state
+    carry equals the single uninterrupted scan -- B in {1, 4, 8}, sync
+    and pipelined, kernel (Pallas lif_scan + fused fc) and reference
+    paths. The oracle is one reference scan; the kernel path passing it
+    re-pins the kernels' bitwise contract end to end."""
+    streams = {f"cam{s}": _windows(2, seed=20 + 7 * s + b)
+               for s in range(b)}
+    kernel_kw = ({"lif_scan_fn": lif_scan, "fuse_fc": True}
+                 if path == "kernel" else {})
+    eng = StreamEngine(params, cfg, max_streams=b,
+                       pipeline_depth=pipeline_depth, **kernel_kw)
+    for sid, ws in streams.items():
+        for w in ws:
+            eng.submit(sid, w, stateful=True)
+    results = eng.run()
+    assert len(results) == 2 * b
+    assert eng.in_flight == 0 and eng.pending() == 0
+    ids, per_window = _uninterrupted_oracle(params, cfg, streams)
+    _assert_matches_oracle(results, ids, per_window)
+
+
+def test_stateful_and_stateless_streams_coexist(cfg, params):
+    """Mixed batch: the stateful stream chains while its stateless
+    neighbours stay bitwise equal to fresh single-window runs -- slot
+    state never leaks sideways."""
+    chained = _windows(3, seed=30)
+    fresh = _windows(3, seed=31)
+    eng = StreamEngine(params, cfg, max_streams=2)
+    for k in range(3):
+        eng.submit("carry", chained[k], stateful=True)
+        eng.submit("amnesiac", fresh[k])
+    results = eng.run()
+    ids, per_window = _uninterrupted_oracle(params, cfg,
+                                            {"carry": chained})
+    _assert_matches_oracle([r for r in results if r.stream_id == "carry"],
+                           ids, per_window)
+    pipe = ClosedLoopPipeline(params, cfg)
+    for r in results:
+        if r.stream_id != "amnesiac":
+            continue
+        ref = pipe(fresh[r.seq])
+        np.testing.assert_array_equal(r.result.pwm, ref.pwm)
+        assert r.result.energy_mj == ref.energy_mj
+
+
+# -- slot hygiene: dirty slots, reset, retire --------------------------------
+
+def test_dirty_slot_is_zeroed_for_new_stream(cfg, params):
+    """Slot-retirement leak surface: after a stateful stream drains (or
+    is retired), a NEW stream admitted into the same slot -- whose state
+    row still physically holds the old membrane -- must be bitwise
+    identical to a fresh B=1 run. Checked for a stateless and a stateful
+    newcomer, and after an explicit retire()."""
+    hot = _windows(2, seed=40, mean_events=2500)
+    eng = StreamEngine(params, cfg, max_streams=1)   # one slot: always dirty
+    for w in hot:
+        eng.submit("hot", w, stateful=True)
+    eng.run()
+
+    pipe = ClosedLoopPipeline(params, cfg)
+    w_a, w_b, w_c = _windows(3, seed=41)
+    eng.submit("newcomer", w_a)                      # stateless admit
+    r = eng.run()[0]
+    ref = pipe(w_a)
+    np.testing.assert_array_equal(r.result.pwm, ref.pwm)
+    assert r.result.energy_mj == ref.energy_mj
+
+    eng.submit("newcomer2", w_b, stateful=True)      # stateful cold start
+    r = eng.run()[0]
+    ref = pipe(w_b)
+    np.testing.assert_array_equal(r.result.pwm, ref.pwm)
+
+    assert eng.retire("newcomer2") == 0              # retire drops the carry
+    eng.submit("newcomer3", w_c, stateful=True)
+    r = eng.run()[0]
+    ref = pipe(w_c)
+    np.testing.assert_array_equal(r.result.pwm, ref.pwm)
+
+
+def test_reset_state_is_a_gesture_boundary(cfg, params):
+    """reset_state() zeroes a live stream's carry: the next window runs
+    from cold start, as if the stream were newly admitted."""
+    ws = _windows(3, seed=50)
+    pipe = ClosedLoopPipeline(params, cfg)
+    eng = StreamEngine(params, cfg, max_streams=2)
+    eng.submit("s", ws[0], stateful=True)
+    eng.run()
+    eng.reset_state("s")
+    eng.submit("s", ws[1])
+    r = eng.run()[0]
+    ref = pipe(ws[1])                                # == fresh run
+    np.testing.assert_array_equal(r.result.pwm, ref.pwm)
+    with pytest.raises(ValueError, match="not stateful"):
+        eng.submit("plain", ws[2])
+        eng.reset_state("plain")
+    with pytest.raises(KeyError):
+        eng.reset_state("nobody")
+
+
+def test_retire_frees_stream_and_validates(cfg, params):
+    ws = _windows(2, seed=60)
+    eng = StreamEngine(params, cfg, max_streams=2)
+    eng.submit("x", ws[0], stateful=True)
+    eng.submit("x", ws[1])
+    eng.run()
+    assert eng.retire("x") == 0
+    with pytest.raises(KeyError):
+        eng.retire("x")                              # id is gone
+    # Same id re-admitted: a brand-new stream, seq restarts at 0.
+    assert eng.submit("x", ws[0], stateful=True) == 0
+    assert eng.run()[0].seq == 0
+    # Retiring with queued windows discards and reports them.
+    eng.submit("y", ws[0])
+    eng.submit("y", ws[1])
+    assert eng.retire("y") == 2
+    assert eng.pending() == 0
+    # In-flight windows block retirement.
+    eng2 = StreamEngine(params, cfg, max_streams=1, pipeline_depth=1)
+    eng2.submit("z", ws[0], stateful=True)
+    eng2.step()                                      # dispatched, uncollected
+    with pytest.raises(ValueError, match="in-flight"):
+        eng2.retire("z")
+    eng2.flush()
+    assert eng2.retire("z") == 0
+
+
+# -- state follows the stream, not the slot ----------------------------------
+
+class _RecordingDeadline(DeadlinePolicy):
+    """DeadlinePolicy that records each round's slot assignment."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.history = []
+
+    def assign(self, lane):
+        super().assign(lane)
+        self.history.append(list(lane.slots))
+
+
+def test_state_follows_stream_across_deadline_reorder(cfg, params):
+    """Under DeadlinePolicy a stateful stream gets rotated out by urgent
+    traffic and re-admitted -- often into a DIFFERENT slot index. Its
+    carry must follow the stream, not the slot: the chained results still
+    equal the uninterrupted scan."""
+    carry = _windows(4, seed=70)
+    u0 = _windows(4, seed=80)
+    u1 = _windows(3, seed=81)
+    policy = _RecordingDeadline(fair_quantum=1, aging=0.0, max_wait=2)
+    eng = StreamEngine(params, cfg, max_streams=2, policy=policy)
+    # Phase 1: carry (slack deadline) is outranked by urgent0, so EDF
+    # puts urgent0 in slot 0 and carry in slot 1; with nobody waiting
+    # there is no rotation, and carry chains two windows in slot 1.
+    for k, w in enumerate(carry):
+        eng.submit("carry", w, deadline=1000.0 + k, stateful=True)
+    for w in u0:
+        eng.submit("urgent0", w, deadline=0.0)
+    results = eng.step() + eng.step()
+    # Phase 2: a second urgent stream starts waiting -> every round is
+    # contended, carry is rotated out (fair_quantum=1), passed over by
+    # EDF, and finally re-admitted via the max_wait anti-starvation
+    # bound -- into slot 0, while an urgent stream still cycles slot 1.
+    for w in u1:
+        eng.submit("urgent1", w, deadline=0.0)
+    results += eng.run()
+    assert len(results) == 11
+    # The reorder actually happened: "carry" held >= 2 distinct slots.
+    slots_held = {i for rnd in policy.history
+                  for i, sid in enumerate(rnd) if sid == "carry"}
+    assert len(slots_held) >= 2, policy.history
+    ids, per_window = _uninterrupted_oracle(params, cfg, {"carry": carry})
+    _assert_matches_oracle([r for r in results if r.stream_id == "carry"],
+                           ids, per_window)
+
+
+# -- protocol uniformity ------------------------------------------------------
+
+def test_stateful_submit_validation(cfg, params):
+    from tests.test_slot_policy import StubEngine
+    stub = StreamEngine(engines=[StubEngine()], max_streams=2)
+    with pytest.raises(ValueError, match="carried-state"):
+        stub.submit("a", object(), stateful=True)
+    assert stub.pending() == 0                       # nothing latched
+    eng = StreamEngine(params, cfg, max_streams=2)
+    ws = _windows(2, seed=90)
+    eng.submit("a", ws[0], stateful=True)
+    with pytest.raises(ValueError, match="latched"):
+        eng.submit("a", ws[1], stateful=False)
+    assert eng.stateful_of("a") is True
+    eng.submit("b", ws[1])
+    assert eng.stateful_of("b") is False
+    # A rejected stateful toggle burns no sequence number.
+    assert eng.submit("a", ws[1]) == 1
+
+
+def test_legacy_two_arg_scan_fn_rejected_at_construction(cfg, params):
+    """The engine threads v0 through lif_scan_fn; a pre-stateful
+    two-argument callable must be rejected at construction with a clear
+    message, not with an opaque TypeError mid-trace."""
+    with pytest.raises(ValueError, match="lif_scan_fn"):
+        BatchedClosedLoop(params, cfg, lif_scan_fn=lambda c, p: None)
+    with pytest.raises(ValueError, match="lif_scan_fn"):
+        ClosedLoopPipeline(params, cfg, lif_scan_fn=lambda c, p: None)
+    # Three-positional callables (and v0-defaulted ones) are fine.
+    BatchedClosedLoop(params, cfg, lif_scan_fn=lif_scan)
+    BatchedClosedLoop(params, cfg,
+                      lif_scan_fn=lambda c, p, v0=None: lif_scan(c, p, v0))
+
+
+def test_retire_forgets_policy_bookkeeping(cfg, params):
+    """retire() must clear a policy's per-stream bookkeeping through the
+    duck-typed forget hook, so a reused id starts with fresh aging."""
+    policy = DeadlinePolicy(max_wait=16)
+    eng = StreamEngine(params, cfg, max_streams=1, policy=policy)
+    ws = _windows(2, seed=96)
+    eng.submit("hog", ws[0], deadline=0.0)
+    eng.submit("aged", ws[1], deadline=5.0)
+    eng.step()                          # "aged" passed over: counter > 0
+    assert policy._waited.get("aged", 0) > 0
+    eng.retire("aged")
+    assert "aged" not in policy._waited
+    eng.run()
+
+
+class _StatefulStub:
+    """StubEngine + init_state: a stateful-capable engine WITHOUT the
+    async dispatch/collect split."""
+
+    modality = "stub"
+
+    def __init__(self):
+        self.duration_us = None
+        self.infer_calls = 0
+
+    def validate(self, item):
+        pass
+
+    def prepare(self, items, *, batch_size):
+        return items
+
+    def shape_key(self, batch):
+        return (len(batch),)
+
+    def init_state(self, batch_size):
+        return {"v": jnp.zeros((batch_size,))}
+
+    def infer(self, batch, state=None):
+        from repro.core.pipeline import ClosedLoopResult
+        self.infer_calls += 1
+        results = [None if it is None else ClosedLoopResult(
+            label_pred=np.zeros(1, np.int64), pwm=np.zeros((1, 4)),
+            latency_ms=1.0, energy_mj=1.0, breakdown={}, realtime=True,
+            sustained_rate_hz=1.0) for it in batch]
+        if state is None:
+            return results
+        return results, {"v": state["v"] + 1.0}
+
+
+def test_splitless_engine_keeps_pipelined_deferral_when_stateless(cfg):
+    """A stateful-capable engine without the async split: stateless
+    pipelined serving keeps the deferred-infer fallback (infer runs at
+    collect), while stateful streams force infer at dispatch order so
+    the carry chains correctly."""
+    stub = _StatefulStub()
+    eng = StreamEngine(engines=[stub], max_streams=1, pipeline_depth=1)
+    eng.submit("a", object())                       # stateless
+    assert eng.step() == [] and stub.infer_calls == 0   # deferred
+    assert len(eng.flush()) == 1 and stub.infer_calls == 1
+
+    stub2 = _StatefulStub()
+    eng2 = StreamEngine(engines=[stub2], max_streams=1, pipeline_depth=1)
+    eng2.submit("a", object(), stateful=True)
+    assert eng2.step() == [] and stub2.infer_calls == 1  # eager at dispatch
+    lane = eng2._lanes["stub"]
+    assert float(lane.state["v"][0]) == 1.0              # carry advanced
+    eng2.submit("a", object())
+    assert len(eng2.step()) == 1
+    eng2.flush()
+    assert float(lane.state["v"][0]) == 2.0              # chained
+
+
+def test_frame_engine_state_is_trivially_empty(cfg, params):
+    """The CUTIE wing is feedforward: init_state is the empty pytree and
+    a stateful frame stream behaves exactly like a stateless one -- the
+    protocol stays uniform across wings."""
+    from repro.core import FrameTCNEngine, TCNConfig, init_tcn
+    from repro.core import frames as fr
+    tcfg = TCNConfig(height=32, width=32, conv1_features=4,
+                     conv2_features=8, hidden=32, num_classes=11)
+    fr_eng = FrameTCNEngine(init_tcn(jax.random.PRNGKey(2), tcfg), tcfg)
+    assert fr_eng.init_state(4) == {}
+    rng = np.random.default_rng(7)
+    frames = [fr.synthetic_gesture_frames(rng, k, height=32, width=32)
+              for k in range(2)]
+    stateless = fr_eng.infer_frames(frames)
+    eng = StreamEngine(engines=[FrameTCNEngine(
+        init_tcn(jax.random.PRNGKey(2), tcfg), tcfg)], max_streams=2)
+    for f in frames:
+        eng.submit("cam", f, stateful=True)
+    out = eng.run()
+    for r in out:
+        np.testing.assert_array_equal(r.result.pwm,
+                                      stateless[r.seq].pwm)
+        assert r.result.energy_mj == stateless[r.seq].energy_mj
+
+
+def test_pipelined_state_stays_on_device(cfg, params):
+    """Pipelined serving chains membranes dispatch-to-dispatch as device
+    arrays (jax futures): the lane's carried state is never a host
+    (numpy) buffer."""
+    eng = StreamEngine(params, cfg, max_streams=2, pipeline_depth=1)
+    ws = _windows(4, seed=95)
+    for k, w in enumerate(ws):
+        eng.submit("s", w, stateful=True)
+    eng.step()
+    eng.step()          # two dispatches in flight / chained
+    lane = eng._lanes["event"]
+    assert lane.state is not None
+    for leaf in jax.tree_util.tree_leaves(lane.state):
+        assert isinstance(leaf, jax.Array)
+    eng.flush()

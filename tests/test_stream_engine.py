@@ -174,10 +174,15 @@ def test_batched_loop_bitwise_parity(cfg, params, b):
 
 
 def test_batched_loop_parity_with_pallas_kernel(cfg, params):
-    """Parity also holds when the SNE Pallas kernel drives the scan."""
+    """Parity also holds when the SNE Pallas kernel drives the scan.
+
+    ``lif_scan_fn`` is the engine's scan hook; since the stateful-
+    streaming refactor the engine threads carried state through it, so
+    it must accept the ``(currents, params, v0)`` signature --
+    ``ops.lif_scan`` already does."""
     from repro.kernels import lif_scan
     ws = _windows(3, seed=21)
-    fn = lambda c, p: lif_scan(c, p)
+    fn = lif_scan
     pipe = ClosedLoopPipeline(params, cfg, lif_scan_fn=fn)
     looped = [pipe(w) for w in ws]
     batched = BatchedClosedLoop(params, cfg, lif_scan_fn=fn).infer_windows(ws)

@@ -20,6 +20,11 @@ ratio itself (``--stateful-ratio-floor``, default 0.95): carried state
 must cost less than 5% of stateless throughput on ANY runner, since both
 sides of the ratio run on the same machine.
 
+The ``fusion_rows`` cell (cross-modal FusionSession ticks/s) follows the
+same pattern: absolute fused ticks/s against the baseline, with the
+runner-independent fused-vs-separate ratio (one engine serving both
+wings vs two single-wing engines, same machine) as the fallback.
+
 Usage (CI runs exactly this, after ``benchmarks.kernel_bench``):
 
     PYTHONPATH=src python -m benchmarks.check_regression
@@ -129,6 +134,27 @@ def main(argv=None) -> int:
             print(f"OK: stateful/stateless {fresh_ratio:.3f} >= "
                   f"{args.stateful_ratio_floor:.2f} (state carry is "
                   f"effectively free)")
+
+    # The cross-modal fusion cell: a fresh run missing it is a harness
+    # regression; a baseline predating fusion_rows only warns (artifact
+    # transition), the same policy as stateful_rows.
+    if "fusion_rows" not in fresh_doc:
+        print("FAIL: fresh artifact has no fusion_rows cell")
+        ok = False
+    elif "fusion_rows" not in base_doc:
+        print("WARN: baseline has no fusion_rows cell (predates fusion "
+              "serving); skipping the fusion gate -- refresh the "
+              "baseline")
+    else:
+        fbase = base_doc["fusion_rows"][0]
+        ffresh = fresh_doc["fusion_rows"][0]
+        ok &= _gate(
+            f"fused ticks/s @ S={ffresh.get('sessions')}",
+            float(fbase["fused_ticks_per_s"]),
+            float(ffresh["fused_ticks_per_s"]),
+            float(fbase["fused_over_separate"]),
+            float(ffresh["fused_over_separate"]),
+            "fused-vs-separate ratio", args.tolerance)
 
     return 0 if ok else 1
 

@@ -10,7 +10,9 @@ of the batched StreamEngine (fused fc kernels + pipelined step) against
 the looped single-window pipeline at several batch sizes, and writes a
 ``BENCH_stream.json`` artifact; ``stateful_rows`` adds the stateful-vs-
 stateless serving cell (carried LIF membranes on vs off, same engine) to
-the same artifact. ``hetero_rows`` measures the two
+the same artifact; ``fusion_rows`` adds the cross-modal fusion cell
+(FusionSession serving paired event+frame ticks through one engine vs
+the two wings on separate engines). ``hetero_rows`` measures the two
 accelerator wings through the unified engine protocol -- event-SNN vs
 frame-TCN throughput, alone and mixed in one engine -- and writes
 ``BENCH_hetero.json``.
@@ -39,7 +41,7 @@ from repro.core.pipeline import BatchedClosedLoop, ClosedLoopPipeline
 from repro.kernels import (fc_lif_scan, lif_scan, lif_scan_ref,
                            pack_ternary_weights, ternary_matmul,
                            ternary_matmul_ref)
-from repro.serving import StreamEngine
+from repro.serving import FusionSession, StreamEngine
 
 REPEATS = 5
 
@@ -159,11 +161,12 @@ def stream_rows(batch_sizes=(1, 2, 4, 8), windows_per_stream=16,
     def batched_cell(b):
         eng = StreamEngine(params, cfg, max_streams=b, fuse_fc=fuse_fc,
                            pipeline_depth=pipeline_depth)
+        handles = {s: eng.open(stream_id=s) for s in range(b)}
 
         def submit_all():
             for s in range(b):
                 for w in windows[s]:
-                    eng.submit(s, w)
+                    handles[s].submit(w)
 
         submit_all()            # warm-up: compile the (B, bucket) shapes
         eng.run()
@@ -247,11 +250,13 @@ def stateful_rows(batch_sizes=(1, 4, 8), windows_per_stream=16,
     def cell(b, stateful):
         eng = StreamEngine(params, cfg, max_streams=b, fuse_fc=fuse_fc,
                            pipeline_depth=pipeline_depth)
+        handles = {s: eng.open(stream_id=s, stateful=stateful)
+                   for s in range(b)}
 
         def submit_all():
             for s in range(b):
                 for w in windows[s]:
-                    eng.submit(s, w, stateful=stateful)
+                    handles[s].submit(w)
 
         submit_all()            # warm-up: compile the (B, bucket) shapes
         eng.run()
@@ -297,6 +302,131 @@ def stateful_rows(batch_sizes=(1, 4, 8), windows_per_stream=16,
     return rows
 
 
+def fusion_rows(sessions=2, ticks_per_session=8, repeats=REPEATS,
+                out_json="BENCH_stream.json"):
+    """Cross-modal fusion throughput: fused event+frame streams (one
+    FusionSession per sensor head, both wings in ONE StreamEngine, one
+    jit'd call per wing per step) vs the same workload with the two
+    wings served SEPARATELY (an event-only and a frame-only engine run
+    back to back). A tick = one event window + one frame window + the
+    late-logit fuse; the fused side also pays the host-side pairing, so
+    the ratio (fused / separate) is the cost of the fusion abstraction
+    -- it should sit near (or above, thanks to shared stepping) 1.0.
+    Appended to the ``stream_rows`` artifact under ``fusion_rows`` and
+    gated by ``check_regression`` with the runner-independent ratio
+    fallback."""
+    scfg = SNNConfig(height=32, width=32, time_bins=8, conv1_features=4,
+                     conv2_features=8, hidden=32, num_classes=11)
+    tcfg = TCNConfig(height=32, width=32, conv1_features=4,
+                     conv2_features=8, hidden=32, num_classes=11)
+    snn_params = init_snn(jax.random.PRNGKey(0), scfg)
+    tcn_params = init_tcn(jax.random.PRNGKey(1), tcfg)
+    rng = np.random.default_rng(0)
+    ticks = {s: [(ev.synthetic_gesture_events(rng, (s + k) % 11,
+                                              mean_events=3000,
+                                              height=32, width=32),
+                  fr.synthetic_gesture_frames(rng, (s + k) % 11,
+                                              height=32, width=32))
+                 for k in range(ticks_per_session)]
+             for s in range(sessions)}
+    n_ticks = sessions * ticks_per_session
+
+    def fused_cell():
+        eng = StreamEngine(
+            engines=[BatchedClosedLoop(snn_params, scfg),
+                     FrameTCNEngine(tcn_params, tcfg)],
+            max_streams=sessions)
+        sess = {s: FusionSession(eng, session_id=f"head{s}")
+                for s in range(sessions)}
+
+        def submit_all():
+            for s in range(sessions):
+                for ev_w, fr_w in ticks[s]:
+                    sess[s].submit(ev_w, fr_w)
+
+        def drain_all():
+            # One engine drain; rows routed across the sharing sessions
+            # (each absorb() keeps its own rows, hands the rest on).
+            rows = eng.run()
+            n = 0
+            for s in sess.values():
+                rows = s.absorb(rows)
+                n += len(s.drain())
+            assert not rows
+            return n
+
+        submit_all()            # warm-up: compile both wings' shapes
+        drain_all()
+
+        def measure():
+            submit_all()
+            t0 = time.perf_counter()
+            n = drain_all()
+            assert n == n_ticks
+            return n / (time.perf_counter() - t0)
+
+        return measure
+
+    def separate_cell():
+        ev_eng = StreamEngine(engines=[BatchedClosedLoop(snn_params,
+                                                         scfg)],
+                              max_streams=sessions)
+        fr_eng = StreamEngine(engines=[FrameTCNEngine(tcn_params, tcfg)],
+                              max_streams=sessions)
+        ev_h = {s: ev_eng.open(stream_id=f"dvs{s}")
+                for s in range(sessions)}
+        fr_h = {s: fr_eng.open(stream_id=f"cam{s}")
+                for s in range(sessions)}
+
+        def submit_all():
+            for s in range(sessions):
+                for ev_w, fr_w in ticks[s]:
+                    ev_h[s].submit(ev_w)
+                    fr_h[s].submit(fr_w)
+
+        submit_all()            # warm-up
+        ev_eng.run()
+        fr_eng.run()
+
+        def measure():
+            submit_all()
+            t0 = time.perf_counter()
+            n = len(ev_eng.run())
+            n_f = len(fr_eng.run())
+            assert n == n_f == n_ticks
+            return n / (time.perf_counter() - t0)
+
+        return measure
+
+    cells = (fused_cell(), separate_cell())
+    samples = ([], [])
+    for _ in range(repeats):
+        samples[0].append(cells[0]())
+        samples[1].append(cells[1]())
+
+    tps_fused = float(np.median(samples[0]))
+    tps_sep = float(np.median(samples[1]))
+    ratio = tps_fused / tps_sep
+    rows = [(f"stream_fusion_S{sessions}", 1e6 / tps_fused,
+             f"fused_tps={tps_fused:.1f};separate_tps={tps_sep:.1f};"
+             f"ratio={ratio:.3f}")]
+    artifact = [{"sessions": sessions,
+                 "ticks_per_session": ticks_per_session,
+                 "separate_ticks_per_s": tps_sep,
+                 "fused_ticks_per_s": tps_fused,
+                 "fused_over_separate": ratio}]
+    if out_json:
+        try:
+            with open(out_json) as f:
+                doc = json.load(f)
+        except FileNotFoundError:
+            doc = {"benchmark": "stream_closed_loop"}
+        doc["fusion_rows"] = artifact
+        with open(out_json, "w") as f:
+            json.dump(doc, f, indent=2)
+    return rows
+
+
 def hetero_rows(slots=4, windows_per_stream=8,
                 out_json="BENCH_hetero.json"):
     """Unified-engine throughput: the event-SNN wing vs the frame-TCN wing
@@ -321,11 +451,13 @@ def hetero_rows(slots=4, windows_per_stream=8,
 
     def run(engine_sets, submits):
         eng = StreamEngine(engines=engine_sets, max_streams=slots)
+        handles = {sid: eng.open(modality=modality, stream_id=sid)
+                   for sid, modality, _ in submits}
 
         def submit_all():
-            for sid, modality, ws in submits:
+            for sid, _, ws in submits:
                 for w in ws:
-                    eng.submit(sid, w, modality=modality)
+                    handles[sid].submit(w)
 
         submit_all()                          # warm-up: compile
         eng.run()
@@ -367,7 +499,7 @@ def hetero_rows(slots=4, windows_per_stream=8,
 def main():
     for name, us, derived in (lif_rows() + ternary_rows() + fc_fusion_rows()
                               + stream_rows() + stateful_rows()
-                              + hetero_rows()):
+                              + fusion_rows() + hetero_rows()):
         print(f"{name},{us:.1f},{derived}")
 
 

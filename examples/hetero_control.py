@@ -43,22 +43,28 @@ def main():
     )
 
     # A mixed fleet: DVS sensors (urgent flight loops, tight deadlines)
-    # and frame cameras (slack monitoring loops).
+    # and frame cameras (slack monitoring loops). One handle per sensor:
+    # modality is latched at open, deadlines ride each submit.
+    handles = {f"dvs{s}": engine.open(modality="event",
+                                      stream_id=f"dvs{s}")
+               for s in range(EVENT_STREAMS)}
+    handles.update({f"cam{s}": engine.open(modality="frame",
+                                           stream_id=f"cam{s}")
+                    for s in range(FRAME_STREAMS)})
+
     def submit_round(k):
         for s in range(EVENT_STREAMS):
-            engine.submit(
-                f"dvs{s}",
+            handles[f"dvs{s}"].submit(
                 ev.synthetic_gesture_events(
                     rng, (s + k) % scfg.num_classes, mean_events=4000,
                     height=scfg.height, width=scfg.width),
-                modality="event", deadline=float(10 * k + s))
+                deadline=float(10 * k + s))
         for s in range(FRAME_STREAMS):
-            engine.submit(
-                f"cam{s}",
+            handles[f"cam{s}"].submit(
                 fr.synthetic_gesture_frames(
                     rng, (s + k) % tcfg.num_classes,
                     height=tcfg.height, width=tcfg.width),
-                modality="frame", deadline=float(10 * k + 100 + s))
+                deadline=float(10 * k + 100 + s))
 
     submit_round(0)             # warm-up: compiles both engines' shapes
     engine.run()

@@ -7,7 +7,12 @@ so every engine step runs ONE jit'd closed-loop inference for a whole
 batch of streams. Per-stream Kraken energy/latency accounting is identical
 to running each window alone through ClosedLoopPipeline.
 
-One stream ("tracker") is long-lived and STATEFUL: submitted with
+Streams are driven through the session-handle API: ``engine.open(...)``
+returns a StreamHandle owning the stream's lifecycle (submit /
+reset_state / checkpoint / close); ``engine.run()`` stays the completion
+surface.
+
+One stream ("tracker") is long-lived and STATEFUL: opened with
 ``stateful=True``, its LIF membranes carry across window boundaries --
 the paper's continuous closed-loop regime -- while its neighbours stay
 stateless. To make the carry visible, tracker and its stateless twin
@@ -48,9 +53,12 @@ def main():
     }
 
     engine = StreamEngine(params, cfg, max_streams=SLOTS)
+    # One handle per sensor: the session API latches modality (implicit
+    # here -- single engine) and statefulness at open.
+    handles = {sid: engine.open(stream_id=sid) for sid in workload}
     # Warm-up round: compiles the (SLOTS, max_events) closed-loop call.
     for sid, windows in workload.items():
-        engine.submit(sid, windows[0])
+        handles[sid].submit(windows[0])
     engine.run()
     warm = {sid: (st.windows, st.energy_mj, st.latency_ms_sum,
                   st.realtime_windows)
@@ -60,7 +68,7 @@ def main():
 
     for sid, windows in workload.items():
         for w in windows:
-            engine.submit(sid, w)
+            handles[sid].submit(w)
     t0 = time.perf_counter()
     results = engine.run()
     wall = time.perf_counter() - t0
@@ -84,13 +92,15 @@ def main():
               f"{energy / (lat * 1e-3):7.1f}  {rt:8.0%}")
 
     # -- stateful streaming: a long-lived stream whose membrane carries --
-    # Same engine, same slots: "tracker" opts into carried state, its
-    # "twin" does not; both see the identical window every time.
+    # Same engine, same slots: "tracker" opts into carried state at
+    # open, its "twin" does not; both see the identical window each time.
+    tracker = engine.open(stream_id="tracker", stateful=True)
+    twin = engine.open(stream_id="twin")
     repeated = ev.synthetic_gesture_events(
         rng, 3, mean_events=5000, height=cfg.height, width=cfg.width)
     for _ in range(WINDOWS_PER_STREAM):
-        engine.submit("tracker", repeated, stateful=True)
-        engine.submit("twin", repeated)
+        tracker.submit(repeated)
+        twin.submit(repeated)
     drift = {"tracker": {}, "twin": {}}
     for r in engine.run():
         if r.stream_id in drift:

@@ -18,6 +18,8 @@ Submodules:
               the single-window ClosedLoopPipeline wrapper
   energy   -- calibrated Kraken power/latency model (Tables I & III event
               wing; modelled CUTIE frame wing)
+  _api     -- one-shot deprecation warnings for the legacy call forms
+              superseded by the serving session-handle API
 """
 from repro.core.lif import LIFParams, lif_scan_reference, lif_step, spike_surrogate
 from repro.core.snn import (SNNConfig, SNN_STATE_LAYERS, init_snn,

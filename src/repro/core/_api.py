@@ -1,0 +1,47 @@
+"""One-shot API deprecation warnings with internal suppression.
+
+The session-handle redesign keeps every legacy call form working --
+``StreamEngine.submit(stream_id, ...)`` and the engines' stateless
+``infer(batch)`` -- but each now announces its replacement exactly once
+per owning instance via :class:`DeprecationWarning`. The serving stack
+itself still drives the legacy forms internally (the submit shim, the
+stateless lane fast path, the B=1 ``ClosedLoopPipeline`` wrapper); those
+calls are wrapped in :func:`suppress_api_deprecations` so only *user*
+code sees the warning.
+"""
+from __future__ import annotations
+
+import contextlib
+import warnings
+
+__all__ = ["suppress_api_deprecations", "warn_deprecated_call"]
+
+_suppressed = 0
+
+
+@contextlib.contextmanager
+def suppress_api_deprecations():
+    """Silence :func:`warn_deprecated_call` for the duration of the block
+    (re-entrant; used by the shims' internal legacy-form calls)."""
+    global _suppressed
+    _suppressed += 1
+    try:
+        yield
+    finally:
+        _suppressed -= 1
+
+
+def warn_deprecated_call(owner, key: str, message: str) -> None:
+    """Emit ``message`` as a one-shot DeprecationWarning.
+
+    One-shot per ``(owner instance, key)``: the first offending call on
+    an object warns, repeats stay quiet -- a migration nudge, not log
+    spam. No-op inside :func:`suppress_api_deprecations`.
+    """
+    if _suppressed:
+        return
+    seen = owner.__dict__.setdefault("_api_warned", set())
+    if key in seen:
+        return
+    seen.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=3)

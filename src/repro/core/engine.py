@@ -50,6 +50,16 @@ an engine without ``init_state`` is simply served stateless):
     them are served synchronously.
   * ``warmup(shape_keys)``    -- precompile executables for a set of
     shape keys so no window pays compile time mid-stream.
+  * ``export_state(state, slot)`` / ``import_state(state, slot,
+    payload)`` -- the checkpoint/restore pair: export turns one slot's
+    row of a slot-major carried-state pytree into a HOST-serializable
+    (numpy) payload; import splices such a payload back into a row of a
+    (possibly different process's) slot-major state. Together they make
+    a stream's carry migratable between engine processes without the
+    serving layer knowing the state's structure --
+    ``StreamHandle.checkpoint()`` / ``restore()`` are built on exactly
+    this pair, with a generic leading-axis-slicing fallback for engines
+    that do not implement it.
 
 Concrete engines:
 
@@ -75,8 +85,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import frames as fr
+from repro.core._api import suppress_api_deprecations, warn_deprecated_call
 from repro.core.energy import KrakenModel
-from repro.core.pipeline import ClosedLoopResult, pwm_from_logits
+from repro.core.pipeline import (ClosedLoopResult, export_state_slot,
+                                 import_state_slot, pwm_from_logits)
 from repro.core.tcn import TCNConfig, pack_tcn, tcn_apply, tcn_layer_macs
 
 __all__ = ["InferenceEngine", "FrameTCNEngine"]
@@ -193,7 +205,7 @@ class FrameTCNEngine:
                 out = tcn_apply(packed, fr.normalize_frames(pixels), cfg)
                 logits = out["logits"]
                 return (jnp.argmax(logits, -1), pwm_from_logits(logits),
-                        out["activity_per_stream"])
+                        logits, out["activity_per_stream"])
 
             px_abs = jax.ShapeDtypeStruct((b, h, w, 1), jnp.float32)
             pk_abs = jax.tree_util.tree_map(
@@ -208,10 +220,20 @@ class FrameTCNEngine:
         """Precompile executables for ``(batch_size, height, width[,
         duration_us])`` shape keys (duration is not part of the compiled
         shape for dense frames; it is accepted for symmetry with
-        ``shape_key``)."""
+        ``shape_key``). A 3-tuple key borrows the engine's latched
+        ``duration_us`` and therefore requires one -- warming an
+        unlatched engine with 3-tuples would silently cache executables
+        under a ``(b, h, w, None)`` key that no served batch ever hits.
+        """
         for key in shape_keys:
             key = tuple(key)
             if len(key) == 3:
+                if self.duration_us is None:
+                    raise ValueError(
+                        "3-tuple shape key needs a pinned tick period: "
+                        "latch duration_us first (pass duration_us= at "
+                        "construction or validate a frame) or pass the "
+                        "full (batch, height, width, duration_us) key")
                 key = (*key, self.duration_us)
             if len(key) != 4:
                 raise ValueError(
@@ -233,15 +255,17 @@ class FrameTCNEngine:
         empty pytree) returns ``(pending, state)`` -- the uniform
         stateful dispatch shape, carrying nothing."""
         exe = self._executable(self.shape_key(batch))
-        preds, pwm, activity = exe(self.packed, jnp.asarray(batch.pixels))
-        pending = (batch, preds, pwm, activity)
+        preds, pwm, logits, activity = exe(self.packed,
+                                           jnp.asarray(batch.pixels))
+        pending = (batch, preds, pwm, logits, activity)
         return pending if state is None else (pending, state)
 
     def infer_collect(self, pending) -> List[Optional[ClosedLoopResult]]:
         """Fetch a dispatched batch's outputs and account each slot."""
-        batch, preds, pwm, activity = pending
+        batch, preds, pwm, logits, activity = pending
         preds = np.asarray(preds)
         pwm = np.asarray(pwm)
+        logits = np.asarray(logits)
         activity = {k: np.asarray(v) for k, v in activity.items()}
 
         results: List[Optional[ClosedLoopResult]] = []
@@ -266,13 +290,33 @@ class FrameTCNEngine:
                 breakdown=acct,
                 realtime=latency <= self.window_ms,
                 sustained_rate_hz=1000.0 / period_ms,
+                logits=logits[b:b + 1],
             ))
         return results
 
+    def export_state(self, state, slot: int):
+        """Checkpoint one slot's carry -- trivially the empty pytree for
+        the feedforward CUTIE wing, through the same engine-agnostic
+        contract as the event wing."""
+        return export_state_slot(state, slot)
+
+    def import_state(self, state, slot: int, payload):
+        """Restore one slot's carry (a no-op splice of the empty
+        pytree)."""
+        return import_state_slot(state, slot, payload)
+
     def infer(self, batch: fr.PaddedFrameBatch, state=None):
         """Synchronous convenience: dispatch + collect back to back.
-        With ``state``: returns ``(results, state)`` (no-op carry)."""
+        With ``state``: returns ``(results, state)`` (no-op carry).
+        The stateless direct form is deprecated -- thread the (empty)
+        state or serve through ``StreamEngine.open(...)``."""
         if state is None:
+            warn_deprecated_call(
+                self, "stateless-infer",
+                "stateless FrameTCNEngine.infer(batch) is a legacy call "
+                "form; pass carried state -- infer(batch, "
+                "init_state(batch_size)) -- or serve frames through the "
+                "session API: StreamEngine.open(...).submit(window)")
             return self.infer_collect(self.infer_dispatch(batch))
         pending, new_state = self.infer_dispatch(batch, state)
         return self.infer_collect(pending), new_state
@@ -287,5 +331,7 @@ class FrameTCNEngine:
         for f in frames:
             if f is not None:
                 self.validate(f)
-        return self.infer(self.prepare(
-            frames, batch_size=batch_size or len(frames)))
+        # Compat wrapper: drives the stateless form deliberately.
+        with suppress_api_deprecations():
+            return self.infer(self.prepare(
+                frames, batch_size=batch_size or len(frames)))

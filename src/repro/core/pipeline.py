@@ -44,12 +44,35 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import events as ev
+from repro.core._api import suppress_api_deprecations, warn_deprecated_call
 from repro.core.energy import KrakenModel, NOMINAL
 from repro.core.snn import SNNConfig, snn_apply, snn_init_state, snn_logits
 from repro.core.tiling import SNE_NEURON_CAPACITY, plan_network
 
 __all__ = ["ClosedLoopResult", "BatchedClosedLoop", "ClosedLoopPipeline",
-           "pwm_from_logits"]
+           "pwm_from_logits", "export_state_slot", "import_state_slot"]
+
+
+def export_state_slot(state, slot: int):
+    """One slot's row of a slot-major carried-state pytree, as a
+    host-serializable (numpy) pytree.
+
+    The generic implementation behind the engines' duck-typed
+    ``export_state``: every leaf is sliced at ``slot`` along its leading
+    (batch) axis and copied to the host. An engine whose state is not a
+    plain leading-axis pytree overrides ``export_state`` instead.
+    """
+    return jax.tree_util.tree_map(lambda a: np.asarray(a[slot]), state)
+
+
+def import_state_slot(state, slot: int, payload):
+    """A new slot-major state equal to ``state`` with row ``slot``
+    replaced by ``payload`` (an :func:`export_state_slot`-shaped host
+    pytree). Bitwise inverse of export for f32 leaves: export -> import
+    round-trips the carry exactly, which is what makes checkpoints
+    migration-safe."""
+    return jax.tree_util.tree_map(
+        lambda a, p: a.at[slot].set(jnp.asarray(p, a.dtype)), state, payload)
 
 
 def pwm_from_logits(logits: jnp.ndarray, num_channels: int = 4) -> jnp.ndarray:
@@ -111,6 +134,10 @@ class ClosedLoopResult:
     breakdown: Dict[str, Any]
     realtime: bool
     sustained_rate_hz: float
+    # Pre-actuation classifier logits, (1, num_classes). Both wings emit
+    # them so a FusionSession can combine modalities BEFORE actuation
+    # (late logit fusion); None for engines that predate the field.
+    logits: Optional[np.ndarray] = None
 
 
 class BatchedClosedLoop:
@@ -263,7 +290,7 @@ class BatchedClosedLoop:
             out = snn_apply(params, vox, cfg, mode="layer_serial",
                             lif_scan_fn=scan, fuse_fc=fuse, state=state)
             logits = snn_logits(out, cfg) * 10.0
-            return (jnp.argmax(logits, -1), pwm_from_logits(logits),
+            return (jnp.argmax(logits, -1), pwm_from_logits(logits), logits,
                     out["firing_rates_per_stream"], out["state"])
 
         return run
@@ -358,12 +385,12 @@ class BatchedClosedLoop:
         if stateless:
             state = self._zero_state_for(batch.batch_size)
         exe = self._executable(self.shape_key(batch))
-        preds, pwm, rates_ps, new_state = exe(
+        preds, pwm, logits, rates_ps, new_state = exe(
             self.params, jnp.asarray(batch.x), jnp.asarray(batch.y),
             jnp.asarray(batch.t), jnp.asarray(batch.p),
             jnp.asarray(batch.valid), state,
         )
-        pending = (batch, preds, pwm, rates_ps)
+        pending = (batch, preds, pwm, logits, rates_ps)
         return pending if stateless else (pending, new_state)
 
     def infer_collect(self, pending) -> List[Optional[ClosedLoopResult]]:
@@ -372,9 +399,10 @@ class BatchedClosedLoop:
         This is the only point that blocks on the device (the implicit
         ``np.asarray`` device-to-host copies).
         """
-        batch, preds, pwm, rates_ps = pending
+        batch, preds, pwm, logits, rates_ps = pending
         preds = np.asarray(preds)
         pwm = np.asarray(pwm)
+        logits = np.asarray(logits)
         rates_ps = {k: np.asarray(v) for k, v in rates_ps.items()}
 
         results: List[Optional[ClosedLoopResult]] = []
@@ -402,8 +430,20 @@ class BatchedClosedLoop:
                 breakdown=acct,
                 realtime=latency <= self.window_ms,
                 sustained_rate_hz=1000.0 / period_ms,
+                logits=logits[b:b + 1],
             ))
         return results
+
+    def export_state(self, state, slot: int):
+        """Host-serializable checkpoint of one slot's carried state (the
+        per-layer membrane planes), engine-agnostic through the serving
+        layer's duck-typed probe; see :func:`export_state_slot`."""
+        return export_state_slot(state, slot)
+
+    def import_state(self, state, slot: int, payload):
+        """Splice an exported carry back into row ``slot`` of a
+        slot-major state; see :func:`import_state_slot`."""
+        return import_state_slot(state, slot, payload)
 
     def infer(self, batch: ev.PaddedEventBatch, state=None):
         """Run a padded batch; returns one result per slot (None if empty).
@@ -411,9 +451,17 @@ class BatchedClosedLoop:
         Synchronous convenience: dispatch + collect back to back. With
         ``state`` (slot-major carried-state pytree) returns
         ``(results, new_state)``; without it, just the results (the
-        legacy stateless call, run from the zero state).
+        legacy stateless call, run from the zero state -- deprecated as
+        a direct call form: pass ``init_state(batch_size)`` explicitly,
+        or serve through ``StreamEngine.open(...)``).
         """
         if state is None:
+            warn_deprecated_call(
+                self, "stateless-infer",
+                "stateless BatchedClosedLoop.infer(batch) is a legacy "
+                "call form; pass carried state -- infer(batch, "
+                "init_state(batch_size)) -- or serve windows through the "
+                "session API: StreamEngine.open(...).submit(window)")
             return self.infer_collect(self.infer_dispatch(batch))
         pending, new_state = self.infer_dispatch(batch, state)
         return self.infer_collect(pending), new_state
@@ -432,7 +480,10 @@ class BatchedClosedLoop:
         batch = ev.pad_event_windows(
             windows, max_events=max_events, batch_size=batch_size,
             duration_us=duration_us)
-        return self.infer(batch)
+        # The B=1-style compat surface drives the stateless call form on
+        # purpose; the deprecation nudge is for direct infer() callers.
+        with suppress_api_deprecations():
+            return self.infer(batch)
 
 
 class ClosedLoopPipeline:

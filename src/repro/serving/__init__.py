@@ -1,8 +1,13 @@
 """Serving substrate: batched generate loop, ternary serving quantization,
 and continuous batching over heterogeneous sensor streams (the unified
-event-SNN / frame-TCN closed loop behind the InferenceEngine protocol)."""
+event-SNN / frame-TCN closed loop behind the InferenceEngine protocol,
+served through the session-handle API: StreamEngine.open -> StreamHandle,
+FusionSession for cross-modal event+frame streams, StreamCheckpoint for
+stream migration between engine processes)."""
 from repro.serving.serve import ServeConfig, ServeStats, generate, quantize_for_serving
 from repro.serving.scheduler import BatchScheduler, Request
+from repro.serving.session import (FusionSession, StreamCheckpoint,
+                                   late_logit_fusion)
 from repro.serving.stream import (DeadlinePolicy, FairQuantumPolicy,
-                                  SlotPolicy, StreamEngine, StreamResult,
-                                  StreamStats)
+                                  SlotPolicy, StreamEngine, StreamHandle,
+                                  StreamResult, StreamStats)

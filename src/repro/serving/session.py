@@ -1,0 +1,344 @@
+"""Cross-modal fusion sessions and stream checkpoint/restore payloads.
+
+ColibriES's headline scenario is one sensor head driving BOTH Kraken
+wings: the DVS event stream through the SNE (spiking CNN) and the frame
+stream through CUTIE (ternary CNN), fused into a single actuation
+decision per control tick -- the ColibriUAV deployment. The serving
+stack expresses that as a :class:`FusionSession`: one event
+:class:`~repro.serving.stream.StreamHandle` and one frame handle bound
+into a single logical stream. Each ``submit`` queues one control tick's
+paired windows; each wing is served by its own engine lane (one jit'd
+call per wing per step, exactly as unfused streams are), and the session
+pairs the per-wing results back up by tick, applies a pluggable fusion
+rule (:func:`late_logit_fusion` by default -- a convex combination of
+the wings' pre-actuation logits), and emits ONE fused
+:class:`~repro.serving.stream.StreamResult` per tick with combined PWM
+actuation and a per-wing latency/energy breakdown.
+
+:class:`StreamCheckpoint` is the migration payload behind
+``StreamHandle.checkpoint()`` / ``restore()``: a host-serializable
+(picklable: numpy + plain Python) snapshot of one stream -- carried
+state exported through the engine's duck-typed ``export_state``, any
+still-queued windows, and the sequence position -- that can be restored
+into a handle on a *different* engine process, after which the remaining
+windows complete bitwise-identical to the uninterrupted run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Hashable, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.pipeline import ClosedLoopResult, pwm_from_logits
+from repro.serving.stream import StreamEngine, StreamHandle, StreamResult
+
+__all__ = ["StreamCheckpoint", "FusionSession", "late_logit_fusion"]
+
+# pwm_from_logits, jitted once: the fuse runs per tick on the host side
+# of the serving loop, and the eager op-by-op dispatch overhead would
+# otherwise dominate the fused cell of the benchmark.
+_PWM_JIT = None
+
+
+def _fused_pwm(logits: np.ndarray) -> np.ndarray:
+    global _PWM_JIT
+    if _PWM_JIT is None:
+        _PWM_JIT = jax.jit(pwm_from_logits)
+    return np.asarray(_PWM_JIT(logits))
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamCheckpoint:
+    """One stream, frozen for migration between engine processes.
+
+    Everything inside is host-resident and picklable: ``state`` is the
+    engine's exported carry (a numpy pytree; ``None`` = cold start),
+    ``queued`` holds still-unserved windows as ``(window, seq,
+    deadline)`` tuples, and ``next_seq`` is where per-stream numbering
+    resumes. ``duration_us`` pins the one-bin-width-per-engine contract
+    across the migration. Accounting (``StreamStats``) deliberately does
+    NOT migrate -- stats describe an engine process, not a stream.
+    """
+
+    stream_id: Hashable
+    modality: str
+    stateful: bool
+    next_seq: int
+    duration_us: Optional[int]
+    state: Optional[Any]
+    deadline: Optional[float] = None
+    queued: Tuple[Tuple[Any, int, Optional[float]], ...] = ()
+
+
+def late_logit_fusion(event_weight: float = 0.5,
+                      frame_weight: float = 0.5) -> Callable:
+    """The default fusion rule: a convex combination of the two wings'
+    pre-actuation logits (late fusion -- each wing runs its full
+    accelerator schedule; only the classifier outputs meet).
+
+    Returns ``rule(event_result, frame_result) -> fused_logits`` for
+    :class:`FusionSession`. Custom rules plug in with the same
+    signature and may read anything on the per-wing
+    :class:`~repro.core.pipeline.ClosedLoopResult` rows (e.g. gate on
+    the SNE firing rates or the CUTIE operand activity).
+    """
+
+    def rule(event_result: ClosedLoopResult,
+             frame_result: ClosedLoopResult) -> np.ndarray:
+        return (event_weight * np.asarray(event_result.logits)
+                + frame_weight * np.asarray(frame_result.logits))
+
+    rule.name = f"late_logit(event={event_weight:g}, frame={frame_weight:g})"
+    return rule
+
+
+def _rule_name(rule: Callable) -> Optional[str]:
+    """A fusion rule's identity for checkpoints: the explicit ``name``
+    attribute when set (parameterized rules like late_logit_fusion bake
+    their weights into it), else the callable's ``__name__`` -- so even
+    a plain function is recorded and a mismatched restore can raise."""
+    return getattr(rule, "name", getattr(rule, "__name__", None))
+
+
+class FusionSession:
+    """One logical stream across both accelerator wings.
+
+    Binds one event handle and one frame handle on a shared
+    :class:`~repro.serving.stream.StreamEngine` (opened by the session,
+    or passed in pre-opened via ``event_handle=`` / ``frame_handle=``).
+    ``submit(event_window, frame_window)`` queues one control tick on
+    both wings under the SAME sequence number; ``step()`` / ``run()``
+    drive the engine and return the session's fused results in tick
+    order -- each one a ``StreamResult`` with ``modality="fusion"``
+    whose :class:`~repro.core.pipeline.ClosedLoopResult` carries the
+    fused prediction, the combined PWM actuation, summed energy with a
+    ``per_wing_energy_mj`` attribution, and both wings' full Kraken
+    breakdowns.
+
+    The wings need not finish in the same engine step (their lanes
+    contend independently); the session buffers whichever wing lands
+    first and emits a tick only when both halves are in. Results from
+    OTHER streams sharing the engine are never swallowed: they
+    accumulate on ``unclaimed`` for the caller.
+
+    ``stateful=True`` opts both wings into carried state (the event
+    wing's LIF membranes chain across ticks; the frame wing's carry is
+    trivially empty), and ``checkpoint()`` / ``restore`` compose the
+    per-handle primitives so a whole fusion stream can migrate.
+    """
+
+    def __init__(
+        self,
+        engine: StreamEngine,
+        *,
+        session_id: Optional[Hashable] = None,
+        stateful: bool = False,
+        deadline: Optional[float] = None,
+        fusion: Optional[Callable] = None,
+        event_handle: Optional[StreamHandle] = None,
+        frame_handle: Optional[StreamHandle] = None,
+    ):
+        self.engine = engine
+        if session_id is None:
+            taken = engine.handles
+            n = 0
+            while (f"fusion-{n}:event" in taken
+                   or f"fusion-{n}:frame" in taken):
+                n += 1
+            session_id = f"fusion-{n}"
+        self.session_id = session_id
+        self.fusion = fusion or late_logit_fusion()
+        # Pre-opened handles are checked BEFORE anything is opened, so a
+        # rejected construction leaves no auto-opened stream behind on
+        # the engine.
+        for handle, want in ((event_handle, "event"),
+                             (frame_handle, "frame")):
+            if handle is not None and handle.modality != want:
+                raise ValueError(
+                    f"{want}_handle is bound to modality "
+                    f"{handle.modality!r}")
+        self.event = event_handle or engine.open(
+            modality="event", stream_id=f"{session_id}:event",
+            stateful=stateful, deadline=deadline)
+        self.frame = frame_handle or engine.open(
+            modality="frame", stream_id=f"{session_id}:frame",
+            stateful=stateful, deadline=deadline)
+        self._pending = {"event": {}, "frame": {}}
+        self._emit_next = 0
+        self.ticks_fused = 0
+        self.unclaimed: List[StreamResult] = []
+
+    # -- submission ------------------------------------------------------
+
+    def submit(self, event_window: Any, frame_window: Any, *,
+               deadline: Optional[float] = None) -> int:
+        """Queue one control tick: the paired event and frame windows.
+        Returns the tick's sequence number (shared by both wings).
+
+        Atomic: desynchronized wings are detected and BOTH windows are
+        validated before EITHER is queued, so a rejected tick (rogue
+        out-of-session submit, bad geometry, wrong duration) queues
+        nothing and cannot mispair later ticks.
+        """
+        seq_e, seq_f = self.event.next_seq, self.frame.next_seq
+        if seq_e != seq_f:
+            raise RuntimeError(
+                f"fusion session {self.session_id!r} desynchronized: "
+                f"event wing is at seq {seq_e}, frame wing at {seq_f} "
+                f"(were the wing handles submitted to outside the "
+                f"session?)")
+        self.event.validate(event_window)
+        self.frame.validate(frame_window)
+        seq = self.event.submit(event_window, deadline=deadline)
+        self.frame.submit(frame_window, deadline=deadline)
+        return seq
+
+    # -- completion ------------------------------------------------------
+
+    def absorb(self, results: List[StreamResult]) -> List[StreamResult]:
+        """File this session's per-wing rows out of ``results``; returns
+        the foreign rows (other streams on the shared engine)."""
+        foreign = []
+        for r in results:
+            if r.stream_id == self.event.stream_id:
+                self._pending["event"][r.seq] = r.result
+            elif r.stream_id == self.frame.stream_id:
+                self._pending["frame"][r.seq] = r.result
+            else:
+                foreign.append(r)
+        return foreign
+
+    def drain(self) -> List[StreamResult]:
+        """Emit every buffered tick whose two halves have both landed,
+        in tick order. ``step()``/``run()`` call this for you; call it
+        directly when routing results between several sessions sharing
+        one engine (``other.absorb(...)`` then ``other.drain()``)."""
+        out = []
+        while (self._emit_next in self._pending["event"]
+               and self._emit_next in self._pending["frame"]):
+            e = self._pending["event"].pop(self._emit_next)
+            f = self._pending["frame"].pop(self._emit_next)
+            out.append(StreamResult(
+                stream_id=self.session_id, seq=self._emit_next,
+                result=self._fuse(e, f), modality="fusion"))
+            self._emit_next += 1
+            self.ticks_fused += 1
+        return out
+
+    def _fuse(self, e: ClosedLoopResult,
+              f: ClosedLoopResult) -> ClosedLoopResult:
+        logits = np.asarray(self.fusion(e, f))
+        pwm = _fused_pwm(logits)
+        return ClosedLoopResult(
+            label_pred=np.argmax(logits, axis=-1),
+            pwm=pwm,
+            # The wings run concurrently (one jit'd call per lane per
+            # step): the tick completes when the slower wing does.
+            latency_ms=max(e.latency_ms, f.latency_ms),
+            energy_mj=e.energy_mj + f.energy_mj,
+            breakdown={
+                "fusion_rule": _rule_name(self.fusion)
+                or repr(self.fusion),
+                "per_wing_energy_mj": {"event": e.energy_mj,
+                                       "frame": f.energy_mj},
+                "per_wing_latency_ms": {"event": e.latency_ms,
+                                        "frame": f.latency_ms},
+                "event": e.breakdown,
+                "frame": f.breakdown,
+            },
+            realtime=e.realtime and f.realtime,
+            sustained_rate_hz=min(e.sustained_rate_hz,
+                                  f.sustained_rate_hz),
+            logits=logits,
+        )
+
+    def step(self) -> List[StreamResult]:
+        """One engine step; returns any newly complete fused ticks."""
+        self.unclaimed.extend(self.absorb(self.engine.step()))
+        return self.drain()
+
+    def run(self) -> List[StreamResult]:
+        """Drain the engine; returns this session's fused ticks in
+        order (foreign results accumulate on ``unclaimed``)."""
+        self.unclaimed.extend(self.absorb(self.engine.run()))
+        return self.drain()
+
+    # -- lifecycle -------------------------------------------------------
+
+    @property
+    def stats(self) -> dict:
+        """Per-wing accounting plus the fused-tick count."""
+        return {"event": self.event.stats, "frame": self.frame.stats,
+                "ticks_fused": self.ticks_fused}
+
+    def reset_state(self) -> None:
+        """Gesture boundary across the whole session: zero both wings'
+        carries (a no-op for wings opened stateless)."""
+        for handle in (self.event, self.frame):
+            if handle.stateful:
+                handle.reset_state()
+
+    def checkpoint(self) -> dict:
+        """Both wings' checkpoints plus the session's pairing cursor
+        (host-serializable; see :meth:`restore`). Requires both wings to
+        be pairwise drained -- no half-fused ticks in the buffers."""
+        if self._pending["event"] or self._pending["frame"]:
+            raise ValueError(
+                f"fusion session {self.session_id!r} has half-fused "
+                f"ticks buffered; run()/step() until drained before "
+                f"checkpointing")
+        return {"session_id": self.session_id,
+                "next_tick": self._emit_next,
+                "fusion_rule": _rule_name(self.fusion),
+                "event": self.event.checkpoint(),
+                "frame": self.frame.checkpoint()}
+
+    @classmethod
+    def restore(cls, engine: StreamEngine, ckpt: dict, *,
+                fusion: Optional[Callable] = None) -> "FusionSession":
+        """Rebuild a checkpointed session on ``engine`` (typically a
+        fresh process): both wing handles are restored through the
+        engine-agnostic payloads and the tick cursor resumes, so fused
+        results continue bitwise-identical to the uninterrupted run.
+        ``fusion`` must be re-supplied when the original rule was not
+        the default (rules are code, not data): the checkpoint records
+        the rule's name, and a mismatch between it and the supplied (or
+        default) rule raises rather than silently changing the fused
+        actuation mid-migration."""
+        rule = fusion or late_logit_fusion()
+        recorded = ckpt.get("fusion_rule")
+        supplied = _rule_name(rule)
+        if recorded is not None and recorded != supplied:
+            raise ValueError(
+                f"checkpoint was fused with rule {recorded!r} but "
+                f"restore got {supplied!r}; pass fusion= matching the "
+                f"original rule (rules are code, not data)")
+        # Restore the wings one at a time with cleanup: a frame-side
+        # rejection must not strand the already-restored event stream
+        # (with its carry and queued windows) on the target engine.
+        event_handle = engine.restore(ckpt["event"])
+        try:
+            frame_handle = engine.restore(ckpt["frame"])
+        except Exception:
+            event_handle.close()
+            raise
+        try:
+            session = cls(
+                engine,
+                session_id=ckpt["session_id"],
+                fusion=rule,
+                event_handle=event_handle,
+                frame_handle=frame_handle,
+            )
+        except Exception:
+            event_handle.close()
+            frame_handle.close()
+            raise
+        session._emit_next = int(ckpt["next_tick"])
+        return session
+
+    def close(self) -> int:
+        """Close both wing handles; returns discarded queued windows."""
+        return self.event.close() + self.frame.close()

@@ -62,6 +62,23 @@ and its state entirely. The state pytree is device-resident end to end:
 in pipelined mode the carry chains dispatch-to-dispatch as jax
 async-dispatch futures and never round-trips the host.
 
+Session-handle API (the serving surface): a stream is opened, not
+implied. ``StreamEngine.open(modality=..., stateful=..., deadline=...)``
+returns a :class:`StreamHandle` that owns the stream's whole lifecycle:
+``submit(window)`` queues work, ``reset_state()`` zeroes the carry,
+``checkpoint()`` captures a host-serializable :class:`StreamCheckpoint`
+(carry + queued windows + sequence position) that ``restore(ckpt)``
+replays into a handle on a DIFFERENT engine process -- stream migration
+-- and ``close()`` retires the stream. Modality and statefulness are
+latched at ``open``; per-window metadata (deadlines) defaults to the
+handle's and can be overridden per submit. The legacy id-keyed
+``submit(stream_id, window, ...)`` form remains as a thin shim that
+opens (or finds) the id's handle and forwards -- bitwise-identical
+results -- while nudging callers to the handle API with a one-shot
+``DeprecationWarning``. Cross-modal fusion (one sensor head driving BOTH
+Kraken wings into a single actuation decision) binds one event handle
+and one frame handle through :class:`~repro.serving.session.FusionSession`.
+
 Pipelining (``pipeline_depth >= 1``): ``step()`` dispatches each lane's
 jit'd call asynchronously (no device sync on the critical path) and
 returns the results of the step dispatched ``pipeline_depth`` steps ago,
@@ -86,12 +103,14 @@ from typing import (Any, Callable, Deque, Dict, Hashable, List, Mapping,
 import jax
 import jax.numpy as jnp
 
+from repro.core._api import suppress_api_deprecations, warn_deprecated_call
 from repro.core.energy import KrakenModel
 from repro.core.engine import InferenceEngine
-from repro.core.pipeline import BatchedClosedLoop, ClosedLoopResult
+from repro.core.pipeline import (BatchedClosedLoop, ClosedLoopResult,
+                                 export_state_slot, import_state_slot)
 from repro.core.snn import SNNConfig
 
-__all__ = ["StreamResult", "StreamStats", "StreamEngine",
+__all__ = ["StreamResult", "StreamStats", "StreamEngine", "StreamHandle",
            "SlotPolicy", "FairQuantumPolicy", "DeadlinePolicy"]
 
 
@@ -364,11 +383,307 @@ class DeadlinePolicy(FairQuantumPolicy):
 
 
 # ----------------------------------------------------------------------
+# The session-handle serving surface.
+# ----------------------------------------------------------------------
+
+def _export_carry(engine: InferenceEngine, state, slot: int):
+    """One slot's carry as a host pytree, via the engine's duck-typed
+    ``export_state`` (falling back to the generic leading-axis slice
+    for engines that do not implement it)."""
+    export = getattr(engine, "export_state", export_state_slot)
+    return export(state, slot)
+
+
+def _import_carry(engine: InferenceEngine, payload):
+    """An exported carry back on device, in the serving layer's parked
+    (per-stream, no slot axis) form, via the engine's duck-typed
+    ``import_state`` splicing into a fresh 1-slot zero state."""
+    import_ = getattr(engine, "import_state", import_state_slot)
+    lifted = import_(engine.init_state(1), 0, payload)
+    return jax.tree_util.tree_map(lambda a: a[0], lifted)
+
+
+class StreamHandle:
+    """One stream's lifecycle, owned: the object ``StreamEngine.open``
+    returns and the primary serving surface.
+
+    A handle latches its stream's identity for life -- modality (which
+    engine lane serves it), statefulness (whether engine state carries
+    across its windows), and a default ``deadline`` for deadline-aware
+    slot policies. Everything a caller does to a stream goes through its
+    handle:
+
+      * ``submit(window[, deadline=...])`` -- queue one window; returns
+        the per-stream sequence number later reported by
+        ``StreamResult.seq``. Never blocks.
+      * ``reset_state()`` -- zero the carried state (gesture boundary);
+        the next dispatched window starts cold.
+      * ``checkpoint()`` -- capture the stream as a host-serializable
+        :class:`~repro.serving.session.StreamCheckpoint`: the carried
+        state (exported through the engine's duck-typed
+        ``export_state``), any still-queued windows, and the sequence
+        position. Requires no windows in flight (``flush()`` first).
+      * ``restore(ckpt)`` -- replay a checkpoint into THIS handle (which
+        must be fresh): the carry is imported and parked until the
+        stream wins a slot, queued windows are re-queued under their
+        original sequence numbers, and numbering resumes -- results
+        after migration are bitwise identical to the uninterrupted run.
+      * ``close()`` -- retire the stream: queue, slot, waiting entry and
+        carry are dropped (idempotent; returns discarded window count).
+
+    Handles do not collect results -- ``step()``/``run()``/``flush()``
+    on the engine remain the completion surface, emitting
+    :class:`StreamResult` rows for every open stream.
+    """
+
+    def __init__(self, engine: "StreamEngine", lane: EngineLane,
+                 stream_id: Hashable, stateful: bool,
+                 deadline: Optional[float]):
+        self._engine = engine
+        self._lane = lane
+        self.stream_id = stream_id
+        self.stateful = bool(stateful)
+        self.deadline = deadline
+        self.closed = False
+
+    def __repr__(self):
+        state = "closed" if self.closed else "open"
+        return (f"<StreamHandle {self.stream_id!r} {self._lane.modality} "
+                f"stateful={self.stateful} {state}>")
+
+    @property
+    def modality(self) -> str:
+        return self._lane.modality
+
+    @property
+    def stats(self) -> StreamStats:
+        """This stream's accumulated accounting."""
+        return self._engine.stream_stats[self.stream_id]
+
+    @property
+    def queued(self) -> int:
+        """Windows still waiting in this stream's queue."""
+        return 0 if self.closed else len(self._lane.queues[self.stream_id])
+
+    @property
+    def next_seq(self) -> int:
+        """The sequence number the next ``submit`` will return."""
+        self._check_open()
+        return self._engine._seq[self.stream_id]
+
+    def _check_open(self) -> None:
+        if self.closed:
+            raise ValueError(
+                f"handle for stream {self.stream_id!r} is closed")
+
+    def _check_not_inflight(self, verb: str) -> None:
+        for step_recs in self._engine._inflight:
+            for rec in step_recs:
+                for entry in rec.entries:
+                    if entry is not None and entry[0] == self.stream_id:
+                        raise ValueError(
+                            f"stream {self.stream_id!r} has in-flight "
+                            f"windows; flush() before {verb}")
+
+    # -- submission ------------------------------------------------------
+
+    def validate(self, window: Any) -> None:
+        """Check ``window`` against this stream's engine without queueing
+        it (raises exactly what ``submit`` would). Lets a caller
+        coordinating multiple handles (e.g. a FusionSession tick)
+        validate every window BEFORE queueing any, keeping the group
+        submit atomic."""
+        self._check_open()
+        self._lane.engine.validate(window)
+
+    def submit(self, window: Any, *,
+               deadline: Optional[float] = None) -> int:
+        """Queue one window; returns its per-stream sequence number.
+
+        ``deadline`` overrides the handle's default for this window
+        (consumed by deadline-aware policies; smaller = more urgent).
+        The window is validated by the engine BEFORE any queue state
+        moves, so a rejected submit burns no sequence number.
+        """
+        self._check_open()
+        lane, sid, eng = self._lane, self.stream_id, self._engine
+        lane.engine.validate(window)
+        seq = eng._seq[sid]
+        eng._seq[sid] = seq + 1
+        lane.queues[sid].append(_Queued(
+            window, seq, self.deadline if deadline is None else deadline))
+        # A stream is schedulable via exactly one of: a held slot or a
+        # waiting-line entry (covers streams that drained and come back).
+        if sid not in lane.slots and sid not in lane.waiting:
+            lane.waiting.append(sid)
+        eng.stream_stats[sid].queued += 1
+        return seq
+
+    # -- carried state ---------------------------------------------------
+
+    def reset_state(self) -> None:
+        """Zero the carried state without retiring the stream -- the
+        gesture-boundary escape hatch. Applies from the next dispatch;
+        windows already in flight keep the old carry."""
+        self._check_open()
+        lane, sid = self._lane, self.stream_id
+        if not self.stateful:
+            raise ValueError(f"stream {sid!r} is not stateful")
+        lane.parked.pop(sid, None)
+        for j, owner in enumerate(lane.state_streams):
+            if owner is not _FREE and owner == sid:
+                lane.state_streams[j] = _FREE
+
+    def checkpoint(self):
+        """Capture this stream for migration: carried state (host
+        numpy), still-queued windows, and the sequence position, as a
+        :class:`~repro.serving.session.StreamCheckpoint`.
+
+        The engine keeps serving the stream afterwards -- a checkpoint
+        is a copy, not a detach. Raises while windows are in flight
+        (their state commits have not landed yet; ``flush()`` first).
+        """
+        self._check_open()
+        self._check_not_inflight("checkpointing")
+        from repro.serving.session import StreamCheckpoint
+        lane, sid = self._lane, self.stream_id
+        payload = None
+        if self.stateful:
+            row = next((j for j, owner in enumerate(lane.state_streams)
+                        if owner is not _FREE and owner == sid), None)
+            if row is not None:
+                payload = _export_carry(lane.engine, lane.state, row)
+            elif sid in lane.parked:
+                lifted = jax.tree_util.tree_map(lambda a: a[None],
+                                                lane.parked[sid])
+                payload = _export_carry(lane.engine, lifted, 0)
+            # else: cold start -- a None payload restores to zero state.
+        return StreamCheckpoint(
+            stream_id=sid, modality=lane.modality, stateful=self.stateful,
+            next_seq=self._engine._seq[sid],
+            duration_us=lane.engine.duration_us, state=payload,
+            deadline=self.deadline,
+            queued=tuple((q.item, q.seq, q.deadline)
+                         for q in lane.queues[sid]))
+
+    def restore(self, ckpt) -> "StreamHandle":
+        """Replay ``ckpt`` into this handle; returns the handle.
+
+        The handle must be fresh (nothing submitted, no carry) and match
+        the checkpoint's modality and statefulness; the lane's engine
+        must agree on ``duration_us`` (an unlatched engine latches the
+        checkpoint's). Remaining windows then continue bitwise-identical
+        to the uninterrupted run on the original engine.
+        """
+        self._check_open()
+        lane, sid, eng = self._lane, self.stream_id, self._engine
+        if (eng._seq[sid] != 0 or lane.queues[sid] or sid in lane.parked
+                or any(o is not _FREE and o == sid
+                       for o in lane.state_streams)):
+            raise ValueError(
+                f"restore needs a fresh handle; stream {sid!r} already "
+                f"has submitted windows or a carry")
+        if ckpt.modality != lane.modality:
+            raise ValueError(
+                f"checkpoint is {ckpt.modality!r}, handle is bound to "
+                f"{lane.modality!r}")
+        if bool(ckpt.stateful) != self.stateful:
+            raise ValueError(
+                f"checkpoint stateful={ckpt.stateful} != handle "
+                f"stateful={self.stateful}; open the handle to match")
+        # Re-queued windows get the same validate-before-any-state-moves
+        # treatment as submit(): an engine that cannot serve them (e.g.
+        # different frame geometry) rejects the restore here, not later
+        # mid-dispatch. Validation may latch an unlatched engine's
+        # duration; roll that back too if anything rejects, so a failed
+        # restore leaves the engine exactly as it found it.
+        prev_duration = lane.engine.duration_us
+        try:
+            if ckpt.duration_us is not None:
+                if lane.engine.duration_us is None:
+                    lane.engine.duration_us = ckpt.duration_us
+                elif lane.engine.duration_us != ckpt.duration_us:
+                    raise ValueError(
+                        f"checkpoint duration_us={ckpt.duration_us} != "
+                        f"engine duration_us={lane.engine.duration_us}")
+            for item, _seq, _deadline in ckpt.queued:
+                lane.engine.validate(item)
+        except Exception:
+            lane.engine.duration_us = prev_duration
+            raise
+        if ckpt.state is not None:
+            lane.parked[sid] = _import_carry(lane.engine, ckpt.state)
+        eng._seq[sid] = int(ckpt.next_seq)
+        if self.deadline is None:
+            self.deadline = ckpt.deadline
+        for item, seq, deadline in ckpt.queued:
+            lane.queues[sid].append(_Queued(item, seq, deadline))
+            eng.stream_stats[sid].queued += 1
+        if lane.queues[sid] and sid not in lane.slots \
+                and sid not in lane.waiting:
+            lane.waiting.append(sid)
+        return self
+
+    # -- retirement ------------------------------------------------------
+
+    def close(self) -> int:
+        """Retire the stream entirely: queue, slot, waiting entry, and
+        carried state. Returns the number of queued windows discarded
+        (idempotent: closing a closed handle returns 0).
+
+        The slot it held is freed with its buffers dead: the next stream
+        admitted there starts from the zero state. Raises if the stream
+        still has windows in flight (``flush()`` first).
+        ``stream_stats`` keeps the history until the id is reused; a
+        later ``open`` with the same id is a brand-new stream (fresh seq
+        numbering, fresh state).
+        """
+        if self.closed:
+            return 0
+        self._check_not_inflight("closing")
+        lane, sid, eng = self._lane, self.stream_id, self._engine
+        dropped = len(lane.queues.pop(sid))
+        if sid in lane.waiting:
+            lane.waiting.remove(sid)
+        for i, owner in enumerate(lane.slots):
+            if owner is not _FREE and owner == sid:
+                lane.slots[i] = _FREE
+                lane.slot_runs[i] = 0
+        for j, owner in enumerate(lane.state_streams):
+            if owner is not _FREE and owner == sid:
+                lane.state_streams[j] = _FREE
+        lane.parked.pop(sid, None)
+        lane.stateful.discard(sid)
+        del eng._stream_lane[sid]
+        eng._seq.pop(sid, None)
+        eng._handles.pop(sid, None)
+        eng.stream_stats[sid].queued -= dropped
+        # Policies with per-stream bookkeeping (e.g. DeadlinePolicy's
+        # aging counters) drop it via the duck-typed forget hook, so a
+        # reused id cannot inherit the retired stream's state.
+        forget = getattr(eng.policy, "forget", None)
+        if forget is not None:
+            forget(sid)
+        self.closed = True
+        return dropped
+
+
+# ----------------------------------------------------------------------
 # The engine-agnostic streaming scheduler.
 # ----------------------------------------------------------------------
 
 class StreamEngine:
     """Continuous batching of sensor windows over per-engine batch slots.
+
+    The serving surface is the session-handle API:
+    ``open(modality=..., stateful=..., deadline=...)`` returns a
+    :class:`StreamHandle` owning one stream's lifecycle (``submit`` /
+    ``reset_state`` / ``checkpoint`` / ``restore`` / ``close``);
+    ``step()`` / ``run()`` / ``flush()`` emit completed
+    :class:`StreamResult` rows across all open streams. The legacy
+    id-keyed ``submit(stream_id, ...)`` form is a thin shim over
+    handles -- bitwise-identical scheduling and results -- kept for
+    pre-session callers (it warns once per engine).
 
     Two construction forms:
 
@@ -475,6 +790,8 @@ class StreamEngine:
 
         self._stream_lane: Dict[Hashable, str] = {}
         self._seq: Dict[Hashable, int] = {}
+        self._handles: Dict[Hashable, StreamHandle] = {}
+        self._auto_id = 0
         self.stream_stats: Dict[Hashable, StreamStats] = {}
         self.stats: Dict[str, float] = {
             "steps": 0, "windows": 0, "wall_s": 0.0,
@@ -542,28 +859,112 @@ class StreamEngine:
                 f"({type(engine).__name__}) does not implement warmup()")
         warm(shape_keys)
 
-    # -- submission ------------------------------------------------------
+    # -- the session-handle API ------------------------------------------
+
+    def open(self, modality: Optional[str] = None, *,
+             stream_id: Optional[Hashable] = None,
+             stateful: bool = False,
+             deadline: Optional[float] = None) -> StreamHandle:
+        """Open a new stream and return its :class:`StreamHandle`.
+
+        ``modality`` selects the engine lane (optional when only one is
+        configured). ``stateful=True`` opts the stream into carried
+        state: its engine state (the event wing: LIF membranes) chains
+        across its windows, following the stream through any slot
+        reassignment, until ``reset_state`` or ``close``. ``deadline``
+        is the handle's default per-window deadline for deadline-aware
+        policies. Modality and statefulness are latched for the
+        stream's life. ``stream_id`` names the stream (auto-generated
+        ``"<modality>-<n>"`` when omitted); opening an id that is
+        already open raises -- close it first, or keep the old handle.
+        """
+        if modality is None:
+            if len(self._lanes) != 1:
+                raise ValueError(
+                    f"modality required to open a stream with engines "
+                    f"{sorted(self._lanes)}")
+            lane = next(iter(self._lanes.values()))
+        elif modality not in self._lanes:
+            raise ValueError(f"no engine for modality {modality!r}; "
+                             f"have {sorted(self._lanes)}")
+        else:
+            lane = self._lanes[modality]
+        if stateful and not lane.supports_state:
+            raise ValueError(
+                f"engine for modality {lane.modality!r} "
+                f"({type(lane.engine).__name__}) has no carried-state "
+                f"support (no init_state); submit stateless")
+        if stream_id is None:
+            while True:
+                stream_id = f"{lane.modality}-{self._auto_id}"
+                self._auto_id += 1
+                if stream_id not in self._stream_lane:
+                    break
+        elif stream_id in self._stream_lane:
+            raise ValueError(
+                f"stream {stream_id!r} is already open (bound to "
+                f"modality {self._stream_lane[stream_id]!r}); close() it "
+                f"before reopening the id")
+        lane.queues[stream_id] = deque()
+        self._stream_lane[stream_id] = lane.modality
+        self._seq[stream_id] = 0
+        self.stream_stats[stream_id] = StreamStats()
+        if stateful:
+            lane.stateful.add(stream_id)
+        handle = StreamHandle(self, lane, stream_id, stateful, deadline)
+        self._handles[stream_id] = handle
+        return handle
+
+    def restore(self, ckpt, *,
+                stream_id: Optional[Hashable] = None) -> StreamHandle:
+        """Open a stream from a :class:`~repro.serving.session.
+        StreamCheckpoint` -- ``open`` + ``StreamHandle.restore`` in one
+        call. The stream keeps the checkpoint's id (unless ``stream_id``
+        renames it) and its default deadline."""
+        handle = self.open(modality=ckpt.modality,
+                           stream_id=ckpt.stream_id
+                           if stream_id is None else stream_id,
+                           stateful=ckpt.stateful,
+                           deadline=ckpt.deadline)
+        try:
+            return handle.restore(ckpt)
+        except Exception:
+            handle.close()
+            raise
+
+    @property
+    def handles(self) -> Dict[Hashable, StreamHandle]:
+        """Open handles by stream id (a copy; close via the handle)."""
+        return dict(self._handles)
+
+    # -- submission (legacy id-keyed shim) -------------------------------
 
     def submit(self, stream_id: Hashable, window: Any, *,
                modality: Optional[str] = None,
                deadline: Optional[float] = None,
                stateful: Optional[bool] = None) -> int:
-        """Queue one window on a stream; returns its per-stream sequence
-        number (the same value later reported by ``StreamResult.seq``).
-        Never blocks; the window runs at the next step in which its
-        stream holds a slot and this window is at the queue head.
+        """Queue one window on an id-keyed stream (LEGACY shim).
+
+        The pre-session call form: the first submit of a new id opens a
+        handle under the hood, later submits forward to it --
+        scheduling and results are bitwise identical to driving the
+        handle directly. Prefer ``open(...)`` + ``handle.submit(...)``;
+        this form warns once per engine.
 
         ``modality`` selects the engine for a NEW stream (optional when
         only one engine is configured); known streams are bound to their
         lane. ``deadline`` is scheduling metadata consumed by
         deadline-aware policies (smaller = more urgent). ``stateful=True``
-        opts a NEW stream into carried state: its engine state (the event
-        wing: LIF membranes) chains across its windows, following the
-        stream through any slot reassignment, until ``reset_state`` or
-        ``retire``. Like modality, statefulness is latched for the
-        stream's life (default False; pass ``None`` to leave a known
-        stream's binding alone).
+        opts a NEW stream into carried state. Like modality, statefulness
+        is latched for the stream's life (default False; pass ``None``
+        to leave a known stream's binding alone).
         """
+        warn_deprecated_call(
+            self, "id-keyed-submit",
+            "StreamEngine.submit(stream_id, window, ...) is a legacy "
+            "call form; use the session-handle API instead: handle = "
+            "engine.open(modality=..., stateful=...); handle.submit("
+            "window)")
         lane = self._resolve_lane(stream_id, modality)
         # Validation happens BEFORE any queue/seq state changes, so a
         # rejected submit neither burns a sequence number nor corrupts
@@ -573,30 +974,23 @@ class StreamEngine:
                 f"engine for modality {lane.modality!r} "
                 f"({type(lane.engine).__name__}) has no carried-state "
                 f"support (no init_state); submit stateless")
-        known = stream_id in lane.queues
-        if (known and stateful is not None
-                and bool(stateful) != (stream_id in lane.stateful)):
+        handle = self._handles.get(stream_id)
+        if (handle is not None and stateful is not None
+                and bool(stateful) != handle.stateful):
             raise ValueError(
                 f"stream {stream_id!r} is bound to stateful="
-                f"{stream_id in lane.stateful}; statefulness is latched "
+                f"{handle.stateful}; statefulness is latched "
                 f"at the stream's first submit")
-        lane.engine.validate(window)
-        if not known:
-            lane.queues[stream_id] = deque()
-            self._stream_lane[stream_id] = lane.modality
-            self._seq[stream_id] = 0
-            self.stream_stats[stream_id] = StreamStats()
-            if stateful:
-                lane.stateful.add(stream_id)
-        seq = self._seq[stream_id]
-        self._seq[stream_id] = seq + 1
-        lane.queues[stream_id].append(_Queued(window, seq, deadline))
-        # A stream is schedulable via exactly one of: a held slot or a
-        # waiting-line entry (covers streams that drained and come back).
-        if stream_id not in lane.slots and stream_id not in lane.waiting:
-            lane.waiting.append(stream_id)
-        self.stream_stats[stream_id].queued += 1
-        return seq
+        if handle is None:
+            # Validate BEFORE open so a rejected first submit registers
+            # no stream at all (no handle, no stats entry) -- the price
+            # is one redundant validate inside handle.submit (validate
+            # is idempotent once the engine's duration is latched).
+            lane.engine.validate(window)
+            handle = self.open(modality=lane.modality,
+                               stream_id=stream_id,
+                               stateful=bool(stateful))
+        return handle.submit(window, deadline=deadline)
 
     def _resolve_lane(self, stream_id: Hashable,
                       modality: Optional[str]) -> EngineLane:
@@ -624,72 +1018,26 @@ class StreamEngine:
 
     # -- carried state ---------------------------------------------------
 
-    def _lane_of(self, stream_id: Hashable) -> EngineLane:
-        modality = self._stream_lane.get(stream_id)
-        if modality is None:
-            raise KeyError(f"unknown stream {stream_id!r}")
-        return self._lanes[modality]
-
     def stateful_of(self, stream_id: Hashable) -> bool:
         """Whether a known stream carries state across its windows."""
-        return stream_id in self._lane_of(stream_id).stateful
+        return self._handle_of(stream_id).stateful
+
+    def _handle_of(self, stream_id: Hashable) -> StreamHandle:
+        handle = self._handles.get(stream_id)
+        if handle is None:
+            raise KeyError(f"unknown stream {stream_id!r}")
+        return handle
 
     def reset_state(self, stream_id: Hashable) -> None:
-        """Zero a stateful stream's carried state without retiring it --
-        the gesture-boundary escape hatch: the stream's NEXT dispatched
-        window starts from the cold-start state, exactly as if the
-        stream were newly admitted. Applies from the next dispatch;
-        windows already in flight were dispatched with the old carry.
-        """
-        lane = self._lane_of(stream_id)
-        if stream_id not in lane.stateful:
-            raise ValueError(f"stream {stream_id!r} is not stateful")
-        lane.parked.pop(stream_id, None)
-        for j, owner in enumerate(lane.state_streams):
-            if owner is not _FREE and owner == stream_id:
-                lane.state_streams[j] = _FREE
+        """Zero a stateful stream's carried state without retiring it;
+        forwards to :meth:`StreamHandle.reset_state`."""
+        self._handle_of(stream_id).reset_state()
 
     def retire(self, stream_id: Hashable) -> int:
-        """Remove a stream entirely: queue, slot, waiting entry, and
-        carried state. Returns the number of queued windows discarded.
-
-        The slot it held is freed with its buffers dead: the next stream
-        admitted there starts from the zero state (the dirty-slot
-        regression tests pin this down). Raises if the stream still has
-        windows in flight (``flush()`` first). ``stream_stats`` keeps the
-        history until the id is reused; a later submit with the same id
-        is a brand-new stream (fresh seq numbering, fresh state).
-        """
-        lane = self._lane_of(stream_id)
-        for step_recs in self._inflight:
-            for rec in step_recs:
-                for entry in rec.entries:
-                    if entry is not None and entry[0] == stream_id:
-                        raise ValueError(
-                            f"stream {stream_id!r} has in-flight "
-                            f"windows; flush() before retiring")
-        dropped = len(lane.queues.pop(stream_id))
-        if stream_id in lane.waiting:
-            lane.waiting.remove(stream_id)
-        for i, sid in enumerate(lane.slots):
-            if sid is not _FREE and sid == stream_id:
-                lane.slots[i] = _FREE
-                lane.slot_runs[i] = 0
-        for j, owner in enumerate(lane.state_streams):
-            if owner is not _FREE and owner == stream_id:
-                lane.state_streams[j] = _FREE
-        lane.parked.pop(stream_id, None)
-        lane.stateful.discard(stream_id)
-        del self._stream_lane[stream_id]
-        self._seq.pop(stream_id, None)
-        self.stream_stats[stream_id].queued -= dropped
-        # Policies with per-stream bookkeeping (e.g. DeadlinePolicy's
-        # aging counters) drop it via the duck-typed forget hook, so a
-        # reused id cannot inherit the retired stream's state.
-        forget = getattr(self.policy, "forget", None)
-        if forget is not None:
-            forget(stream_id)
-        return dropped
+        """Remove a stream entirely; forwards to
+        :meth:`StreamHandle.close` (see there for semantics). Returns
+        the number of queued windows discarded."""
+        return self._handle_of(stream_id).close()
 
     def _lane_state_in(self, lane: EngineLane):
         """Phase-1 state planning for one lane's dispatch.
@@ -857,7 +1205,11 @@ class StreamEngine:
                 # advance in dispatch order, so its infer cannot wait
                 # for the (later) collect.
                 if state_in is None:
-                    kind, pending = "results", lane.engine.infer(batch)
+                    # Stateless lanes ride the engines' legacy call form
+                    # by design; the deprecation nudge is for end users.
+                    with suppress_api_deprecations():
+                        results = lane.engine.infer(batch)
+                    kind, pending = "results", results
                 else:
                     results, new_state = lane.engine.infer(batch, state_in)
                     kind, pending = "results", results
@@ -905,7 +1257,8 @@ class StreamEngine:
             elif rec.kind == "handle":
                 results = lane.engine.infer_collect(rec.pending)
             else:
-                results = lane.engine.infer(rec.pending)
+                with suppress_api_deprecations():
+                    results = lane.engine.infer(rec.pending)
             lane.shape_keys.add(rec.key)
             for slot, entry in enumerate(rec.entries):
                 if entry is None:

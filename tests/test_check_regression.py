@@ -17,7 +17,8 @@ _SPEC.loader.exec_module(check_regression)
 
 
 def _doc(batched=600.0, looped=300.0, stateful=590.0, stateless=600.0,
-         with_stateful=True):
+         fused=200.0, separate=195.0, with_stateful=True,
+         with_fusion=True):
     doc = {"rows": [{"batch_size": 4,
                      "batched_windows_per_s": batched,
                      "looped_windows_per_s": looped,
@@ -28,6 +29,12 @@ def _doc(batched=600.0, looped=300.0, stateful=590.0, stateless=600.0,
             "stateless_windows_per_s": stateless,
             "stateful_windows_per_s": stateful,
             "stateful_over_stateless": stateful / stateless}]
+    if with_fusion:
+        doc["fusion_rows"] = [{
+            "sessions": 2,
+            "separate_ticks_per_s": separate,
+            "fused_ticks_per_s": fused,
+            "fused_over_separate": fused / separate}]
     return doc
 
 
@@ -53,7 +60,8 @@ def test_slow_runner_passes_via_ratio_fallback(tmp_path):
     # Uniformly slower machine: absolute floors missed, ratios hold.
     assert _run(tmp_path, _doc(),
                 _doc(batched=300.0, looped=150.0,
-                     stateful=295.0, stateless=300.0)) == 0
+                     stateful=295.0, stateless=300.0,
+                     fused=100.0, separate=97.0)) == 0
 
 
 def test_stateful_cell_regression_fails(tmp_path):
@@ -81,3 +89,31 @@ def test_stateful_ratio_floor_is_configurable(tmp_path):
     assert _run(tmp_path, _doc(), fresh) == 1
     assert _run(tmp_path, _doc(), fresh,
                 extra=("--stateful-ratio-floor", "0.85")) == 0
+
+
+# -- the cross-modal fusion cell ---------------------------------------------
+
+def test_missing_fresh_fusion_cell_fails(tmp_path):
+    assert _run(tmp_path, _doc(), _doc(with_fusion=False)) == 1
+
+
+def test_old_baseline_without_fusion_warns_and_passes(tmp_path):
+    """A baseline predating fusion_rows must not block the transition:
+    the fusion gate is skipped with a warning, everything else gates."""
+    assert _run(tmp_path, _doc(with_fusion=False), _doc()) == 0
+    # ...but a real regression elsewhere still fails.
+    assert _run(tmp_path, _doc(with_fusion=False),
+                _doc(batched=300.0, looped=290.0)) == 1
+
+
+def test_fusion_regression_fails(tmp_path):
+    # Fused throughput halved AND the fused-vs-separate ratio collapsed
+    # (separate side unchanged): the fusion path itself regressed.
+    assert _run(tmp_path, _doc(),
+                _doc(fused=90.0, separate=195.0)) == 1
+
+
+def test_fusion_slow_runner_passes_via_ratio(tmp_path):
+    # Both fusion cells uniformly slower: ratio holds, gate passes.
+    assert _run(tmp_path, _doc(),
+                _doc(fused=100.0, separate=98.0)) == 0

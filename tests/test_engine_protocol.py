@@ -184,6 +184,40 @@ def test_frame_engine_empty_slots_do_not_change_results(frame_engine):
         assert ref.latency_ms == got.latency_ms
 
 
+def test_frame_engine_warmup_3tuple_requires_latched_duration(tcfg,
+                                                              tparams):
+    """A 3-tuple (b, h, w) shape key borrows the engine's latched
+    duration_us; warming an UNLATCHED engine with one must raise a
+    clear latch-first error instead of silently caching an executable
+    under a (b, h, w, None) key no served batch ever hits."""
+    eng = FrameTCNEngine(tparams, tcfg)
+    assert eng.duration_us is None
+    with pytest.raises(ValueError, match="latch duration_us first"):
+        eng.warmup([(2, 32, 32)])
+    assert eng.compiled_shape_keys() == set()    # nothing cached
+    # A full 4-tuple key needs no latch...
+    eng.warmup([(2, 32, 32, 300_000)])
+    assert eng.compiled_shape_keys() == {(2, 32, 32, 300_000)}
+    # ...and once the duration IS latched, 3-tuples resolve against it.
+    eng2 = FrameTCNEngine(tparams, tcfg, duration_us=300_000)
+    eng2.warmup([(2, 32, 32)])
+    assert eng2.compiled_shape_keys() == {(2, 32, 32, 300_000)}
+    # Geometry and arity validation unchanged.
+    with pytest.raises(ValueError, match="geometry"):
+        eng2.warmup([(2, 16, 16)])
+    with pytest.raises(ValueError, match="shape key"):
+        eng2.warmup([(2, 32)])
+
+
+def test_frame_engine_export_import_state_trivially_empty(frame_engine):
+    """The feedforward wing satisfies the checkpoint contract with the
+    empty pytree: export -> import round-trips {} unchanged."""
+    state = frame_engine.init_state(2)
+    payload = frame_engine.export_state(state, 0)
+    assert payload == {}
+    assert frame_engine.import_state(state, 0, payload) == {}
+
+
 def test_frame_engine_result_contract(frame_engine):
     res = frame_engine.infer_frames(_frames(1, seed=40))[0]
     assert res.pwm.shape == (1, 4)

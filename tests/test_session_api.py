@@ -1,0 +1,618 @@
+"""Session-handle serving API: StreamHandle lifecycle, legacy-shim
+bitwise parity, checkpoint/restore stream migration (fresh-process
+round trips at B in {1, 4, 8}, sync and pipelined), the cross-modal
+FusionSession, and the one-shot deprecation surface.
+"""
+import dataclasses
+import pickle
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (FrameTCNEngine, SNNConfig, TCNConfig, init_snn,
+                        init_tcn)
+from repro.core import events as ev
+from repro.core import frames as fr
+from repro.core.pipeline import BatchedClosedLoop, pwm_from_logits
+from repro.serving import (FusionSession, StreamCheckpoint, StreamEngine,
+                           StreamStats, late_logit_fusion)
+from tests.test_stateful_stream import (_assert_matches_oracle,
+                                        _uninterrupted_oracle, _windows)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return SNNConfig(height=32, width=32, time_bins=4, conv1_features=4,
+                     conv2_features=8, hidden=32, num_classes=11)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_snn(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def tcfg():
+    return TCNConfig(height=32, width=32, conv1_features=4,
+                     conv2_features=8, hidden=32, num_classes=11)
+
+
+@pytest.fixture(scope="module")
+def tparams(tcfg):
+    return init_tcn(jax.random.PRNGKey(1), tcfg)
+
+
+def _frames(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [fr.synthetic_gesture_frames(rng, i % 11, height=32, width=32)
+            for i in range(n)]
+
+
+def _hetero_engine(cfg, params, tcfg, tparams, **kw):
+    return StreamEngine(engines=[BatchedClosedLoop(params, cfg),
+                                 FrameTCNEngine(tparams, tcfg)], **kw)
+
+
+# -- handle lifecycle --------------------------------------------------------
+
+def test_open_and_submit_basics(cfg, params):
+    eng = StreamEngine(params, cfg, max_streams=2)
+    h = eng.open(stateful=True)                 # single lane: no modality
+    assert h.modality == "event" and h.stateful and not h.closed
+    assert h.stream_id == "event-0"             # auto-generated
+    assert eng.open().stream_id == "event-1"
+    named = eng.open(stream_id="cam")
+    assert eng.handles["cam"] is named
+    with pytest.raises(ValueError, match="already open"):
+        eng.open(stream_id="cam")
+    ws = _windows(2, seed=1)
+    assert h.submit(ws[0]) == 0 and h.submit(ws[1]) == 1
+    assert h.queued == 2
+    out = eng.run()
+    assert [(r.stream_id, r.seq) for r in out] == [("event-0", 0),
+                                                   ("event-0", 1)]
+    assert h.stats.windows == 2 and h.queued == 0
+    assert h.close() == 0 and h.closed
+    assert h.close() == 0                       # idempotent
+    with pytest.raises(ValueError, match="closed"):
+        h.submit(ws[0])
+    # The id is free again after close: reopening is a brand-new stream.
+    assert eng.open(stream_id="event-0").submit(ws[0]) == 0
+
+
+def test_open_validation(cfg, params, tcfg, tparams):
+    from tests.test_slot_policy import StubEngine
+    eng = _hetero_engine(cfg, params, tcfg, tparams, max_streams=1)
+    with pytest.raises(ValueError, match="modality required"):
+        eng.open()
+    with pytest.raises(ValueError, match="no engine"):
+        eng.open(modality="lidar")
+    stub = StreamEngine(engines=[StubEngine()], max_streams=1)
+    with pytest.raises(ValueError, match="carried-state"):
+        stub.open(stateful=True)
+    assert stub.handles == {}                   # nothing registered
+
+
+def test_handle_default_deadline_feeds_policy(cfg, params):
+    """A handle's default deadline is attached to every window it
+    submits (overridable per submit) -- visible to deadline policies."""
+    eng = StreamEngine(params, cfg, max_streams=1)
+    h = eng.open(deadline=7.0)
+    ws = _windows(2, seed=2)
+    h.submit(ws[0])
+    h.submit(ws[1], deadline=1.0)
+    lane = eng._lanes["event"]
+    assert [q.deadline for q in lane.queues[h.stream_id]] == [7.0, 1.0]
+    eng.run()
+
+
+# -- the deprecation surface -------------------------------------------------
+
+def test_legacy_submit_warns_once_naming_handle_api(cfg, params):
+    eng = StreamEngine(params, cfg, max_streams=2)
+    ws = _windows(2, seed=3)
+    with pytest.warns(DeprecationWarning, match=r"open\(modality"):
+        eng.submit("a", ws[0])
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        eng.submit("a", ws[1])                  # one-shot: now silent
+    assert not [w for w in rec if w.category is DeprecationWarning]
+    eng.run()
+
+
+def test_stateless_infer_warns_once_naming_replacement(cfg, params):
+    loop = BatchedClosedLoop(params, cfg)
+    batch = ev.pad_event_windows(_windows(1, seed=4))
+    with pytest.warns(DeprecationWarning, match="init_state"):
+        loop.infer(batch)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        loop.infer(batch)
+        loop.infer(batch, loop.init_state(batch.batch_size))  # modern form
+    assert not [w for w in rec if w.category is DeprecationWarning]
+
+
+def test_handle_api_and_shim_internals_emit_no_deprecation(cfg, params):
+    """The full handle-API serving path -- including the engine's
+    internal stateless infer calls -- is deprecation-silent; only USER
+    calls of the legacy forms warn."""
+    eng = StreamEngine(params, cfg, max_streams=2, pipeline_depth=1)
+    h = eng.open()                              # stateless lane
+    hs = eng.open(stateful=True)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        for w in _windows(2, seed=5):
+            h.submit(w)
+            hs.submit(w)
+        eng.run()
+    assert not [w for w in rec if w.category is DeprecationWarning]
+
+
+# -- legacy shim: bitwise parity against the handle API ----------------------
+
+@pytest.mark.parametrize("pipeline_depth", [0, 1], ids=["sync", "pipelined"])
+def test_shim_results_bitwise_identical_to_handle_api(cfg, params,
+                                                      pipeline_depth):
+    """The acceptance criterion: the id-keyed submit shim must produce
+    the exact StreamResult sequence -- order and values -- of the
+    equivalent handle-API run, stateless and stateful streams mixed,
+    sync and pipelined."""
+    streams = {f"cam{s}": _windows(3, seed=10 + s) for s in range(3)}
+    stateful_ids = {"cam1"}
+
+    legacy = StreamEngine(params, cfg, max_streams=2,
+                          pipeline_depth=pipeline_depth)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        for sid, ws in streams.items():
+            for w in ws:
+                legacy.submit(sid, w, stateful=sid in stateful_ids)
+    ref = legacy.run()
+
+    modern = StreamEngine(params, cfg, max_streams=2,
+                          pipeline_depth=pipeline_depth)
+    handles = {sid: modern.open(stream_id=sid,
+                                stateful=sid in stateful_ids)
+               for sid in streams}
+    for sid, ws in streams.items():
+        for w in ws:
+            handles[sid].submit(w)
+    got = modern.run()
+
+    assert ([(r.stream_id, r.seq, r.modality) for r in got]
+            == [(r.stream_id, r.seq, r.modality) for r in ref])
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a.result.label_pred,
+                                      b.result.label_pred)
+        np.testing.assert_array_equal(a.result.pwm, b.result.pwm)
+        np.testing.assert_array_equal(a.result.logits, b.result.logits)
+        assert a.result.energy_mj == b.result.energy_mj
+        assert a.result.latency_ms == b.result.latency_ms
+
+
+def test_legacy_stateful_latch_still_enforced_through_shim(cfg, params):
+    eng = StreamEngine(params, cfg, max_streams=2)
+    ws = _windows(2, seed=12)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        eng.submit("a", ws[0], stateful=True)
+        with pytest.raises(ValueError, match="latched"):
+            eng.submit("a", ws[1], stateful=False)
+        assert eng.submit("a", ws[1]) == 1      # None leaves the latch alone
+    assert eng.stateful_of("a") is True
+    eng.run()
+
+
+# -- checkpoint / restore ----------------------------------------------------
+
+@pytest.mark.parametrize("pipeline_depth", [0, 1], ids=["sync", "pipelined"])
+@pytest.mark.parametrize("b", [1, 4, 8])
+def test_checkpoint_restore_roundtrip(cfg, params, b, pipeline_depth):
+    """The acceptance criterion: checkpoint every stream mid-scan,
+    restore into a FRESH StreamEngine (through a pickle round trip --
+    i.e. a fresh process), serve the remaining windows: the full result
+    sequence is bitwise identical to the uninterrupted scan."""
+    full, cut = 4, 2
+    streams = {f"cam{s}": _windows(full, seed=120 + 5 * s + b)
+               for s in range(b)}
+    eng_a = StreamEngine(params, cfg, max_streams=b,
+                         pipeline_depth=pipeline_depth)
+    h_a = {sid: eng_a.open(stream_id=sid, stateful=True)
+           for sid in streams}
+    for sid, ws in streams.items():
+        for w in ws[:cut]:
+            h_a[sid].submit(w)
+    results = eng_a.run()
+
+    blobs = pickle.dumps({sid: h.checkpoint() for sid, h in h_a.items()})
+    ckpts = pickle.loads(blobs)                 # "the other process"
+    for ck in ckpts.values():
+        assert isinstance(ck, StreamCheckpoint) and ck.next_seq == cut
+        for leaf in jax.tree_util.tree_leaves(ck.state):
+            assert isinstance(leaf, np.ndarray)  # host-resident payload
+
+    eng_b = StreamEngine(params, cfg, max_streams=b,
+                         pipeline_depth=pipeline_depth)
+    h_b = {sid: eng_b.restore(ckpts[sid]) for sid in streams}
+    for sid, ws in streams.items():
+        for w in ws[cut:]:
+            h_b[sid].submit(w)
+    results += eng_b.run()
+
+    assert len(results) == full * b
+    ids, per_window = _uninterrupted_oracle(params, cfg, streams)
+    _assert_matches_oracle(results, ids, per_window)
+
+
+def test_checkpoint_of_parked_carry(cfg, params):
+    """Two stateful streams over one slot: at checkpoint time one carry
+    lives in the slot-major buffer, the other is parked -- both must
+    export, migrate, and chain bitwise."""
+    streams = {"s0": _windows(4, seed=130), "s1": _windows(4, seed=131)}
+    eng_a = StreamEngine(params, cfg, max_streams=1)
+    h_a = {sid: eng_a.open(stream_id=sid, stateful=True)
+           for sid in streams}
+    for sid, ws in streams.items():
+        for w in ws[:2]:
+            h_a[sid].submit(w)
+    results = eng_a.run()
+    lane = eng_a._lanes["event"]
+    assert lane.parked                           # one carry parked
+    ckpts = {sid: h.checkpoint() for sid, h in h_a.items()}
+    eng_b = StreamEngine(params, cfg, max_streams=1)
+    for sid, ws in streams.items():
+        h = eng_b.restore(ckpts[sid])
+        for w in ws[2:]:
+            h.submit(w)
+    results += eng_b.run()
+    ids, per_window = _uninterrupted_oracle(params, cfg, streams)
+    _assert_matches_oracle(results, ids, per_window)
+
+
+def test_checkpoint_carries_queued_windows(cfg, params):
+    """Still-queued windows ride the checkpoint: migration resubmits
+    them under their original sequence numbers."""
+    ws = _windows(4, seed=140)
+    eng_a = StreamEngine(params, cfg, max_streams=1)
+    h = eng_a.open(stream_id="s", stateful=True)
+    h.submit(ws[0])
+    h.submit(ws[1])
+    res_a = eng_a.step()
+    assert [r.seq for r in res_a] == [0]         # window 1 still queued
+    ck = pickle.loads(pickle.dumps(h.checkpoint()))
+    assert ck.next_seq == 2 and len(ck.queued) == 1
+    eng_b = StreamEngine(params, cfg, max_streams=1)
+    h_b = eng_b.restore(ck)
+    assert h_b.queued == 1 and h_b.stats.queued == 1
+    h_b.submit(ws[2])
+    h_b.submit(ws[3])
+    res_b = eng_b.run()
+    assert [r.seq for r in res_b] == [1, 2, 3]
+    ids, per_window = _uninterrupted_oracle(params, cfg, {"s": ws})
+    _assert_matches_oracle(res_a + res_b, ids, per_window)
+
+
+def test_checkpoint_rejects_inflight_windows(cfg, params):
+    eng = StreamEngine(params, cfg, max_streams=1, pipeline_depth=1)
+    h = eng.open(stream_id="s", stateful=True)
+    h.submit(_windows(1, seed=150)[0])
+    eng.step()                                   # dispatched, uncollected
+    with pytest.raises(ValueError, match="in-flight"):
+        h.checkpoint()
+    eng.flush()
+    assert h.checkpoint().next_seq == 1
+
+
+def test_restore_validation(cfg, params):
+    ws = _windows(2, seed=160)
+    eng = StreamEngine(params, cfg, max_streams=1)
+    h = eng.open(stream_id="s", stateful=True)
+    h.submit(ws[0])
+    eng.run()
+    ck = h.checkpoint()
+    # Not fresh: the source handle itself has history.
+    with pytest.raises(ValueError, match="fresh"):
+        h.restore(ck)
+    eng_b = StreamEngine(params, cfg, max_streams=1)
+    # Statefulness must match the checkpoint.
+    with pytest.raises(ValueError, match="stateful"):
+        eng_b.open(stream_id="s").restore(ck)
+    # engine.restore cleans up its half-opened handle on failure.
+    eng_c = StreamEngine(params, cfg, max_streams=1,
+                         duration_us=150_000)
+    with pytest.raises(ValueError, match="duration_us"):
+        eng_c.restore(ck)
+    assert eng_c.handles == {}
+    # Same id restores cleanly elsewhere; rename works too.
+    eng_d = StreamEngine(params, cfg, max_streams=1)
+    assert eng_d.restore(ck).stream_id == "s"
+    assert eng_d.restore(ck, stream_id="s2").stream_id == "s2"
+    # Wrong modality (a frame checkpoint cannot land on an event lane).
+    bad = dataclasses.replace(ck, modality="frame")
+    with pytest.raises(ValueError, match="no engine"):
+        eng_d.restore(bad)
+
+
+def test_export_import_state_roundtrip(cfg, params):
+    """Engine-level primitive: export_state(state, slot) is a host
+    (numpy) pytree; import_state splices it back bitwise."""
+    loop = BatchedClosedLoop(params, cfg)
+    batch = ev.pad_event_windows(_windows(3, seed=170))
+    _, state = loop.infer(batch, loop.init_state(batch.batch_size))
+    payload = loop.export_state(state, 1)
+    assert all(isinstance(v, np.ndarray) for v in payload.values())
+    spliced = loop.import_state(loop.init_state(3), 1, payload)
+    for name, v in state.items():
+        np.testing.assert_array_equal(np.asarray(spliced[name][1]),
+                                      np.asarray(v[1]))
+        assert not np.asarray(spliced[name][0]).any()  # other rows zero
+
+
+# -- StreamStats zero-window guards ------------------------------------------
+
+def test_stream_stats_guard_zero_completed_windows(cfg, params):
+    st = StreamStats()
+    assert st.mean_latency_ms == 0.0
+    assert st.realtime_fraction == 0.0
+    assert st.mean_power_mw == 0.0
+    # Opened-but-never-served stream: same guards through the handle.
+    eng = StreamEngine(params, cfg, max_streams=1)
+    h = eng.open()
+    assert h.stats.mean_latency_ms == 0.0
+    assert h.stats.realtime_fraction == 0.0
+    assert h.stats.mean_power_mw == 0.0
+    # Queued-but-unserved keeps the guards too.
+    h.submit(_windows(1, seed=180)[0])
+    assert h.stats.windows == 0 and h.stats.mean_power_mw == 0.0
+    eng.run()
+    assert h.stats.mean_latency_ms > 0 and h.stats.mean_power_mw > 0
+
+
+# -- FusionSession -----------------------------------------------------------
+
+def test_fusion_session_one_result_per_tick(cfg, params, tcfg, tparams):
+    """The acceptance criterion: one fused StreamResult per control
+    tick, with combined PWM actuation (late logit fusion) and per-wing
+    energy attribution."""
+    eng = _hetero_engine(cfg, params, tcfg, tparams,
+                         max_streams={"event": 2, "frame": 2})
+    sess = FusionSession(eng, stateful=False)
+    n = 3
+    evs, frs = _windows(n, seed=190), _frames(n, seed=191)
+    for k in range(n):
+        assert sess.submit(evs[k], frs[k]) == k
+    fused = sess.run()
+    assert [(r.seq, r.modality) for r in fused] == [
+        (k, "fusion") for k in range(n)]
+    assert sess.unclaimed == [] and sess.ticks_fused == n
+
+    # Expected fusion from the wings served unfused on twin engines.
+    ev_eng = StreamEngine(engines=[BatchedClosedLoop(params, cfg)],
+                          max_streams=2)
+    fr_eng = StreamEngine(engines=[FrameTCNEngine(tparams, tcfg)],
+                          max_streams=2)
+    he, hf = ev_eng.open(), fr_eng.open()
+    for k in range(n):
+        he.submit(evs[k])
+        hf.submit(frs[k])
+    wing = {("event", r.seq): r.result for r in ev_eng.run()}
+    wing.update({("frame", r.seq): r.result for r in fr_eng.run()})
+
+    pwm_jit = jax.jit(pwm_from_logits)   # the session's actuation map
+    for r in fused:
+        e, f = wing[("event", r.seq)], wing[("frame", r.seq)]
+        expected = 0.5 * e.logits + 0.5 * f.logits
+        np.testing.assert_array_equal(r.result.logits, expected)
+        np.testing.assert_array_equal(
+            r.result.pwm, np.asarray(pwm_jit(expected)))
+        np.testing.assert_array_equal(r.result.label_pred,
+                                      np.argmax(expected, axis=-1))
+        assert r.result.energy_mj == e.energy_mj + f.energy_mj
+        assert r.result.breakdown["per_wing_energy_mj"] == {
+            "event": e.energy_mj, "frame": f.energy_mj}
+        assert r.result.latency_ms == max(e.latency_ms, f.latency_ms)
+        assert "snn_inference" in r.result.breakdown["event"]["stages"]
+        assert "tcn_inference" in r.result.breakdown["frame"]["stages"]
+
+
+def test_fusion_rule_pluggable_and_event_only_weight(cfg, params, tcfg,
+                                                     tparams):
+    """weights (1, 0): the fused actuation collapses to the event wing's
+    bitwise, proving the rule actually drives the output."""
+    eng = _hetero_engine(cfg, params, tcfg, tparams, max_streams=1)
+    sess = FusionSession(eng, fusion=late_logit_fusion(1.0, 0.0))
+    evs, frs = _windows(2, seed=200), _frames(2, seed=201)
+    for k in range(2):
+        sess.submit(evs[k], frs[k])
+    fused = sess.run()
+    ev_eng = StreamEngine(engines=[BatchedClosedLoop(params, cfg)],
+                          max_streams=1)
+    h = ev_eng.open()
+    for w in evs:
+        h.submit(w)
+    for r, ref in zip(fused, ev_eng.run()):
+        np.testing.assert_array_equal(r.result.pwm, ref.result.pwm)
+        np.testing.assert_array_equal(r.result.label_pred,
+                                      ref.result.label_pred)
+        # ... but energy still counts BOTH wings (fusion fuses decisions,
+        # not accounting).
+        assert r.result.energy_mj > ref.result.energy_mj
+
+
+def test_fusion_session_leaves_foreign_streams_alone(cfg, params, tcfg,
+                                                     tparams):
+    eng = _hetero_engine(cfg, params, tcfg, tparams,
+                         max_streams={"event": 2, "frame": 1})
+    sess = FusionSession(eng)
+    solo = eng.open(modality="event", stream_id="solo")
+    evs, frs = _windows(2, seed=210), _frames(2, seed=211)
+    sess.submit(evs[0], frs[0])
+    solo.submit(evs[1])
+    fused = sess.run()
+    assert [r.stream_id for r in fused] == [sess.session_id]
+    assert [r.stream_id for r in sess.unclaimed] == ["solo"]
+    assert sess.stats["ticks_fused"] == 1
+    assert sess.stats["event"].windows == 1
+
+
+def test_fusion_session_checkpoint_restore(cfg, params, tcfg, tparams):
+    """A whole fusion stream migrates: both wings' carries + the tick
+    cursor; post-migration fused ticks are bitwise identical to the
+    uninterrupted session."""
+    n, cut = 4, 2
+    evs, frs = _windows(n, seed=220), _frames(n, seed=221)
+
+    def mk_engine():
+        return _hetero_engine(cfg, params, tcfg, tparams, max_streams=1)
+
+    # Uninterrupted oracle session.
+    oracle = FusionSession(mk_engine(), session_id="o", stateful=True)
+    for k in range(n):
+        oracle.submit(evs[k], frs[k])
+    ref = oracle.run()
+
+    sess_a = FusionSession(mk_engine(), session_id="m", stateful=True)
+    for k in range(cut):
+        sess_a.submit(evs[k], frs[k])
+    got = sess_a.run()
+    ck = pickle.loads(pickle.dumps(sess_a.checkpoint()))
+    sess_b = FusionSession.restore(mk_engine(), ck)
+    assert sess_b.session_id == "m"
+    for k in range(cut, n):
+        sess_b.submit(evs[k], frs[k])
+    got += sess_b.run()
+
+    assert [r.seq for r in got] == [r.seq for r in ref] == list(range(n))
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a.result.pwm, b.result.pwm)
+        np.testing.assert_array_equal(a.result.logits, b.result.logits)
+        assert a.result.energy_mj == b.result.energy_mj
+
+
+def test_fusion_submit_is_atomic_on_bad_window(cfg, params, tcfg,
+                                               tparams):
+    """A rejected tick (one bad window) queues NOTHING: the wings stay
+    in lockstep and the next good tick pairs correctly."""
+    eng = _hetero_engine(cfg, params, tcfg, tparams, max_streams=1)
+    sess = FusionSession(eng)
+    rng = np.random.default_rng(240)
+    bad_frame = fr.synthetic_gesture_frames(rng, 0, height=16, width=16)
+    with pytest.raises(ValueError, match="geometry"):
+        sess.submit(_windows(1, seed=241)[0], bad_frame)
+    assert sess.event.queued == 0 and sess.frame.queued == 0
+    assert sess.submit(_windows(1, seed=242)[0],
+                       _frames(1, seed=243)[0]) == 0
+    assert len(sess.run()) == 1
+
+
+def test_fusion_restore_rejects_mismatched_rule(cfg, params, tcfg,
+                                                tparams):
+    """Restoring a custom-rule session without re-supplying the rule
+    must raise, not silently fuse with the 0.5/0.5 default."""
+    sess = FusionSession(_hetero_engine(cfg, params, tcfg, tparams,
+                                        max_streams=1),
+                         fusion=late_logit_fusion(0.9, 0.1))
+    sess.submit(_windows(1, seed=250)[0], _frames(1, seed=251)[0])
+    sess.run()
+    ck = sess.checkpoint()
+    fresh = _hetero_engine(cfg, params, tcfg, tparams, max_streams=1)
+    with pytest.raises(ValueError, match="rules are code"):
+        FusionSession.restore(fresh, ck)
+    assert FusionSession.restore(
+        fresh, ck, fusion=late_logit_fusion(0.9, 0.1)
+    ).session_id == sess.session_id
+
+
+def test_fusion_init_leak_free_on_bad_passed_handle(cfg, params, tcfg,
+                                                    tparams):
+    """A rejected construction (passed handle of the wrong modality)
+    must not leave an auto-opened other-wing stream behind."""
+    eng = _hetero_engine(cfg, params, tcfg, tparams, max_streams=1)
+    wrong = eng.open(modality="frame", stream_id="not-an-event")
+    with pytest.raises(ValueError, match="event_handle"):
+        FusionSession(eng, session_id="s", event_handle=wrong)
+    assert set(eng.handles) == {"not-an-event"}
+    FusionSession(eng, session_id="s")        # same id now constructs
+
+
+def test_restore_validates_queued_windows(cfg, params, tcfg, tparams):
+    """Checkpointed windows an engine cannot serve reject the restore
+    up front (validate-before-queue-state), not mid-dispatch."""
+    fr_eng = StreamEngine(engines=[FrameTCNEngine(tparams, tcfg)],
+                          max_streams=1)
+    h = fr_eng.open(stream_id="cam")
+    h.submit(_frames(1, seed=260)[0])         # queued, unserved
+    ck = h.checkpoint()
+    small = TCNConfig(height=16, width=16, conv1_features=4,
+                      conv2_features=8, hidden=32, num_classes=11)
+    other = StreamEngine(
+        engines=[FrameTCNEngine(init_tcn(jax.random.PRNGKey(3), small),
+                                small)], max_streams=1)
+    with pytest.raises(ValueError, match="geometry"):
+        other.restore(ck)
+    assert other.handles == {}                # failed restore cleaned up
+    # ...and the rejected restore rolled back the duration it latched
+    # while validating, leaving the engine exactly as it found it.
+    assert other.engines["frame"].duration_us is None
+    fr_eng.run()
+
+
+def test_fusion_restore_cleans_up_on_frame_wing_failure(cfg, params,
+                                                        tcfg, tparams):
+    """If the frame wing of a session checkpoint cannot restore, the
+    already-restored event wing must not be left stranded on the target
+    engine."""
+    sess = FusionSession(_hetero_engine(cfg, params, tcfg, tparams,
+                                        max_streams=1),
+                         session_id="m", stateful=True)
+    sess.submit(_windows(1, seed=280)[0], _frames(1, seed=281)[0])
+    sess.run()
+    ck = sess.checkpoint()
+    small = TCNConfig(height=16, width=16, conv1_features=4,
+                      conv2_features=8, hidden=32, num_classes=11)
+    target = StreamEngine(
+        engines=[BatchedClosedLoop(params, cfg),
+                 FrameTCNEngine(init_tcn(jax.random.PRNGKey(3), small),
+                                small, duration_us=150_000)],
+        max_streams=1)
+    with pytest.raises(ValueError, match="duration_us"):
+        FusionSession.restore(target, ck)
+    assert target.handles == {}               # nothing stranded
+    # A compatible target then restores the same payload cleanly.
+    ok = FusionSession.restore(
+        _hetero_engine(cfg, params, tcfg, tparams, max_streams=1), ck)
+    assert ok.session_id == "m"
+
+
+def test_checkpoint_migrates_default_deadline(cfg, params):
+    """A handle's default deadline survives migration: post-restore
+    submits keep the stream's scheduling urgency."""
+    eng = StreamEngine(params, cfg, max_streams=1)
+    h = eng.open(stream_id="s", deadline=5.0)
+    h.submit(_windows(1, seed=270)[0])
+    eng.run()
+    ck = h.checkpoint()
+    assert ck.deadline == 5.0
+    eng_b = StreamEngine(params, cfg, max_streams=1)
+    h_b = eng_b.restore(ck)
+    assert h_b.deadline == 5.0
+    h_b.submit(_windows(1, seed=271)[0])
+    lane = eng_b._lanes["event"]
+    assert [q.deadline for q in lane.queues["s"]] == [5.0]
+    eng_b.run()
+
+
+def test_fusion_desync_detected_before_queueing(cfg, params, tcfg,
+                                                tparams):
+    eng = _hetero_engine(cfg, params, tcfg, tparams, max_streams=1)
+    sess = FusionSession(eng)
+    # A rogue submit on one wing's handle desynchronizes the pairing;
+    # the next session submit detects it BEFORE queueing anything, so
+    # the desync cannot deepen into mispaired ticks.
+    sess.event.submit(_windows(1, seed=230)[0])
+    with pytest.raises(RuntimeError, match="desynchronized"):
+        sess.submit(_windows(1, seed=231)[0], _frames(1, seed=232)[0])
+    assert sess.event.queued == 1 and sess.frame.queued == 0
+    eng.run()

@@ -25,6 +25,12 @@ same pattern: absolute fused ticks/s against the baseline, with the
 runner-independent fused-vs-separate ratio (one engine serving both
 wings vs two single-wing engines, same machine) as the fallback.
 
+The ``sharded_rows`` cells (slot-axis-sharded serving at each device
+count) are gated per device count: absolute windows/s against the
+baseline with the runner-independent sharded-vs-single-device ratio as
+the fallback -- forced host devices time-slice one CPU, so the ratio
+measures sharded-step *overhead* (it must not collapse), not scaling.
+
 Usage (CI runs exactly this, after ``benchmarks.kernel_bench``):
 
     PYTHONPATH=src python -m benchmarks.check_regression
@@ -155,6 +161,31 @@ def main(argv=None) -> int:
             float(fbase["fused_over_separate"]),
             float(ffresh["fused_over_separate"]),
             "fused-vs-separate ratio", args.tolerance)
+
+    # The sharded serving cells: one row per forced-host-device count,
+    # keyed on "devices" rather than "batch_size". Same transition
+    # policy as the other cells (missing fresh FAIL, missing baseline
+    # WARN); each device count present in both artifacts is gated on
+    # absolute windows/s with the sharded-over-single ratio (both sides
+    # off the same machine) as the runner-independent fallback.
+    if "sharded_rows" not in fresh_doc:
+        print("FAIL: fresh artifact has no sharded_rows cell")
+        ok = False
+    elif "sharded_rows" not in base_doc:
+        print("WARN: baseline has no sharded_rows cell (predates "
+              "slot-axis sharding); skipping the sharded gate -- "
+              "refresh the baseline")
+    else:
+        base_by_d = {r["devices"]: r for r in base_doc["sharded_rows"]}
+        fresh_by_d = {r["devices"]: r for r in fresh_doc["sharded_rows"]}
+        for d in sorted(set(base_by_d) & set(fresh_by_d)):
+            ok &= _gate(
+                f"sharded windows/s @ D={d}",
+                float(base_by_d[d]["windows_per_s"]),
+                float(fresh_by_d[d]["windows_per_s"]),
+                float(base_by_d[d]["sharded_over_single"]),
+                float(fresh_by_d[d]["sharded_over_single"]),
+                "sharded-over-single ratio", args.tolerance)
 
     return 0 if ok else 1
 

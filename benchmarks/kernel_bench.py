@@ -26,14 +26,15 @@ enough to gate on (see ``benchmarks/check_regression.py``).
 from __future__ import annotations
 
 import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (FrameTCNEngine, SNNConfig, TCNConfig, init_snn,
-                        init_tcn)
+from repro.core import (EngineConfig, FrameTCNEngine, SNNConfig, TCNConfig,
+                        init_snn, init_tcn)
 from repro.core import events as ev
 from repro.core import frames as fr
 from repro.core.lif import LIFParams
@@ -159,8 +160,9 @@ def stream_rows(batch_sizes=(1, 2, 4, 8), windows_per_stream=16,
         return measure
 
     def batched_cell(b):
-        eng = StreamEngine(params, cfg, max_streams=b, fuse_fc=fuse_fc,
-                           pipeline_depth=pipeline_depth)
+        eng = StreamEngine(params, cfg, EngineConfig(
+            max_streams=b, fuse_fc=fuse_fc,
+            pipeline_depth=pipeline_depth))
         handles = {s: eng.open(stream_id=s) for s in range(b)}
 
         def submit_all():
@@ -248,8 +250,9 @@ def stateful_rows(batch_sizes=(1, 4, 8), windows_per_stream=16,
     }
 
     def cell(b, stateful):
-        eng = StreamEngine(params, cfg, max_streams=b, fuse_fc=fuse_fc,
-                           pipeline_depth=pipeline_depth)
+        eng = StreamEngine(params, cfg, EngineConfig(
+            max_streams=b, fuse_fc=fuse_fc,
+            pipeline_depth=pipeline_depth))
         handles = {s: eng.open(stream_id=s, stateful=stateful)
                    for s in range(b)}
 
@@ -335,7 +338,7 @@ def fusion_rows(sessions=2, ticks_per_session=8, repeats=REPEATS,
         eng = StreamEngine(
             engines=[BatchedClosedLoop(snn_params, scfg),
                      FrameTCNEngine(tcn_params, tcfg)],
-            max_streams=sessions)
+            config=EngineConfig(max_streams=sessions))
         sess = {s: FusionSession(eng, session_id=f"head{s}")
                 for s in range(sessions)}
 
@@ -368,11 +371,12 @@ def fusion_rows(sessions=2, ticks_per_session=8, repeats=REPEATS,
         return measure
 
     def separate_cell():
-        ev_eng = StreamEngine(engines=[BatchedClosedLoop(snn_params,
-                                                         scfg)],
-                              max_streams=sessions)
-        fr_eng = StreamEngine(engines=[FrameTCNEngine(tcn_params, tcfg)],
-                              max_streams=sessions)
+        ev_eng = StreamEngine(
+            engines=[BatchedClosedLoop(snn_params, scfg)],
+            config=EngineConfig(max_streams=sessions))
+        fr_eng = StreamEngine(
+            engines=[FrameTCNEngine(tcn_params, tcfg)],
+            config=EngineConfig(max_streams=sessions))
         ev_h = {s: ev_eng.open(stream_id=f"dvs{s}")
                 for s in range(sessions)}
         fr_h = {s: fr_eng.open(stream_id=f"cam{s}")
@@ -450,7 +454,8 @@ def hetero_rows(slots=4, windows_per_stream=8,
                for s in range(slots)}
 
     def run(engine_sets, submits):
-        eng = StreamEngine(engines=engine_sets, max_streams=slots)
+        eng = StreamEngine(engines=engine_sets,
+                           config=EngineConfig(max_streams=slots))
         handles = {sid: eng.open(modality=modality, stream_id=sid)
                    for sid, modality, _ in submits}
 
@@ -496,10 +501,117 @@ def hetero_rows(slots=4, windows_per_stream=8,
     return rows
 
 
+# Self-contained child program for one sharded_rows cell: serve the
+# standard stream workload on a mesh over every forced host device and
+# print the measured windows/s as JSON. Runs in a SUBPROCESS because
+# device count is fixed at jax init by XLA_FLAGS.
+_SHARDED_CELL = """
+import json, time
+import numpy as np, jax
+from repro.core import EngineConfig, SNNConfig, init_snn
+from repro.core import events as ev
+from repro.serving import StreamEngine
+from repro.distributed import make_mesh
+
+devices, slots, wps_count, repeats = {devices}, {slots}, {wpstream}, {repeats}
+cfg = SNNConfig(height=32, width=32, time_bins=8, conv1_features=4,
+                conv2_features=8, hidden=32, num_classes=11)
+params = init_snn(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+windows = {{s: [ev.synthetic_gesture_events(rng, (s + k) % 11,
+                                            mean_events=3000,
+                                            height=32, width=32)
+                for k in range(wps_count)]
+            for s in range(slots)}}
+mesh = make_mesh(devices) if devices else None
+eng = StreamEngine(params, cfg, EngineConfig(
+    max_streams=slots, fuse_fc=True, pipeline_depth=1, mesh=mesh))
+handles = {{s: eng.open(stream_id=s, stateful=True)
+            for s in range(slots)}}
+
+def submit_all():
+    for s in range(slots):
+        for w in windows[s]:
+            handles[s].submit(w)
+
+submit_all()
+eng.run()                               # warm-up: compile
+samples = []
+for _ in range(repeats):
+    submit_all()
+    t0 = time.perf_counter()
+    n = len(eng.run())
+    samples.append(n / (time.perf_counter() - t0))
+print(json.dumps({{"devices": devices,
+                   "windows_per_s": float(np.median(samples))}}))
+"""
+
+
+def sharded_rows(device_counts=(1, 2, 4), slots=8, windows_per_stream=8,
+                 repeats=REPEATS, out_json="BENCH_stream.json"):
+    """Sharded serving throughput (windows/s) vs device count at B=8.
+
+    Each cell is a fresh subprocess forcing ``device_counts[i]`` host
+    devices (``XLA_FLAGS=--xla_force_host_platform_device_count``) and
+    serving the standard stateful pipelined workload with the slot axis
+    sharded over ``make_mesh(d)``; ``devices=1`` is the baseline mesh.
+
+    CAVEAT (recorded in the artifact): forced host devices time-slice
+    ONE physical CPU, so windows/s does not scale with d here -- the
+    cell measures the sharded step's overhead (it must stay within tol
+    of single-device), while real slot-axis scaling needs real devices.
+    The regression gate holds each ``sharded_over_single`` ratio.
+    """
+    import subprocess
+    import sys
+
+    results = {}
+    for d in device_counts:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={d}"
+        code = _SHARDED_CELL.format(devices=d, slots=slots,
+                                    wpstream=windows_per_stream,
+                                    repeats=repeats)
+        out = subprocess.run([sys.executable, "-c", code],
+                             capture_output=True, text=True, env=env,
+                             timeout=900)
+        if out.returncode != 0:
+            raise RuntimeError(
+                f"sharded cell d={d} failed:\n{out.stderr[-2000:]}")
+        results[d] = json.loads(out.stdout.strip().splitlines()[-1])
+
+    base_wps = results[min(device_counts)]["windows_per_s"]
+    rows, artifact = [], []
+    for d in device_counts:
+        wps = results[d]["windows_per_s"]
+        ratio = wps / base_wps
+        rows.append((f"stream_sharded_D{d}", 1e6 / wps,
+                     f"wps={wps:.1f};sharded_over_single={ratio:.3f};"
+                     f"forced_host_devices"))
+        artifact.append({"devices": d, "batch_size": slots,
+                         "windows_per_stream": windows_per_stream,
+                         "windows_per_s": wps,
+                         "sharded_over_single": ratio})
+    if out_json:
+        try:
+            with open(out_json) as f:
+                doc = json.load(f)
+        except FileNotFoundError:
+            doc = {"benchmark": "stream_closed_loop"}
+        doc["sharded_rows"] = artifact
+        doc["sharded_caveat"] = (
+            "forced host devices share one physical CPU: windows/s "
+            "measures sharded-step overhead, not slot-axis scaling")
+        with open(out_json, "w") as f:
+            json.dump(doc, f, indent=2)
+    return rows
+
+
 def main():
     for name, us, derived in (lif_rows() + ternary_rows() + fc_fusion_rows()
                               + stream_rows() + stateful_rows()
-                              + fusion_rows() + hetero_rows()):
+                              + fusion_rows() + hetero_rows()
+                              + sharded_rows()):
         print(f"{name},{us:.1f},{derived}")
 
 

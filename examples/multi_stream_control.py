@@ -28,9 +28,10 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import init_snn
+from repro.core import EngineConfig, init_snn
 from repro.core import events as ev
 from repro.core.pipeline import ClosedLoopPipeline
+from repro.distributed import make_mesh
 from repro.serving import StreamEngine
 
 NUM_STREAMS = 6          # sensors
@@ -52,7 +53,11 @@ def main():
         for s in range(NUM_STREAMS)
     }
 
-    engine = StreamEngine(params, cfg, max_streams=SLOTS)
+    # One EngineConfig is the whole construction surface; mesh=make_mesh()
+    # shards the slot axis over every local device (a 1-device mesh -- the
+    # CPU default -- is served bitwise-identically to no mesh at all).
+    engine = StreamEngine(params, cfg,
+                          EngineConfig(max_streams=SLOTS, mesh=make_mesh()))
     # One handle per sensor: the session API latches modality (implicit
     # here -- single engine) and statefulness at open.
     handles = {sid: engine.open(stream_id=sid) for sid in workload}

@@ -18,9 +18,11 @@ Submodules:
               the single-window ClosedLoopPipeline wrapper
   energy   -- calibrated Kraken power/latency model (Tables I & III event
               wing; modelled CUTIE frame wing)
-  _api     -- one-shot deprecation warnings for the legacy call forms
-              superseded by the serving session-handle API
+  _api     -- EngineConfig (the unified engine-construction surface) and
+              one-shot deprecation warnings for the legacy call forms
+              superseded by the session-handle / config APIs
 """
+from repro.core._api import EngineConfig
 from repro.core.lif import LIFParams, lif_scan_reference, lif_step, spike_surrogate
 from repro.core.snn import (SNNConfig, SNN_STATE_LAYERS, init_snn,
                             snn_apply, snn_init_state, snn_logits, snn_loss)
@@ -35,6 +37,7 @@ from repro.core.tcn import TCNConfig, init_tcn, pack_tcn, tcn_apply, tcn_layer_m
 from repro.core.engine import FrameTCNEngine, InferenceEngine
 
 __all__ = [
+    "EngineConfig",
     "LIFParams", "lif_scan_reference", "lif_step", "spike_surrogate",
     "SNNConfig", "SNN_STATE_LAYERS", "init_snn", "snn_apply",
     "snn_init_state", "snn_logits", "snn_loss",

@@ -1,20 +1,84 @@
-"""One-shot API deprecation warnings with internal suppression.
+"""The unified engine-construction surface + one-shot API deprecations.
 
-The session-handle redesign keeps every legacy call form working --
-``StreamEngine.submit(stream_id, ...)`` and the engines' stateless
-``infer(batch)`` -- but each now announces its replacement exactly once
-per owning instance via :class:`DeprecationWarning`. The serving stack
-itself still drives the legacy forms internally (the submit shim, the
-stateless lane fast path, the B=1 ``ClosedLoopPipeline`` wrapper); those
-calls are wrapped in :func:`suppress_api_deprecations` so only *user*
-code sees the warning.
+:class:`EngineConfig` is the one construction surface for the serving
+engines. ``StreamEngine`` construction accreted keyword arguments across
+PRs 1-6 (``max_streams``, ``duration_us``, ``policy``/``fair_quantum``,
+``fuse_fc``, ``pipeline_depth``, now ``mesh``); they are all fields of
+this single frozen dataclass, passed as ``StreamEngine(params, cfg,
+config)`` / ``StreamEngine(engines=..., config=config)`` and forwarded
+to the wing engines via ``BatchedClosedLoop.from_config`` /
+``FrameTCNEngine.from_config``. The legacy kwarg form still works as a
+shim (bitwise-identical engines) that announces the replacement once.
+
+Deprecation machinery: the session-handle redesign keeps every legacy
+call form working -- ``StreamEngine.submit(stream_id, ...)``, the
+engines' stateless ``infer(batch)``, and now kwarg construction -- but
+each announces its replacement exactly once per owning instance via
+:class:`DeprecationWarning`. The serving stack itself still drives the
+legacy forms internally (the submit shim, the stateless lane fast path,
+the B=1 ``ClosedLoopPipeline`` wrapper); those calls are wrapped in
+:func:`suppress_api_deprecations` so only *user* code sees the warning.
 """
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import warnings
+from typing import Any, Mapping, Optional, Union
 
-__all__ = ["suppress_api_deprecations", "warn_deprecated_call"]
+__all__ = ["EngineConfig", "suppress_api_deprecations",
+           "warn_deprecated_call"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Everything that shapes a serving engine, in one frozen value.
+
+    Fields (each previously its own ``StreamEngine`` kwarg):
+
+      * ``max_streams`` -- batch slots per engine lane (or a
+        ``{modality: count}`` mapping). With a ``mesh``, every lane's
+        slot count must divide by the mesh's slot-axis size.
+      * ``duration_us`` -- pin the one-bin-width-per-engine contract up
+        front; ``None`` latches each engine's first submitted duration.
+      * ``policy`` / ``fair_quantum`` -- slot assignment: a
+        ``SlotPolicy`` instance, or just a quantum for the default
+        ``FairQuantumPolicy`` (mutually exclusive, as before).
+      * ``pipeline_depth`` -- ``>= 1`` dispatches steps asynchronously
+        and returns results ``pipeline_depth`` steps late (bitwise
+        order/value parity with the synchronous engine).
+      * ``fuse_fc`` -- route the event wing's fc1/fc2 through the fused
+        synapse+LIF Pallas kernel.
+      * ``window_ms`` -- the control-tick window length for the
+        real-time accounting.
+      * ``mesh`` -- a :class:`jax.sharding.Mesh` (see
+        :func:`repro.distributed.make_mesh`): the engines shard their
+        slot axis over the mesh's data axis, one collective-free jit'd
+        step per lane across all devices, bitwise-identical to the
+        single-device engine.
+
+    Frozen: a config is a value, shareable between engines and safe to
+    put in tests' parametrize tables. ``replace`` derives variants
+    (``dataclasses.replace(cfg, pipeline_depth=2)``).
+    """
+
+    max_streams: Union[int, Mapping[str, int]] = 8
+    duration_us: Optional[int] = None
+    policy: Optional[Any] = None           # SlotPolicy (kept Any: no
+    fair_quantum: Optional[int] = None     # serving import from _api)
+    pipeline_depth: int = 0
+    fuse_fc: bool = False
+    window_ms: float = 300.0
+    mesh: Optional[Any] = None             # jax.sharding.Mesh
+
+    def __post_init__(self):
+        if self.pipeline_depth < 0:
+            raise ValueError(
+                f"pipeline_depth must be >= 0, got {self.pipeline_depth}")
+        if self.policy is not None and self.fair_quantum is not None:
+            raise ValueError(
+                "fair_quantum configures the DEFAULT policy only; set "
+                "the quantum on your policy instance instead")
 
 _suppressed = 0
 

@@ -85,10 +85,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import frames as fr
-from repro.core._api import suppress_api_deprecations, warn_deprecated_call
+from repro.core._api import (EngineConfig, suppress_api_deprecations,
+                             warn_deprecated_call)
 from repro.core.energy import KrakenModel
-from repro.core.pipeline import (ClosedLoopResult, export_state_slot,
-                                 import_state_slot, pwm_from_logits)
+from repro.core.pipeline import (ClosedLoopResult, _check_slot_divisible,
+                                 _mesh_slot_info, _replicate_to_mesh,
+                                 export_state_slot, import_state_slot,
+                                 pwm_from_logits)
 from repro.core.tcn import TCNConfig, pack_tcn, tcn_apply, tcn_layer_macs
 
 __all__ = ["InferenceEngine", "FrameTCNEngine"]
@@ -149,6 +152,7 @@ class FrameTCNEngine:
         duration_us: Optional[int] = None,
         window_ms: float = 300.0,
         prepacked: bool = False,
+        mesh=None,
     ):
         self.cfg = cfg
         self.packed = params if prepacked else pack_tcn(params)
@@ -157,8 +161,41 @@ class FrameTCNEngine:
         self.window_ms = window_ms
         self.layer_macs = tcn_layer_macs(cfg)
         self.total_macs = float(sum(self.layer_macs))
+        self.mesh = None
         # Explicit executable cache: shape_key -> AOT-compiled callable.
         self._exe: Dict[Tuple[int, ...], Callable] = {}
+        if mesh is not None:
+            self.attach_mesh(mesh)
+
+    @classmethod
+    def from_config(cls, params, cfg: TCNConfig, config: EngineConfig, *,
+                    model: Optional[KrakenModel] = None,
+                    prepacked: bool = False):
+        """Construct from the unified :class:`EngineConfig` surface.
+        ``fuse_fc`` and the serving-layer fields do not apply to the
+        frame wing and are ignored."""
+        return cls(params, cfg, model=model, prepacked=prepacked,
+                   duration_us=config.duration_us,
+                   window_ms=config.window_ms, mesh=config.mesh)
+
+    def attach_mesh(self, mesh) -> None:
+        """Shard the slot axis over ``mesh``; same contract as
+        :meth:`BatchedClosedLoop.attach_mesh` (idempotent for the same
+        mesh, errors on a different one or after compilation). The
+        packed ternary weights are pinned replicated."""
+        if mesh is None or mesh == self.mesh:
+            return
+        if self.mesh is not None:
+            raise ValueError(
+                "engine is already attached to a different mesh; one "
+                "engine serves one mesh for its whole lifetime")
+        if self._exe:
+            raise RuntimeError(
+                "attach_mesh after executables were compiled: attach the "
+                "mesh at construction (EngineConfig(mesh=...)) or before "
+                "the first infer/warmup call")
+        self.mesh = mesh
+        self.packed = _replicate_to_mesh(self.packed, mesh)
 
     # -- protocol --------------------------------------------------------
 
@@ -207,10 +244,32 @@ class FrameTCNEngine:
                 return (jnp.argmax(logits, -1), pwm_from_logits(logits),
                         logits, out["activity_per_stream"])
 
-            px_abs = jax.ShapeDtypeStruct((b, h, w, 1), jnp.float32)
+            px_sh = pk_sh = None
+            if self.mesh is not None:
+                # Dense frames shard the same way as the event wing:
+                # pixels split on the slot axis, packed weights
+                # replicated, each device classifying its own rows
+                # (tcn_apply is row-independent, so shards are bitwise
+                # equal to the full batch).
+                from jax.experimental.shard_map import shard_map
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                _check_slot_divisible(b, self.mesh, "sharded-engine")
+                ax, _ = _mesh_slot_info(self.mesh)
+                run = shard_map(
+                    run, mesh=self.mesh,
+                    in_specs=(P(), P(ax, None, None, None)),
+                    out_specs=(P(ax), P(ax, None), P(ax, None),
+                               {k: P(ax) for k in
+                                ("conv1", "conv2", "fc1", "fc2")}),
+                    check_rep=False)
+                px_sh = NamedSharding(self.mesh, P(ax, None, None, None))
+                pk_sh = NamedSharding(self.mesh, P())
+            px_abs = jax.ShapeDtypeStruct((b, h, w, 1), jnp.float32,
+                                          sharding=px_sh)
             pk_abs = jax.tree_util.tree_map(
                 lambda a: jax.ShapeDtypeStruct(jnp.shape(a),
-                                               jnp.asarray(a).dtype),
+                                               jnp.asarray(a).dtype,
+                                               sharding=pk_sh),
                 self.packed)
             exe = jax.jit(run).lower(pk_abs, px_abs).compile()
             self._exe[key] = exe
@@ -255,8 +314,13 @@ class FrameTCNEngine:
         empty pytree) returns ``(pending, state)`` -- the uniform
         stateful dispatch shape, carrying nothing."""
         exe = self._executable(self.shape_key(batch))
-        preds, pwm, logits, activity = exe(self.packed,
-                                           jnp.asarray(batch.pixels))
+        pixels = jnp.asarray(batch.pixels)
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            ax, _ = _mesh_slot_info(self.mesh)
+            pixels = jax.device_put(
+                pixels, NamedSharding(self.mesh, P(ax, None, None, None)))
+        preds, pwm, logits, activity = exe(self.packed, pixels)
         pending = (batch, preds, pwm, logits, activity)
         return pending if state is None else (pending, state)
 

@@ -44,7 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import events as ev
-from repro.core._api import suppress_api_deprecations, warn_deprecated_call
+from repro.core._api import (EngineConfig, suppress_api_deprecations,
+                             warn_deprecated_call)
 from repro.core.energy import KrakenModel, NOMINAL
 from repro.core.snn import SNNConfig, snn_apply, snn_init_state, snn_logits
 from repro.core.tiling import SNE_NEURON_CAPACITY, plan_network
@@ -73,6 +74,68 @@ def import_state_slot(state, slot: int, payload):
     migration-safe."""
     return jax.tree_util.tree_map(
         lambda a, p: a.at[slot].set(jnp.asarray(p, a.dtype)), state, payload)
+
+
+# ----------------------------------------------------------------------
+# Slot-axis sharding plumbing (shared by both engine wings).
+#
+# A mesh-attached engine runs ONE jit'd step over the whole device mesh
+# with the batch-slot axis partitioned along the mesh's data axis. The
+# mechanism is shard_map -- each device traces the same per-shard
+# computation over its (B/n, ...) rows -- NOT GSPMD auto-partitioning:
+# under GSPMD the voxelize scatter-add and the (T, B) -> (T*B) row
+# merges inside the SNN would compile to all-reduce / all-gather pairs.
+# shard_map makes collective-freedom structural (nothing in the step
+# mentions another shard), and because every per-stream op in the step
+# is row-independent (the PR 1 batch-size-invariance contract), each
+# shard's rows are bitwise identical to the same rows of a full-batch
+# single-device call.
+# ----------------------------------------------------------------------
+
+def _mesh_slot_info(mesh):
+    """(axis name, axis size) the engines shard slots over."""
+    from repro.distributed.mesh import slot_axis
+    ax = slot_axis(mesh)
+    return ax, dict(zip(mesh.axis_names, mesh.devices.shape))[ax]
+
+
+def _replicate_to_mesh(tree, mesh):
+    """Pin a pytree fully replicated on every mesh device (params)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.device_put(tree, NamedSharding(mesh, PartitionSpec()))
+
+
+def _slot_shard_to_mesh(tree, mesh):
+    """Pin a slot-major pytree with its leading axis over the slot axis."""
+    from repro.distributed.sharding import slot_shardings
+    return jax.device_put(tree, slot_shardings(mesh, tree))
+
+
+def _check_slot_divisible(batch_size: int, mesh, what: str) -> None:
+    ax, n = _mesh_slot_info(mesh)
+    if batch_size % n != 0:
+        raise ValueError(
+            f"{what} batch size {batch_size} does not divide over the "
+            f"mesh slot axis '{ax}' ({n} devices); size lanes/batches in "
+            f"multiples of the mesh size (EngineConfig.max_streams)")
+
+
+def _shard_wrap(run: Callable, mesh, state_tree) -> Callable:
+    """shard_map ``run`` over the slot axis: batch arrays and the
+    slot-major state split on their leading dim, params replicated,
+    every output slot-major. ``check_rep=False``: replicated params are
+    closed over per shard; nothing in the step crosses shards."""
+    from jax.experimental.shard_map import shard_map
+    from repro.distributed.sharding import slot_state_pspecs
+    from jax.sharding import PartitionSpec as P
+    ax, _ = _mesh_slot_info(mesh)
+    row = P(ax, None)
+    state_specs = slot_state_pspecs(state_tree, mesh)
+    in_specs = (P(), row, row, row, row, row, state_specs)
+    out_specs = (P(ax), row, row,
+                 {k: P(ax) for k in state_tree}, state_specs)
+    return shard_map(run, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
 
 
 def pwm_from_logits(logits: jnp.ndarray, num_channels: int = 4) -> jnp.ndarray:
@@ -198,9 +261,11 @@ class BatchedClosedLoop:
         window_ms: float = 300.0,
         duration_us: Optional[int] = None,
         fuse_fc: bool = False,
+        mesh=None,
     ):
         self.params = params
         self.cfg = cfg
+        self.mesh = None
         self.model = model or KrakenModel()
         self.window_ms = window_ms
         self.duration_us = duration_us
@@ -226,6 +291,50 @@ class BatchedClosedLoop:
         # Zero-state cache: stateless dispatches reuse one zero pytree per
         # batch size instead of re-allocating it every step.
         self._zero_state: Dict[int, Any] = {}
+        if mesh is not None:
+            self.attach_mesh(mesh)
+
+    @classmethod
+    def from_config(cls, params, cfg: SNNConfig, config: EngineConfig, *,
+                    model: Optional[KrakenModel] = None,
+                    lif_scan_fn: Optional[Callable] = None):
+        """Construct from the unified :class:`EngineConfig` surface (the
+        serving-irrelevant fields -- ``max_streams``, ``policy``,
+        ``fair_quantum``, ``pipeline_depth`` -- belong to the
+        ``StreamEngine`` layer and are ignored here)."""
+        return cls(params, cfg, model=model, lif_scan_fn=lif_scan_fn,
+                   window_ms=config.window_ms,
+                   duration_us=config.duration_us,
+                   fuse_fc=config.fuse_fc, mesh=config.mesh)
+
+    # -- Slot-axis sharding ----------------------------------------------
+
+    def attach_mesh(self, mesh) -> None:
+        """Shard this engine's slot axis over ``mesh``'s data axis.
+
+        Params are pinned replicated on every mesh device; from here on
+        every executable compiles as one shard_map'd step over the mesh
+        and every batch/state input is resharded slot-major on dispatch.
+        Must happen before any executable is compiled (single-device
+        executables bind unsharded layouts), and a second attach with a
+        *different* mesh is an error -- re-attaching the same mesh is a
+        no-op, which is what lets ``StreamEngine`` thread one mesh to
+        caller-provided engines idempotently.
+        """
+        if mesh is None or mesh == self.mesh:
+            return
+        if self.mesh is not None:
+            raise ValueError(
+                "engine is already attached to a different mesh; one "
+                "engine serves one mesh for its whole lifetime")
+        if self._exe:
+            raise RuntimeError(
+                "attach_mesh after executables were compiled: attach the "
+                "mesh at construction (EngineConfig(mesh=...)) or before "
+                "the first infer/warmup call")
+        self.mesh = mesh
+        self.params = _replicate_to_mesh(self.params, mesh)
+        self._zero_state.clear()    # rebuild slot-sharded on next use
 
     # -- InferenceEngine protocol ----------------------------------------
 
@@ -236,8 +345,19 @@ class BatchedClosedLoop:
         layer (see :func:`repro.core.snn.snn_init_state`). Zero membrane
         is the cold-start condition, so a window inferred from
         ``init_state`` is bitwise identical to a stateless call.
+
+        On a mesh-attached engine the state comes back slot-sharded when
+        ``batch_size`` divides over the slot axis; indivisible sizes
+        (e.g. the B=1 scratch state the checkpoint-restore splice uses)
+        stay plain host-side arrays -- they are only ever sliced and
+        spliced, never inferred.
         """
-        return snn_init_state(self.cfg, batch_size)
+        state = snn_init_state(self.cfg, batch_size)
+        if self.mesh is not None:
+            _, n = _mesh_slot_info(self.mesh)
+            if batch_size % n == 0:
+                state = _slot_shard_to_mesh(state, self.mesh)
+        return state
 
     def _zero_state_for(self, batch_size: int):
         st = self._zero_state.get(batch_size)
@@ -305,15 +425,42 @@ class BatchedClosedLoop:
         exe = self._exe.get(key)
         if exe is None:
             b, n_ev, duration_us = key
-            ev_i32 = jax.ShapeDtypeStruct((b, n_ev), jnp.int32)
-            ev_bool = jax.ShapeDtypeStruct((b, n_ev), jnp.bool_)
-            abstract = lambda tree: jax.tree_util.tree_map(
-                lambda a: jax.ShapeDtypeStruct(jnp.shape(a),
-                                               jnp.asarray(a).dtype),
-                tree)
-            exe = jax.jit(self._build_run(int(duration_us))).lower(
-                abstract(self.params), ev_i32, ev_i32, ev_i32, ev_i32,
-                ev_bool, abstract(self._zero_state_for(b))).compile()
+            run = self._build_run(int(duration_us))
+            shard = None
+            if self.mesh is not None:
+                from repro.distributed.sharding import slot_shardings
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                _check_slot_divisible(b, self.mesh, "sharded-engine")
+                run = _shard_wrap(run, self.mesh, self._zero_state_for(b))
+                shard = dict(
+                    params=NamedSharding(self.mesh, P()),
+                    row=NamedSharding(
+                        self.mesh,
+                        P(_mesh_slot_info(self.mesh)[0], None)),
+                    state=slot_shardings(self.mesh,
+                                         self._zero_state_for(b)))
+            row_sh = shard["row"] if shard else None
+            ev_i32 = jax.ShapeDtypeStruct((b, n_ev), jnp.int32,
+                                          sharding=row_sh)
+            ev_bool = jax.ShapeDtypeStruct((b, n_ev), jnp.bool_,
+                                           sharding=row_sh)
+
+            def abstract(tree, sh_tree=None):
+                one = lambda a, s=None: jax.ShapeDtypeStruct(
+                    jnp.shape(a), jnp.asarray(a).dtype, sharding=s)
+                if sh_tree is None:
+                    return jax.tree_util.tree_map(one, tree)
+                return jax.tree_util.tree_map(one, tree, sh_tree)
+
+            params_abs = abstract(
+                self.params,
+                jax.tree_util.tree_map(lambda _: shard["params"],
+                                       self.params) if shard else None)
+            state_abs = abstract(self._zero_state_for(b),
+                                 shard["state"] if shard else None)
+            exe = jax.jit(run).lower(
+                params_abs, ev_i32, ev_i32, ev_i32, ev_i32,
+                ev_bool, state_abs).compile()
             self._exe[key] = exe
         return exe
 
@@ -385,11 +532,24 @@ class BatchedClosedLoop:
         if stateless:
             state = self._zero_state_for(batch.batch_size)
         exe = self._executable(self.shape_key(batch))
+        arrs = (jnp.asarray(batch.x), jnp.asarray(batch.y),
+                jnp.asarray(batch.t), jnp.asarray(batch.p),
+                jnp.asarray(batch.valid))
+        if self.mesh is not None:
+            # Reshard inputs to what the executable was lowered for. For
+            # state chained from the previous dispatch this is a no-op
+            # (already slot-sharded); host-rebuilt states (slot
+            # reassignment, checkpoint splices) get scattered here --
+            # the ONLY cross-device movement on the serving path.
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.distributed.sharding import slot_shardings
+            row = NamedSharding(
+                self.mesh, P(_mesh_slot_info(self.mesh)[0], None))
+            arrs = jax.device_put(arrs, (row,) * 5)
+            state = jax.device_put(state,
+                                   slot_shardings(self.mesh, state))
         preds, pwm, logits, rates_ps, new_state = exe(
-            self.params, jnp.asarray(batch.x), jnp.asarray(batch.y),
-            jnp.asarray(batch.t), jnp.asarray(batch.p),
-            jnp.asarray(batch.valid), state,
-        )
+            self.params, *arrs, state)
         pending = (batch, preds, pwm, logits, rates_ps)
         return pending if stateless else (pending, new_state)
 

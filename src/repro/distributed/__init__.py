@@ -1,4 +1,8 @@
-"""Distribution: sharding rules (FSDP/TP/EP/CP), in-model annotations."""
+"""Distribution: mesh construction, sharding rules (FSDP/TP/EP/CP +
+the serving engines' slot axis), in-model annotations."""
+from repro.distributed.mesh import make_mesh, slot_axis
 from repro.distributed.sharding import (batch_pspecs, cache_pspecs,
-                                        opt_pspecs, param_pspecs, shardings)
+                                        opt_pspecs, param_pspecs, shardings,
+                                        slot_pspec, slot_shardings,
+                                        slot_state_pspecs)
 from repro.distributed.annotate import constrain, current_mesh

@@ -21,12 +21,14 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.distributed.mesh import slot_axis
 from repro.models.config import ModelConfig
 from repro.models.params import ParamDef
 
 __all__ = [
     "param_pspecs", "batch_pspecs", "cache_pspecs", "shardings",
     "batch_axes", "opt_pspecs",
+    "slot_pspec", "slot_state_pspecs", "slot_shardings",
 ]
 
 # Preferred mesh axis per logical axis, in priority order.
@@ -246,3 +248,40 @@ def shardings(mesh: Mesh, spec_tree: Any) -> Any:
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P))
+
+
+# ----------------------------------------------------------------------
+# Slot-axis rules: the serving engines' state/batch pytrees.
+#
+# The streaming engines (core/pipeline.BatchedClosedLoop, core/engine.
+# FrameTCNEngine) keep everything per-stream slot-major: batch buffers
+# and carried-state pytrees all lead with the batch-slot axis (PR 4's
+# layout, paid exactly so it could shard). The rule is therefore one
+# line -- leading axis over the mesh's data axis, everything else
+# replicated -- but it lives HERE, next to the model-param rules, so
+# there is a single place that says how a tensor maps onto a mesh.
+# ----------------------------------------------------------------------
+
+def slot_pspec(ndim: int, mesh: Optional[Mesh] = None,
+               axis: Optional[str] = None) -> P:
+    """The slot-major spec: leading (batch-slot) dim over the data axis,
+    every other dim replicated. ``axis`` overrides the axis name
+    (default: :func:`~repro.distributed.mesh.slot_axis` of ``mesh``,
+    or ``"data"`` when neither is given)."""
+    if axis is None:
+        axis = slot_axis(mesh) if mesh is not None else "data"
+    return P(axis, *([None] * (ndim - 1)))
+
+
+def slot_state_pspecs(state: Any, mesh: Optional[Mesh] = None,
+                      axis: Optional[str] = None) -> Any:
+    """PartitionSpec tree for a slot-major carried-state pytree (every
+    leaf is ``(B, ...)``; see ``InferenceEngine.init_state``)."""
+    return jax.tree.map(
+        lambda a: slot_pspec(np.ndim(a), mesh, axis), state)
+
+
+def slot_shardings(mesh: Mesh, state: Any,
+                   axis: Optional[str] = None) -> Any:
+    """NamedSharding tree for a slot-major state pytree on ``mesh``."""
+    return shardings(mesh, slot_state_pspecs(state, mesh, axis))

@@ -5,42 +5,29 @@ Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis only
 carries data parallelism (gradient all-reduce over DCN), FSDP and TP stay
 intra-pod (DESIGN.md).
 
-A FUNCTION, not a module constant: importing this module must not touch
-jax device state (the dry-run sets XLA_FLAGS before any jax init).
+Mesh construction itself is unified in
+:func:`repro.distributed.make_mesh` (one constructor for the launch
+stack, the sharded serving engine, examples, and benchmarks);
+``make_mesh_for`` remains as an alias of its explicit ``(shape, axes)``
+form. FUNCTIONS, not module constants: importing this module must not
+touch jax device state (the dry-run sets XLA_FLAGS before any jax init).
 """
 from __future__ import annotations
 
-import math
-
-import jax
-import numpy as np
 from jax.sharding import Mesh
 
-__all__ = ["make_production_mesh", "make_mesh_for"]
+from repro.distributed.mesh import make_mesh
+
+__all__ = ["make_production_mesh", "make_mesh_for", "make_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return make_mesh_for(shape, axes)
+    return make_mesh(shape, axes)
 
 
 def make_mesh_for(shape, axes) -> Mesh:
-    """jax.make_mesh over the first prod(shape) devices (the container
+    """Alias of :func:`repro.distributed.make_mesh` (the container
     exposes 512 host devices; the single-pod mesh uses 256 of them)."""
-    n = math.prod(shape)
-    devices = jax.devices()
-    if len(devices) < n:
-        raise RuntimeError(
-            f"need {n} devices, have {len(devices)}; the dry-run must set "
-            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
-            "any jax import")
-    axis_type = getattr(jax.sharding, "AxisType", None)
-    if axis_type is None:   # pre-AxisType jax: plain Mesh is equivalent
-        return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
-    auto = (axis_type.Auto,) * len(axes)
-    try:
-        return jax.make_mesh(shape, axes, axis_types=auto,
-                             devices=devices[:n])
-    except TypeError:  # older make_mesh without devices/axis_types kwarg
-        return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+    return make_mesh(shape, axes)

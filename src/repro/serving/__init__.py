@@ -8,6 +8,7 @@ from repro.serving.serve import ServeConfig, ServeStats, generate, quantize_for_
 from repro.serving.scheduler import BatchScheduler, Request
 from repro.serving.session import (FusionSession, StreamCheckpoint,
                                    late_logit_fusion)
-from repro.serving.stream import (DeadlinePolicy, FairQuantumPolicy,
-                                  SlotPolicy, StreamEngine, StreamHandle,
+from repro.serving.stream import (DeadlinePolicy, EngineConfig,
+                                  FairQuantumPolicy, SlotPolicy,
+                                  StreamEngine, StreamHandle,
                                   StreamResult, StreamStats)

@@ -103,15 +103,23 @@ from typing import (Any, Callable, Deque, Dict, Hashable, List, Mapping,
 import jax
 import jax.numpy as jnp
 
-from repro.core._api import suppress_api_deprecations, warn_deprecated_call
+from repro.core._api import (EngineConfig, suppress_api_deprecations,
+                             warn_deprecated_call)
 from repro.core.energy import KrakenModel
 from repro.core.engine import InferenceEngine
 from repro.core.pipeline import (BatchedClosedLoop, ClosedLoopResult,
-                                 export_state_slot, import_state_slot)
+                                 _check_slot_divisible, export_state_slot,
+                                 import_state_slot)
 from repro.core.snn import SNNConfig
 
 __all__ = ["StreamResult", "StreamStats", "StreamEngine", "StreamHandle",
-           "SlotPolicy", "FairQuantumPolicy", "DeadlinePolicy"]
+           "SlotPolicy", "FairQuantumPolicy", "DeadlinePolicy",
+           "EngineConfig"]
+
+# Distinguishes "kwarg not passed" from an explicit None in the legacy
+# construction shim (an explicitly-passed legacy kwarg must both warn
+# and win over the EngineConfig default).
+_UNSET_KW = object()
 
 
 @dataclasses.dataclass
@@ -685,60 +693,102 @@ class StreamEngine:
     handles -- bitwise-identical scheduling and results -- kept for
     pre-session callers (it warns once per engine).
 
-    Two construction forms:
+    Construction is unified behind :class:`~repro.core._api.
+    EngineConfig` -- everything that shapes the engine (slots, policy,
+    pipelining, kernel fusion, the device mesh) is one frozen value:
 
-      * ``StreamEngine(params, cfg, max_streams=8)`` -- the original
-        event-only form: builds one
-        :class:`~repro.core.pipeline.BatchedClosedLoop` internally
-        (backwards compatible with PR 1 callers, bitwise-identical
-        results and scheduling),
-      * ``StreamEngine(engines=[event_engine, frame_engine], ...)`` --
-        heterogeneous form: any set of
+      * ``StreamEngine(params, cfg, EngineConfig(max_streams=8))`` --
+        builds one :class:`~repro.core.pipeline.BatchedClosedLoop`
+        internally; a bare ``StreamEngine(params, cfg)`` uses the
+        default config,
+      * ``StreamEngine(engines=[event_engine, frame_engine],
+        config=...)`` -- heterogeneous form: any set of
         :class:`~repro.core.engine.InferenceEngine` objects, one lane
         (slot partition + jit'd call per step) per engine, keyed by each
         engine's declared ``modality``.
+
+    The pre-config kwarg spellings (``max_streams=``, ``policy=``,
+    ``pipeline_depth=``, ...) still work as a shim that builds the same
+    ``EngineConfig`` internally -- bitwise-identical engines -- and
+    announces the migration once per engine. ``config=`` and legacy
+    kwargs are mutually exclusive.
 
     ``max_streams`` is the slot count per engine (or a
     ``{modality: count}`` mapping). ``duration_us`` pins the
     one-bin-width-per-engine contract up front (validated on every
     submit); ``None`` latches each engine's first submitted duration.
+
+    ``config.mesh`` shards every lane's slot axis across the mesh's
+    data axis: one collective-free jit'd step per lane spanning all
+    devices, bitwise-identical to the single-device engine (see
+    ``repro.distributed.make_mesh``). Slot gathers, parking, and
+    reassignment stay host-side row splices exactly as on one device --
+    the resharding ``device_put`` inside each engine's dispatch is the
+    only cross-device movement. Every lane's slot count must divide by
+    the mesh's slot-axis size; caller-provided engines are attached via
+    their ``attach_mesh`` (an engine already pinned to a different mesh
+    is rejected).
     """
 
     def __init__(
         self,
         params=None,
         cfg: Optional[SNNConfig] = None,
+        config: Optional[EngineConfig] = None,
         *,
         engines: Union[None, InferenceEngine,
                        Sequence[InferenceEngine],
                        Mapping[str, InferenceEngine]] = None,
-        max_streams: Union[int, Mapping[str, int]] = 8,
-        fair_quantum: Optional[int] = None,
-        policy: Optional[SlotPolicy] = None,
-        duration_us: Optional[int] = None,
         model: Optional[KrakenModel] = None,
         lif_scan_fn: Optional[Callable] = None,
-        window_ms: float = 300.0,
-        fuse_fc: bool = False,
-        pipeline_depth: int = 0,
+        max_streams=_UNSET_KW,
+        fair_quantum=_UNSET_KW,
+        policy=_UNSET_KW,
+        duration_us=_UNSET_KW,
+        window_ms=_UNSET_KW,
+        fuse_fc=_UNSET_KW,
+        pipeline_depth=_UNSET_KW,
     ):
-        if pipeline_depth < 0:
-            raise ValueError(
-                f"pipeline_depth must be >= 0, got {pipeline_depth}")
-        self.pipeline_depth = pipeline_depth
+        legacy = {k: v for k, v in dict(
+            max_streams=max_streams, fair_quantum=fair_quantum,
+            policy=policy, duration_us=duration_us, window_ms=window_ms,
+            fuse_fc=fuse_fc, pipeline_depth=pipeline_depth,
+        ).items() if v is not _UNSET_KW}
+        if config is not None:
+            if not isinstance(config, EngineConfig):
+                raise TypeError(
+                    f"config must be an EngineConfig, got "
+                    f"{type(config).__name__}")
+            if legacy:
+                raise ValueError(
+                    f"config= and legacy construction kwargs are "
+                    f"mutually exclusive (got both config= and "
+                    f"{sorted(legacy)}); fold the kwargs into the "
+                    f"EngineConfig")
+        else:
+            if legacy:
+                warn_deprecated_call(
+                    self, "kwargs-construction",
+                    "StreamEngine construction kwargs (max_streams=, "
+                    "policy=, pipeline_depth=, ...) are a legacy "
+                    "spelling; pass one EngineConfig instead: "
+                    "StreamEngine(params, cfg, EngineConfig(...)) / "
+                    "StreamEngine(engines=..., config=EngineConfig(...))")
+            config = EngineConfig(**legacy)
+        self.config = config
+        self.mesh = config.mesh
+        self.pipeline_depth = config.pipeline_depth
         self._inflight: Deque[List[_InflightLane]] = deque()
         if engines is None:
             if params is None or cfg is None:
                 raise ValueError("give (params, cfg) or engines=")
-            engines = [BatchedClosedLoop(
-                params, cfg, model=model, lif_scan_fn=lif_scan_fn,
-                window_ms=window_ms, duration_us=duration_us,
-                fuse_fc=fuse_fc)]
+            engines = [BatchedClosedLoop.from_config(
+                params, cfg, config, model=model, lif_scan_fn=lif_scan_fn)]
         else:
             if params is not None or cfg is not None:
                 raise ValueError("(params, cfg) and engines= are "
                                  "mutually exclusive")
-            if fuse_fc:
+            if config.fuse_fc:
                 raise ValueError(
                     "fuse_fc configures the internally-built event "
                     "engine; with engines= pass "
@@ -748,24 +798,32 @@ class StreamEngine:
             elif not isinstance(engines, Sequence):
                 engines = [engines]
             for e in engines:
-                if duration_us is not None:
+                if config.duration_us is not None:
                     if e.duration_us is None:
-                        e.duration_us = duration_us
-                    elif e.duration_us != duration_us:
+                        e.duration_us = config.duration_us
+                    elif e.duration_us != config.duration_us:
                         raise ValueError(
                             f"engine '{e.modality}' duration "
                             f"{e.duration_us} != duration_us="
-                            f"{duration_us}")
+                            f"{config.duration_us}")
+                if config.mesh is not None:
+                    # Thread the serving mesh onto caller-provided
+                    # engines; attach_mesh is idempotent for the same
+                    # mesh and rejects a conflicting one.
+                    attach = getattr(e, "attach_mesh", None)
+                    if attach is None:
+                        raise ValueError(
+                            f"engine '{e.modality}' has no attach_mesh; "
+                            f"a sharded StreamEngine needs every lane "
+                            f"engine to support slot-axis sharding")
+                    attach(config.mesh)
 
-        if policy is not None and fair_quantum is not None:
-            raise ValueError(
-                "fair_quantum= configures the DEFAULT policy only; set "
-                "the quantum on your policy= instance instead")
-        self.policy = policy or FairQuantumPolicy(
-            4 if fair_quantum is None else fair_quantum)
+        self.policy = config.policy or FairQuantumPolicy(
+            4 if config.fair_quantum is None else config.fair_quantum)
         self._lanes: Dict[str, EngineLane] = {}
         if not engines:
             raise ValueError("engines= must name at least one engine")
+        max_streams = config.max_streams
         modalities = {e.modality for e in engines}
         if isinstance(max_streams, Mapping):
             unknown = set(max_streams) - modalities
@@ -781,6 +839,9 @@ class StreamEngine:
                      if isinstance(max_streams, Mapping) else max_streams)
             if slots < 1:
                 raise ValueError(f"max_streams must be >= 1, got {slots}")
+            if config.mesh is not None:
+                _check_slot_divisible(slots, config.mesh,
+                                      f"lane '{e.modality}'")
             self._lanes[e.modality] = EngineLane(
                 modality=e.modality, engine=e,
                 slots=[_FREE] * slots, slot_runs=[0] * slots,

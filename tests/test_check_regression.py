@@ -18,7 +18,7 @@ _SPEC.loader.exec_module(check_regression)
 
 def _doc(batched=600.0, looped=300.0, stateful=590.0, stateless=600.0,
          fused=200.0, separate=195.0, with_stateful=True,
-         with_fusion=True):
+         with_fusion=True, with_sharded=True, sharded=None):
     doc = {"rows": [{"batch_size": 4,
                      "batched_windows_per_s": batched,
                      "looped_windows_per_s": looped,
@@ -35,6 +35,14 @@ def _doc(batched=600.0, looped=300.0, stateful=590.0, stateless=600.0,
             "separate_ticks_per_s": separate,
             "fused_ticks_per_s": fused,
             "fused_over_separate": fused / separate}]
+    if with_sharded:
+        sharded = {1: 600.0, 2: 610.0, 4: 590.0} if sharded is None else sharded
+        single = sharded[min(sharded)]
+        doc["sharded_rows"] = [{
+            "devices": d, "batch_size": 8,
+            "windows_per_s": wps,
+            "sharded_over_single": wps / single}
+            for d, wps in sorted(sharded.items())]
     return doc
 
 
@@ -117,3 +125,39 @@ def test_fusion_slow_runner_passes_via_ratio(tmp_path):
     # Both fusion cells uniformly slower: ratio holds, gate passes.
     assert _run(tmp_path, _doc(),
                 _doc(fused=100.0, separate=98.0)) == 0
+
+
+# -- the sharded serving cells ------------------------------------------------
+
+def test_missing_fresh_sharded_cell_fails(tmp_path):
+    assert _run(tmp_path, _doc(), _doc(with_sharded=False)) == 1
+
+
+def test_old_baseline_without_sharded_warns_and_passes(tmp_path):
+    """A baseline predating sharded_rows must not block the transition:
+    the sharded gate is skipped with a warning, everything else gates."""
+    assert _run(tmp_path, _doc(with_sharded=False), _doc()) == 0
+    assert _run(tmp_path, _doc(with_sharded=False),
+                _doc(batched=300.0, looped=290.0)) == 1
+
+
+def test_sharded_regression_fails(tmp_path):
+    # The D=4 sharded step collapsed while single-device held: its
+    # absolute floor AND its sharded-over-single ratio both miss.
+    assert _run(tmp_path, _doc(),
+                _doc(sharded={1: 600.0, 2: 610.0, 4: 250.0})) == 1
+
+
+def test_sharded_slow_runner_passes_via_ratio(tmp_path):
+    # Every device count uniformly slower: each ratio holds.
+    assert _run(tmp_path, _doc(),
+                _doc(sharded={1: 300.0, 2: 305.0, 4: 295.0})) == 0
+
+
+def test_sharded_gates_only_common_device_counts(tmp_path):
+    # A fresh run measured at fewer device counts gates the overlap
+    # (baseline D=4 absent from fresh is not an error in either order).
+    assert _run(tmp_path, _doc(),
+                _doc(sharded={1: 600.0, 2: 610.0})) == 0
+    assert _run(tmp_path, _doc(sharded={1: 600.0, 2: 610.0}),
+                _doc()) == 0

@@ -1,0 +1,570 @@
+"""Slot-axis sharding across a device mesh + the EngineConfig surface.
+
+The tentpole contract: a ``StreamEngine`` built with
+``EngineConfig(mesh=make_mesh())`` runs one shard_map'd jit step per lane
+with the batch-slot axis partitioned over the mesh's data axis, and its
+results are BITWISE identical to the single-device engine -- sync and
+pipelined, stateful and stateless, at B in {4, 8}, over 1/2/4 devices --
+with zero collectives in the compiled step. Checkpoints cross device
+counts: a stream checkpointed on a 4-device engine restores bitwise on a
+1-device engine (and back).
+
+Multi-device cases run in subprocesses that set
+``--xla_force_host_platform_device_count`` themselves (the in-process
+suite must keep seeing the 1 real CPU device -- see conftest.py).
+
+Also here: the EngineConfig construction surface (config == legacy-kwarg
+shim bitwise; one-shot kwargs deprecation; mutual exclusion), the
+unified ``repro.distributed.make_mesh`` entrypoint, and the
+DeadlinePolicy bookkeeping-release regression (close() must drop the
+per-stream aging counters via ``policy.forget``).
+"""
+import os
+import pickle
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, SNNConfig, init_snn
+from repro.core import events as ev
+from repro.core.pipeline import BatchedClosedLoop
+from repro.distributed import (make_mesh, slot_axis, slot_pspec,
+                               slot_state_pspecs)
+from repro.serving import DeadlinePolicy, StreamEngine
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+# Shared subprocess preamble: the small test net, deterministic windows,
+# and a serve() that returns every (stream, seq) row's outputs.
+_PRELUDE = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import SNNConfig, init_snn, snn_apply
+from repro.core import events as ev
+from repro.core.pipeline import BatchedClosedLoop, pwm_from_logits
+from repro.core._api import EngineConfig
+from repro.serving import StreamEngine
+from repro.distributed import make_mesh
+
+CFG = SNNConfig(height=32, width=32, time_bins=4, conv1_features=4,
+                conv2_features=8, hidden=32, num_classes=11)
+PARAMS = init_snn(jax.random.PRNGKey(0), CFG)
+
+def windows(n, seed=0, mean_events=1500):
+    rng = np.random.default_rng(seed)
+    return [ev.synthetic_gesture_events(rng, i % 11, mean_events=mean_events,
+                                        height=32, width=32)
+            for i in range(n)]
+
+def streams_of(n_streams, n_windows, seed=0):
+    return {f"s{i}": windows(n_windows, seed=seed + i)
+            for i in range(n_streams)}
+
+def serve(eng, streams, stateful_ids=()):
+    hs = {sid: eng.open(stream_id=sid, stateful=sid in stateful_ids)
+          for sid in sorted(streams)}
+    n_windows = len(next(iter(streams.values())))
+    for k in range(n_windows):
+        for sid in sorted(streams):
+            hs[sid].submit(streams[sid][k])
+    rows = {}
+    for r in eng.run():
+        rows[(r.stream_id, r.seq)] = (np.asarray(r.result.label_pred),
+                                      np.asarray(r.result.pwm),
+                                      np.asarray(r.result.logits))
+    return rows
+
+def assert_rows_equal(a, b):
+    assert set(a) == set(b), (sorted(a), sorted(b))
+    for key in a:
+        for x, y in zip(a[key], b[key]):
+            np.testing.assert_array_equal(x, y, err_msg=str(key))
+"""
+
+
+def _run_sub(body: str, devices: int = 4) -> str:
+    """Run ``_PRELUDE + dedent(body)`` under N forced host devices.
+
+    The body is dedented SEPARATELY and concatenated at column 0 (an
+    f-string-embedded prelude would defeat textwrap.dedent and silently
+    swallow the body into the prelude's last function). Every body must
+    end by printing ``OK`` -- asserted here, so a subprocess that exits
+    0 without reaching its assertions can never pass vacuously.
+    """
+    code = _PRELUDE + "\n" + textwrap.dedent(body)
+    compile(code, "<sharded-test>", "exec")    # fail fast on bad compose
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout, (out.stdout, out.stderr[-1500:])
+    return out.stdout
+
+
+# ----------------------------------------------------------------------
+# Tentpole: sharded serving == single-device serving, bitwise.
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("devices", [1, 2, 4])
+@pytest.mark.parametrize("slots", [4, 8])
+def test_sharded_serving_bitwise_parity(devices, slots):
+    """Mesh-sharded StreamEngine == no-mesh StreamEngine, bitwise: sync
+    and pipelined, stateful and stateless streams interleaved, more
+    streams than slots (so slot parking/reassignment runs sharded)."""
+    _run_sub(f"""
+        SLOTS = {slots}
+        streams = streams_of(SLOTS + 2, 2, seed=11)
+        stateful = tuple(sorted(streams))[::2]
+        mesh = make_mesh({devices})
+        for depth in (0, 1):
+            base = StreamEngine(
+                PARAMS, CFG, EngineConfig(max_streams=SLOTS,
+                                          pipeline_depth=depth))
+            shard = StreamEngine(
+                PARAMS, CFG, EngineConfig(max_streams=SLOTS,
+                                          pipeline_depth=depth,
+                                          mesh=mesh))
+            assert_rows_equal(serve(base, streams, stateful),
+                              serve(shard, streams, stateful))
+        print("OK")
+    """, devices=devices)
+
+
+def test_sharded_step_is_collective_free_and_state_sharded():
+    """The compiled sharded step contains NO collectives (the shard_map
+    step is structurally per-shard), and the carried state it returns is
+    slot-sharded over the mesh -- both engine wings."""
+    out = _run_sub(f"""
+        from repro.core import FrameTCNEngine, TCNConfig, init_tcn
+        from repro.core import frames as fr
+        mesh = make_mesh(2)
+        eng = BatchedClosedLoop.from_config(
+            PARAMS, CFG, EngineConfig(duration_us=300000, mesh=mesh))
+        ws = windows(4, seed=3)
+        batch = eng.prepare(ws, batch_size=4)
+        _, state = eng.infer(batch, eng.init_state(4))
+        sh = state["fc1"].sharding
+        print("SPEC", getattr(sh, "spec", None))
+
+        tcfg = TCNConfig(height=32, width=32, conv1_features=4,
+                         conv2_features=8, hidden=32, num_classes=11)
+        feng = FrameTCNEngine.from_config(
+            init_tcn(jax.random.PRNGKey(1), tcfg), tcfg,
+            EngineConfig(duration_us=300000, mesh=mesh))
+        rng = np.random.default_rng(5)
+        frames = [fr.synthetic_gesture_frames(rng, i % 11, height=32,
+                                              width=32) for i in range(4)]
+        feng.infer_collect(feng.infer_dispatch(
+            feng.prepare(frames, batch_size=4)))
+
+        for wing in (eng, feng):
+            for exe in wing._exe.values():
+                txt = exe.as_text()
+                bad = [l for l in txt.splitlines()
+                       if "all-reduce" in l or "all-gather" in l
+                       or "all-to-all" in l or "collective-permute" in l]
+                assert not bad, bad[:3]
+        print("OK")
+    """, devices=2)
+    assert "OK" in out
+    assert "PartitionSpec('data',)" in out
+
+
+# ----------------------------------------------------------------------
+# Satellite 4: the key stateful/session parity suites over 1/2/4 devices.
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("devices", [1, 2, 4])
+def test_stateful_windows_match_uninterrupted_scan_sharded(devices):
+    """W windows served stateful on a SHARDED engine == one
+    uninterrupted scan over the concatenated event stream (the PR 4
+    contract, now parameterized over the device mesh)."""
+    _run_sub(f"""
+        W = 3
+        ws = windows(W, seed=21)
+        # Oracle: one uninterrupted scan over the concatenated stream.
+        d = ws[0].duration_us
+        vox = ev.voxelize(
+            jnp.asarray(np.concatenate([w.x for w in ws])),
+            jnp.asarray(np.concatenate([w.y for w in ws])),
+            jnp.asarray(np.concatenate(
+                [w.t + k * d for k, w in enumerate(ws)])),
+            jnp.asarray(np.concatenate([w.p for w in ws])),
+            duration_us=d * W, time_bins=CFG.time_bins * W,
+            height=CFG.height, width=CFG.width)[None]
+        out = snn_apply(PARAMS, vox, CFG, mode="layer_serial")
+        eng = StreamEngine(PARAMS, CFG,
+                           EngineConfig(max_streams=4,
+                                        mesh=make_mesh({devices})))
+        h = eng.open(stateful=True)
+        for w in ws:
+            h.submit(w)
+        t = CFG.time_bins
+        for r in eng.run():
+            logits = out["out_spikes"][:, r.seq * t:(r.seq + 1) * t]
+            logits = logits.mean(axis=1) * 10.0
+            np.testing.assert_array_equal(
+                r.result.label_pred, np.asarray(jnp.argmax(logits, -1)))
+            np.testing.assert_array_equal(
+                r.result.pwm, np.asarray(pwm_from_logits(logits)))
+        print("OK")
+    """, devices=devices)
+
+
+@pytest.mark.parametrize("devices", [1, 2, 4])
+def test_checkpoint_restore_parity_sharded(devices):
+    """checkpoint() mid-stream on a sharded engine and restore() into a
+    FRESH sharded engine: the continuation is bitwise identical to the
+    uninterrupted run (same device count; cross-count migration is the
+    test below)."""
+    _run_sub(f"""
+        ws = windows(4, seed=31)
+        cfg_s = EngineConfig(max_streams=4, mesh=make_mesh({devices}))
+        # Uninterrupted run.
+        ref = StreamEngine(PARAMS, CFG, cfg_s)
+        h = ref.open(stream_id="s", stateful=True)
+        for w in ws:
+            h.submit(w)
+        want = {{r.seq: np.asarray(r.result.logits) for r in ref.run()}}
+        # Interrupted at window 2: checkpoint, migrate, continue.
+        a = StreamEngine(PARAMS, CFG, cfg_s)
+        ha = a.open(stream_id="s", stateful=True)
+        ha.submit(ws[0]); ha.submit(ws[1])
+        got = {{r.seq: np.asarray(r.result.logits) for r in a.run()}}
+        ckpt = ha.checkpoint()
+        b = StreamEngine(PARAMS, CFG, cfg_s)
+        hb = b.open(stream_id="s", stateful=True).restore(ckpt)
+        hb.submit(ws[2]); hb.submit(ws[3])
+        got.update({{r.seq: np.asarray(r.result.logits) for r in b.run()}})
+        assert set(got) == set(want)
+        for k in want:
+            np.testing.assert_array_equal(got[k], want[k], err_msg=str(k))
+        print("OK")
+    """, devices=devices)
+
+
+@pytest.mark.parametrize("direction", ["4to1", "1to4"])
+def test_checkpoint_migrates_across_device_counts(direction, tmp_path):
+    """A checkpoint taken on an N-device sharded engine restores bitwise
+    on a 1-device engine (and back): exported carries are host numpy,
+    so the mesh layout never leaks into the checkpoint."""
+    src_dev, dst_dev = (4, 1) if direction == "4to1" else (1, 4)
+    ckpt_file = tmp_path / "ckpt.pkl"
+    # Process A (src_dev devices): serve 2 windows, checkpoint, and also
+    # record the expected continuation by serving windows 3/4 on an
+    # uninterrupted engine.
+    _run_sub(f"""
+        import pickle
+        ws = windows(4, seed=41)
+        mesh = make_mesh({src_dev})
+        ref = StreamEngine(PARAMS, CFG, EngineConfig(max_streams=4,
+                                                     mesh=mesh))
+        h = ref.open(stream_id="mig", stateful=True)
+        for w in ws:
+            h.submit(w)
+        want = {{r.seq: np.asarray(r.result.logits) for r in ref.run()}}
+        a = StreamEngine(PARAMS, CFG, EngineConfig(max_streams=4,
+                                                   mesh=mesh))
+        ha = a.open(stream_id="mig", stateful=True)
+        ha.submit(ws[0]); ha.submit(ws[1])
+        a.run()
+        ckpt = ha.checkpoint()
+        with open({str(ckpt_file)!r}, "wb") as f:
+            pickle.dump((ckpt, {{k: v for k, v in want.items()}}), f)
+        print("OK")
+    """, devices=src_dev)
+    # Process B (dst_dev devices): restore and continue; rows 2/3 must be
+    # bitwise equal to process A's uninterrupted run.
+    _run_sub(f"""
+        import pickle
+        with open({str(ckpt_file)!r}, "rb") as f:
+            ckpt, want = pickle.load(f)
+        ws = windows(4, seed=41)
+        eng = StreamEngine(
+            PARAMS, CFG,
+            EngineConfig(max_streams=4, mesh=make_mesh({dst_dev})))
+        h = eng.open(stream_id="mig", stateful=True).restore(ckpt)
+        h.submit(ws[2]); h.submit(ws[3])
+        got = {{r.seq: np.asarray(r.result.logits) for r in eng.run()}}
+        assert set(got) == {{2, 3}}, sorted(got)
+        for k in (2, 3):
+            np.testing.assert_array_equal(got[k], want[k], err_msg=str(k))
+        print("OK")
+    """, devices=dst_dev)
+
+
+def test_sharded_lane_slot_divisibility_enforced():
+    """Lane slot counts that do not divide over the mesh fail loudly at
+    construction (never a silent single-device fallback)."""
+    _run_sub(f"""
+        mesh = make_mesh(4)
+        try:
+            StreamEngine(PARAMS, CFG,
+                         EngineConfig(max_streams=6, mesh=mesh))
+        except ValueError as e:
+            assert "divide" in str(e), e
+        else:
+            raise AssertionError("indivisible lane accepted")
+        eng = BatchedClosedLoop.from_config(
+            PARAMS, CFG, EngineConfig(duration_us=300000, mesh=mesh))
+        try:
+            eng._executable((6, 64, 300000))
+        except ValueError as e:
+            assert "divide" in str(e), e
+        else:
+            raise AssertionError("indivisible batch accepted")
+        print("OK")
+    """, devices=4)
+
+
+def test_attach_mesh_rules():
+    """attach_mesh is idempotent for the same mesh, rejects a second
+    different mesh, and rejects attaching after compilation; engines=
+    construction threads the serving mesh onto caller engines."""
+    _run_sub(f"""
+        from jax.sharding import Mesh
+        mesh = make_mesh(2)
+        other = make_mesh((2,), ("x",))
+        eng = BatchedClosedLoop(PARAMS, CFG, duration_us=300000, mesh=mesh)
+        eng.attach_mesh(mesh)            # same mesh: no-op
+        try:
+            eng.attach_mesh(other)
+        except ValueError as e:
+            assert "different mesh" in str(e), e
+        else:
+            raise AssertionError("second mesh accepted")
+        eng2 = BatchedClosedLoop(PARAMS, CFG, duration_us=300000)
+        eng2._exe["poisoned"] = lambda: None
+        try:
+            eng2.attach_mesh(mesh)
+        except RuntimeError as e:
+            assert "compiled" in str(e), e
+        else:
+            raise AssertionError("post-compile attach accepted")
+        # engines= threads the mesh (idempotent with a pre-attached one).
+        pre = BatchedClosedLoop(PARAMS, CFG, duration_us=300000, mesh=mesh)
+        served = StreamEngine(engines=[pre],
+                              config=EngineConfig(max_streams=4,
+                                                  mesh=mesh))
+        assert served.mesh is mesh and pre.mesh is mesh
+        conflicted = BatchedClosedLoop(PARAMS, CFG, duration_us=300000,
+                                       mesh=other)
+        try:
+            StreamEngine(engines=[conflicted],
+                         config=EngineConfig(max_streams=4, mesh=mesh))
+        except ValueError as e:
+            assert "different mesh" in str(e), e
+        else:
+            raise AssertionError("mesh conflict accepted")
+        print("OK")
+    """, devices=2)
+
+
+def test_fusion_session_over_sharded_lanes():
+    """FusionSession (cross-modal event+frame fusion) over a sharded
+    heterogeneous engine == over the single-device engine, bitwise."""
+    _run_sub(f"""
+        from repro.core import FrameTCNEngine, TCNConfig, init_tcn
+        from repro.core import frames as fr
+        from repro.serving import FusionSession
+        tcfg = TCNConfig(height=32, width=32, conv1_features=4,
+                         conv2_features=8, hidden=32, num_classes=11)
+        tparams = init_tcn(jax.random.PRNGKey(1), tcfg)
+        rng = np.random.default_rng(7)
+        evs = windows(2, seed=8)
+        frs = [fr.synthetic_gesture_frames(rng, i % 11, height=32,
+                                           width=32) for i in range(2)]
+        def fused(mesh):
+            engines = [BatchedClosedLoop(PARAMS, CFG),
+                       FrameTCNEngine(tparams, tcfg)]
+            eng = StreamEngine(engines=engines,
+                               config=EngineConfig(max_streams=4,
+                                                   mesh=mesh))
+            fs = FusionSession(eng, stateful=True)
+            for e, f in zip(evs, frs):
+                fs.submit(e, f)
+            return [(r.seq, np.asarray(r.result.logits),
+                     np.asarray(r.result.pwm)) for r in fs.run()]
+        a = fused(None)
+        b = fused(make_mesh(4))
+        assert len(a) == len(b) == 2
+        for (sa, la, pa), (sb, lb, pb) in zip(a, b):
+            assert sa == sb
+            np.testing.assert_array_equal(la, lb)
+            np.testing.assert_array_equal(pa, pb)
+        print("OK")
+    """, devices=4)
+
+
+# ----------------------------------------------------------------------
+# Satellite 1: the EngineConfig construction surface (in-process,
+# 1 device -- the config semantics are mesh-independent).
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cfg():
+    return SNNConfig(height=32, width=32, time_bins=4, conv1_features=4,
+                     conv2_features=8, hidden=32, num_classes=11)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_snn(jax.random.PRNGKey(0), cfg)
+
+
+def _windows(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [ev.synthetic_gesture_events(rng, i % 11, mean_events=1500,
+                                        height=32, width=32)
+            for i in range(n)]
+
+
+def _serve_rows(eng, windows):
+    h = eng.open(stateful=True)
+    for w in windows:
+        h.submit(w)
+    return [(r.seq, np.asarray(r.result.logits)) for r in eng.run()]
+
+
+def test_engine_config_validation():
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        EngineConfig(pipeline_depth=-1)
+    with pytest.raises(ValueError, match="fair_quantum"):
+        EngineConfig(policy=DeadlinePolicy(), fair_quantum=2)
+    import dataclasses
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        EngineConfig().pipeline_depth = 3
+
+
+def test_config_and_legacy_kwargs_mutually_exclusive(params, cfg):
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        StreamEngine(params, cfg, EngineConfig(), max_streams=4)
+    with pytest.raises(TypeError, match="EngineConfig"):
+        StreamEngine(params, cfg, {"max_streams": 4})
+
+
+def test_legacy_kwargs_warn_once_config_is_silent(params, cfg):
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        StreamEngine(params, cfg, max_streams=2)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        StreamEngine(params, cfg, EngineConfig(max_streams=2))
+        StreamEngine(params, cfg)          # bare default: also modern
+    assert not [w for w in rec if w.category is DeprecationWarning]
+
+
+def test_legacy_kwargs_and_config_build_identical_engines(params, cfg):
+    """The shim is exactly a respelling: a kwarg-built engine and a
+    config-built engine produce bitwise-identical serving rows."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = StreamEngine(params, cfg, max_streams=2, fair_quantum=3,
+                              pipeline_depth=1, window_ms=250.0)
+    modern = StreamEngine(params, cfg, EngineConfig(
+        max_streams=2, fair_quantum=3, pipeline_depth=1, window_ms=250.0))
+    assert legacy.config == modern.config
+    ws = _windows(3, seed=51)
+    for (sa, la), (sb, lb) in zip(_serve_rows(legacy, ws),
+                                  _serve_rows(modern, ws)):
+        assert sa == sb
+        np.testing.assert_array_equal(la, lb)
+
+
+def test_from_config_forwards_engine_fields(params, cfg):
+    config = EngineConfig(duration_us=300000, window_ms=123.0,
+                          fuse_fc=True)
+    eng = BatchedClosedLoop.from_config(params, cfg, config)
+    assert (eng.duration_us, eng.window_ms, eng.fuse_fc, eng.mesh) == \
+        (300000, 123.0, True, None)
+
+
+# ----------------------------------------------------------------------
+# Satellite 2: the unified mesh entrypoint.
+# ----------------------------------------------------------------------
+
+def test_make_mesh_forms_and_aliases():
+    m = make_mesh()                       # all local devices, ("data",)
+    assert m.axis_names == ("data",)
+    assert m.size == len(jax.devices())   # works at any forced device count
+    assert make_mesh(1).axis_names == ("data",)
+    assert make_mesh((1,), ("x",)).axis_names == ("x",)
+    with pytest.raises(ValueError, match="axes required"):
+        make_mesh((1, 1))
+    with pytest.raises(ValueError, match="disagree"):
+        make_mesh((1,), ("a", "b"))
+    with pytest.raises(RuntimeError, match="device_count"):
+        make_mesh(64)
+    # launch-stack alias resolves to the same constructor
+    from repro.launch.mesh import make_mesh_for
+    from repro.launch import mesh as launch_mesh
+    assert launch_mesh.make_mesh is make_mesh
+    assert make_mesh_for((1,), ("data",)).axis_names == ("data",)
+
+
+def test_slot_axis_and_pspecs():
+    from jax.sharding import PartitionSpec as P
+    m = make_mesh()
+    assert slot_axis(m) == "data"
+    assert slot_axis(make_mesh((1,), ("model",))) == "model"
+    assert slot_pspec(3, m) == P("data", None, None)
+    assert slot_pspec(1, m) == P("data")
+    state = {"a": np.zeros((4, 2, 2)), "b": np.zeros((4,))}
+    specs = slot_state_pspecs(state, m)
+    assert specs == {"a": P("data", None, None), "b": P("data")}
+
+
+# ----------------------------------------------------------------------
+# Satellite 3: DeadlinePolicy bookkeeping is released on close().
+# ----------------------------------------------------------------------
+
+class _StubEngine:
+    """Minimal protocol engine: instant canned results, no jax."""
+    modality = "stub"
+    duration_us = 1000
+
+    def validate(self, item):
+        pass
+
+    def prepare(self, items, *, batch_size):
+        assert len(items) == batch_size
+        return items
+
+    def shape_key(self, batch):
+        return (len(batch),)
+
+    def infer(self, batch):
+        from repro.core.pipeline import ClosedLoopResult
+        return [None if it is None else ClosedLoopResult(
+            label_pred=np.zeros(1, np.int64), pwm=np.zeros((1, 4)),
+            latency_ms=1.0, energy_mj=1.0, breakdown={}, realtime=True,
+            sustained_rate_hz=1.0) for it in batch]
+
+
+def test_close_releases_deadline_policy_bookkeeping():
+    """Regression: retiring streams must drop their aging counters via
+    ``policy.forget`` -- a serving process that opens and closes many
+    deadlined streams must not grow ``DeadlinePolicy._waited``."""
+    policy = DeadlinePolicy(aging=1.0)
+    eng = StreamEngine(engines=[_StubEngine()],
+                       config=EngineConfig(max_streams=1, policy=policy))
+    for round_ in range(5):
+        handles = [eng.open(stream_id=f"r{round_}s{i}", deadline=float(i))
+                   for i in range(3)]
+        for h in handles:
+            h.submit(object())
+        eng.step()                 # 1 slot, 3 streams -> 2 wait + age
+        assert policy._waited      # the passed-over streams aged
+        # Close with counters still LIVE (streams waiting, windows
+        # queued): a sync engine has nothing in flight, so close() drops
+        # the queues -- and must drop the aging counters with them.
+        for h in handles:
+            h.close()
+        assert policy._waited == {}, policy._waited

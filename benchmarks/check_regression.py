@@ -31,6 +31,14 @@ baseline with the runner-independent sharded-vs-single-device ratio as
 the fallback -- forced host devices time-slice one CPU, so the ratio
 measures sharded-step *overhead* (it must not collapse), not scaling.
 
+The ``fleet_rows`` cell (static vs rebalanced two-engine fleet) splits
+in two. Its deadline-miss rates are measured on a logical clock, so
+``rebalanced_miss_rate <= static_miss_rate`` (with at least one real
+migration) is enforced on the FRESH artifact alone, on any runner. The
+wall-clock side -- fleet windows/s under rebalancing -- is gated against
+the baseline with the runner-independent rebalanced-over-static
+throughput ratio as the fallback.
+
 Usage (CI runs exactly this, after ``benchmarks.kernel_bench``):
 
     PYTHONPATH=src python -m benchmarks.check_regression
@@ -186,6 +194,46 @@ def main(argv=None) -> int:
                 float(base_by_d[d]["sharded_over_single"]),
                 float(fresh_by_d[d]["sharded_over_single"]),
                 "sharded-over-single ratio", args.tolerance)
+
+    # The fleet control-plane cell: same transition policy (missing
+    # fresh FAIL, missing baseline WARN). The miss rates are measured
+    # on a logical clock (deterministic on any runner), so the
+    # rebalancer-beats-static check needs only the FRESH run and is
+    # enforced unconditionally; the throughput gate is
+    # baseline-relative with the rebalanced-over-static ratio (both
+    # sides off the same machine) as the runner-independent fallback.
+    if "fleet_rows" not in fresh_doc:
+        print("FAIL: fresh artifact has no fleet_rows cell")
+        ok = False
+    else:
+        lfresh = fresh_doc["fleet_rows"][0]
+        s_miss = float(lfresh["static_miss_rate"])
+        r_miss = float(lfresh["rebalanced_miss_rate"])
+        if int(lfresh.get("migrations", 0)) < 1:
+            print("FAIL: fleet cell recorded no migrations -- the "
+                  "rebalancer never moved a stream (vacuous cell)")
+            ok = False
+        elif r_miss > s_miss:
+            print(f"FAIL: rebalanced fleet misses MORE deadlines than "
+                  f"static placement ({r_miss:.3f} > {s_miss:.3f})")
+            ok = False
+        else:
+            print(f"OK: rebalanced miss rate {r_miss:.3f} <= static "
+                  f"{s_miss:.3f} (live migration cost "
+                  f"{float(lfresh['migration_ms']):.2f} ms)")
+        if "fleet_rows" not in base_doc:
+            print("WARN: baseline has no fleet_rows cell (predates the "
+                  "fleet control plane); skipping the fleet throughput "
+                  "gate -- refresh the baseline")
+        else:
+            lbase = base_doc["fleet_rows"][0]
+            ok &= _gate(
+                "fleet rebalanced windows/s",
+                float(lbase["rebalanced_windows_per_s"]),
+                float(lfresh["rebalanced_windows_per_s"]),
+                float(lbase["rebalanced_over_static"]),
+                float(lfresh["rebalanced_over_static"]),
+                "rebalanced-over-static ratio", args.tolerance)
 
     return 0 if ok else 1
 

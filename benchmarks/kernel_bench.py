@@ -12,7 +12,10 @@ the looped single-window pipeline at several batch sizes, and writes a
 stateless serving cell (carried LIF membranes on vs off, same engine) to
 the same artifact; ``fusion_rows`` adds the cross-modal fusion cell
 (FusionSession serving paired event+frame ticks through one engine vs
-the two wings on separate engines). ``hetero_rows`` measures the two
+the two wings on separate engines); ``fleet_rows`` adds the fleet
+control-plane cell (deadline-miss rate of a skewed two-engine fleet
+with vs without the telemetry-driven rebalancer, plus live-migration
+cost in ms). ``hetero_rows`` measures the two
 accelerator wings through the unified engine protocol -- event-SNN vs
 frame-TCN throughput, alone and mixed in one engine -- and writes
 ``BENCH_hetero.json``.
@@ -39,10 +42,11 @@ from repro.core import events as ev
 from repro.core import frames as fr
 from repro.core.lif import LIFParams
 from repro.core.pipeline import BatchedClosedLoop, ClosedLoopPipeline
+from repro.fleet import CheckpointStore, FleetConfig, FleetRebalancer
 from repro.kernels import (fc_lif_scan, lif_scan, lif_scan_ref,
                            pack_ternary_weights, ternary_matmul,
                            ternary_matmul_ref)
-from repro.serving import FusionSession, StreamEngine
+from repro.serving import DeadlinePolicy, FusionSession, StreamEngine
 
 REPEATS = 5
 
@@ -501,6 +505,113 @@ def hetero_rows(slots=4, windows_per_stream=8,
     return rows
 
 
+def fleet_rows(streams=4, windows_per_stream=6, repeats=REPEATS,
+               out_json="BENCH_stream.json"):
+    """Fleet control-plane cell: a deliberately skewed two-engine fleet
+    (a hot 2-slot engine opens every deadlined stateful stream with all
+    windows queued up front; a cold 4-slot engine idles) served twice
+    under a shared logical clock -- static placement vs a
+    ``FleetRebalancer`` live-migrating deep-queue streams hot-to-cold
+    through the checkpoint store.
+
+    Deadline-miss rates are measured on the logical clock (one tick per
+    scheduling round), so they are DETERMINISTIC -- the regression gate
+    checks ``rebalanced_miss_rate <= static_miss_rate`` on the fresh
+    artifact alone. Wall-clock metrics (fleet windows/s and per-migration
+    cost in ms) follow the usual methodology: one warmup pass per side,
+    then ``repeats`` interleaved timed passes, medians reported; the
+    rebalanced-over-static throughput ratio is the runner-independent
+    fallback. Appended to the ``stream_rows`` artifact under
+    ``fleet_rows``."""
+    cfg = SNNConfig(height=32, width=32, time_bins=8, conv1_features=4,
+                    conv2_features=8, hidden=32, num_classes=11)
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    windows = {
+        f"p{s}": [ev.synthetic_gesture_events(rng, (s + k) % 11,
+                                              mean_events=3000,
+                                              height=32, width=32)
+                  for k in range(windows_per_stream)]
+        for s in range(streams)
+    }
+    n_total = streams * windows_per_stream
+
+    def serve(rebalance):
+        hot = StreamEngine(params, cfg, EngineConfig(
+            max_streams=2, policy=DeadlinePolicy(fair_quantum=2)))
+        cold = StreamEngine(params, cfg, EngineConfig(
+            max_streams=4, policy=DeadlinePolicy(fair_quantum=2)))
+        tick = [0]
+        for e in (hot, cold):
+            e.deadline_clock = lambda: float(tick[0])
+        for sid in sorted(windows):
+            h = hot.open(stream_id=sid, stateful=True)
+            for k, w in enumerate(windows[sid]):
+                h.submit(w, deadline=2.0 + 1.0 * k)
+        reb = FleetRebalancer(
+            {"hot": hot, "cold": cold}, store=CheckpointStore(),
+            config=FleetConfig(imbalance=1.0, cooldown=1),
+        ) if rebalance else None
+        n = 0
+        t0 = time.perf_counter()
+        while hot.pending() or cold.pending():
+            n += len(hot.step())
+            n += len(cold.step())
+            tick[0] += 1
+            if reb is not None:
+                n += len(reb.observe().displaced)
+        wall = time.perf_counter() - t0
+        assert n == n_total
+        dated = missed = 0
+        for e in (hot, cold):
+            for st in e.stream_stats.values():
+                dated += st.deadline_windows
+                missed += st.deadline_missed
+        mig_ms = [m.migration_ms for m in reb.migrations] if reb else []
+        return n / wall, missed / dated, mig_ms
+
+    serve(False)                 # warm-up: compile the hot lane's shapes
+    serve(True)                  # warm-up: compile the cold lane's too
+    s_static, s_rebal, mig_ms = [], [], []
+    static_miss = rebal_miss = 0.0
+    n_migrations = 0
+    for _ in range(repeats):
+        wps, static_miss, _ = serve(False)
+        s_static.append(wps)
+        wps, rebal_miss, ms = serve(True)
+        s_rebal.append(wps)
+        n_migrations = len(ms)
+        mig_ms.extend(ms)
+
+    wps_static = float(np.median(s_static))
+    wps_rebal = float(np.median(s_rebal))
+    ratio = wps_rebal / wps_static
+    m_ms = float(np.median(mig_ms)) if mig_ms else 0.0
+    rows = [(f"fleet_rebalance_S{streams}", 1e6 / wps_rebal,
+             f"static_miss={static_miss:.3f};"
+             f"rebalanced_miss={rebal_miss:.3f};"
+             f"migration_ms={m_ms:.2f};migrations={n_migrations}")]
+    artifact = [{"engines": 2, "streams": streams,
+                 "windows_per_stream": windows_per_stream,
+                 "static_miss_rate": static_miss,
+                 "rebalanced_miss_rate": rebal_miss,
+                 "static_windows_per_s": wps_static,
+                 "rebalanced_windows_per_s": wps_rebal,
+                 "rebalanced_over_static": ratio,
+                 "migrations": n_migrations,
+                 "migration_ms": m_ms}]
+    if out_json:
+        try:
+            with open(out_json) as f:
+                doc = json.load(f)
+        except FileNotFoundError:
+            doc = {"benchmark": "stream_closed_loop"}
+        doc["fleet_rows"] = artifact
+        with open(out_json, "w") as f:
+            json.dump(doc, f, indent=2)
+    return rows
+
+
 # Self-contained child program for one sharded_rows cell: serve the
 # standard stream workload on a mesh over every forced host device and
 # print the measured windows/s as JSON. Runs in a SUBPROCESS because
@@ -610,8 +721,8 @@ def sharded_rows(device_counts=(1, 2, 4), slots=8, windows_per_stream=8,
 def main():
     for name, us, derived in (lif_rows() + ternary_rows() + fc_fusion_rows()
                               + stream_rows() + stateful_rows()
-                              + fusion_rows() + hetero_rows()
-                              + sharded_rows()):
+                              + fusion_rows() + fleet_rows()
+                              + hetero_rows() + sharded_rows()):
         print(f"{name},{us:.1f},{derived}")
 
 

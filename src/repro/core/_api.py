@@ -26,7 +26,7 @@ import dataclasses
 import warnings
 from typing import Any, Mapping, Optional, Union
 
-__all__ = ["EngineConfig", "suppress_api_deprecations",
+__all__ = ["EngineConfig", "FleetConfig", "suppress_api_deprecations",
            "warn_deprecated_call"]
 
 
@@ -79,6 +79,79 @@ class EngineConfig:
             raise ValueError(
                 "fair_quantum configures the DEFAULT policy only; set "
                 "the quantum on your policy instance instead")
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Every control-plane policy knob, in one frozen value.
+
+    Read by ``repro.fleet``'s :class:`~repro.fleet.autoscale.LaneAutoscaler`
+    and :class:`~repro.fleet.rebalance.FleetRebalancer`; the serving layer
+    itself never consults it (mechanism lives in ``StreamEngine``, policy
+    lives here).
+
+    Autoscaler knobs:
+
+      * ``grow_backlog`` -- queued windows per slot above which a lane
+        counts as backlogged; ``grow_patience`` consecutive backlogged
+        observations trigger a grow (sustained pressure, not a blip).
+      * ``shrink_occupancy`` -- occupied-slot fraction below which a lane
+        counts as idle; ``shrink_patience`` consecutive idle observations
+        trigger a shrink. Shrink patience should exceed grow patience so
+        capacity is easy to gain and slow to give back.
+      * ``min_slots`` / ``max_slots`` -- hard slot-count bounds; with a
+        mesh, ``min_slots`` must stay divisible by the slot-axis size.
+      * ``scale_step`` -- multiplicative resize factor (2 doubles/halves,
+        keeping the per-``shape_key`` AOT cache population logarithmic in
+        the slot range).
+
+    Rebalancer knobs:
+
+      * ``miss_weight`` -- how many queued-windows-per-slot one unit of
+        deadline-miss rate is worth in the load score
+        (``queued/slots + miss_weight * miss_rate``).
+      * ``imbalance`` -- minimum hottest-minus-coldest score gap before a
+        migration is considered (the hysteresis dead-band; migrations
+        cost a lane drain, so small gaps are left alone).
+      * ``cooldown`` -- observation ticks after a migration during which
+        the rebalancer holds still, letting the moved load register in
+        both engines' telemetry before it re-evaluates (anti-thrash).
+    """
+
+    grow_backlog: float = 2.0
+    grow_patience: int = 2
+    shrink_occupancy: float = 0.25
+    shrink_patience: int = 4
+    min_slots: int = 1
+    max_slots: int = 64
+    scale_step: int = 2
+    miss_weight: float = 10.0
+    imbalance: float = 1.0
+    cooldown: int = 4
+
+    def __post_init__(self):
+        if self.min_slots < 1:
+            raise ValueError(f"min_slots must be >= 1, got {self.min_slots}")
+        if self.max_slots < self.min_slots:
+            raise ValueError(
+                f"max_slots ({self.max_slots}) must be >= min_slots "
+                f"({self.min_slots})")
+        if self.scale_step < 2:
+            raise ValueError(
+                f"scale_step must be >= 2, got {self.scale_step}")
+        if self.grow_patience < 1 or self.shrink_patience < 1:
+            raise ValueError("patience values must be >= 1")
+        if self.grow_backlog <= 0.0:
+            raise ValueError(
+                f"grow_backlog must be > 0, got {self.grow_backlog}")
+        if not 0.0 <= self.shrink_occupancy <= 1.0:
+            raise ValueError(
+                "shrink_occupancy must be in [0, 1], got "
+                f"{self.shrink_occupancy}")
+        if self.imbalance < 0.0 or self.miss_weight < 0.0:
+            raise ValueError("imbalance and miss_weight must be >= 0")
+        if self.cooldown < 0:
+            raise ValueError(f"cooldown must be >= 0, got {self.cooldown}")
+
 
 _suppressed = 0
 

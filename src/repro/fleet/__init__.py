@@ -1,0 +1,41 @@
+"""Fleet control plane: the policy layer over the serving primitives.
+
+The paper closes one loop on one Kraken SoC; the ROADMAP north-star is
+millions of streams, which is a *system* problem -- admission,
+autoscaling, rebalancing -- not an engine problem. PRs 1-6 built every
+mechanism this needs (host-serializable ``StreamCheckpoint`` with
+bitwise restore, per-stream ``StreamStats``, per-``shape_key`` AOT
+warmup caches, live lane resize/drain hooks); this package is the
+control plane that drives them, in three cooperating pieces:
+
+  * :class:`~repro.fleet.autoscale.LaneAutoscaler` -- watches one
+    lane's queue-depth and deadline-miss telemetry and resizes its slot
+    count: grow on sustained backlog, shrink on idle, recompiles
+    amortized through the engines' AOT warmup caches.
+  * :mod:`~repro.fleet.migrate` -- live migration: checkpoint a stream
+    *while windows are in flight* by draining only its lane
+    (``drain_lane``), then replay the checkpoint into another engine,
+    bitwise-identical to an uninterrupted scan.
+  * :class:`~repro.fleet.store.CheckpointStore` +
+    :class:`~repro.fleet.rebalance.FleetRebalancer` -- snapshot every
+    engine's telemetry, score load (queue depth + deadline-miss rate),
+    and migrate streams hot-to-cold through the store, with an
+    imbalance dead-band and a post-move cooldown so it never thrashes.
+
+Every knob lives in :class:`~repro.core._api.FleetConfig`; the serving
+layer stays policy-free. Ev-Edge (PAPERS.md) is the reference point for
+reactive scheduling on heterogeneous event platforms.
+"""
+from repro.core._api import FleetConfig
+from repro.fleet.autoscale import LaneAutoscaler, ScaleDecision
+from repro.fleet.migrate import MigrationRecord, checkpoint_live, migrate_stream
+from repro.fleet.rebalance import FleetRebalancer, RebalanceReport, load_score
+from repro.fleet.store import CheckpointStore
+
+__all__ = [
+    "FleetConfig",
+    "LaneAutoscaler", "ScaleDecision",
+    "MigrationRecord", "checkpoint_live", "migrate_stream",
+    "FleetRebalancer", "RebalanceReport", "load_score",
+    "CheckpointStore",
+]

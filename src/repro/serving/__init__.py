@@ -9,6 +9,7 @@ from repro.serving.scheduler import BatchScheduler, Request
 from repro.serving.session import (FusionSession, StreamCheckpoint,
                                    late_logit_fusion)
 from repro.serving.stream import (DeadlinePolicy, EngineConfig,
-                                  FairQuantumPolicy, SlotPolicy,
-                                  StreamEngine, StreamHandle,
-                                  StreamResult, StreamStats)
+                                  FairQuantumPolicy, LaneTelemetry,
+                                  SlotPolicy, StreamEngine, StreamHandle,
+                                  StreamResult, StreamStats,
+                                  StreamStatsSnapshot)

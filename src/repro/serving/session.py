@@ -295,6 +295,29 @@ class FusionSession:
                 "event": self.event.checkpoint(),
                 "frame": self.frame.checkpoint()}
 
+    def checkpoint_to(self, store, ckpt_id: Optional[str] = None) -> str:
+        """Capture this session into a
+        :class:`~repro.fleet.store.CheckpointStore`; returns the id.
+
+        The whole session payload (both wings + pairing cursor) crosses
+        the store's pickle boundary as ONE blob, so a session can never
+        be half-migrated: either both wings restore or the id stays in
+        the store. Serializability is proven at put time, exactly as for
+        single-stream checkpoints.
+        """
+        return store.put(self.checkpoint(), ckpt_id)
+
+    @classmethod
+    def restore_from(cls, engine: StreamEngine, store, ckpt_id: str, *,
+                     fusion: Optional[Callable] = None) -> "FusionSession":
+        """Replay a stored session checkpoint into ``engine`` and consume
+        its id (single-use, like every store restore). A failed restore
+        -- rule mismatch, rejected wing, duration conflict -- leaves the
+        checkpoint in the store and the engine clean."""
+        session = cls.restore(engine, store.get(ckpt_id), fusion=fusion)
+        store.consume(ckpt_id)
+        return session
+
     @classmethod
     def restore(cls, engine: StreamEngine, ckpt: dict, *,
                 fusion: Optional[Callable] = None) -> "FusionSession":

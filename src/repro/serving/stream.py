@@ -79,6 +79,24 @@ results -- while nudging callers to the handle API with a one-shot
 Kraken wings into a single actuation decision) binds one event handle
 and one frame handle through :class:`~repro.serving.session.FusionSession`.
 
+Fleet hooks (the control-plane surface ``repro.fleet`` drives): every
+completed window feeds a sliding-horizon telemetry window on its
+:class:`StreamStats` (``snapshot()`` freezes a consistent view with
+derived rates -- windows/s, queue-depth p95, deadline-miss rate), and
+``telemetry(modality)`` aggregates a whole lane into a
+:class:`LaneTelemetry` row. Deadline-miss accounting interprets a finite
+``deadline`` as an instant on the engine's ``deadline_clock`` (defaults
+to ``time.perf_counter``; a fleet driver may install a shared logical
+clock): a window collected after its deadline counts as missed.
+``resize_lane`` changes a lane's slot count live -- kept streams stay
+slotted, evicted streams rejoin the FRONT of the waiting line, carried
+state is parked and re-attached, and the new batch size is pre-warmed
+through the engines' per-``shape_key`` AOT caches so a resize costs one
+warmed compile instead of a mid-serve stall. ``drain_lane`` collects
+ONE lane's in-flight pipelined steps (other lanes stay dispatched),
+which is what lets a stream checkpoint live without flushing the whole
+engine.
+
 Pipelining (``pipeline_depth >= 1``): ``step()`` dispatches each lane's
 jit'd call asynchronously (no device sync on the critical path) and
 returns the results of the step dispatched ``pipeline_depth`` steps ago,
@@ -112,7 +130,8 @@ from repro.core.pipeline import (BatchedClosedLoop, ClosedLoopResult,
                                  import_state_slot)
 from repro.core.snn import SNNConfig
 
-__all__ = ["StreamResult", "StreamStats", "StreamEngine", "StreamHandle",
+__all__ = ["StreamResult", "StreamStats", "StreamStatsSnapshot",
+           "LaneTelemetry", "StreamEngine", "StreamHandle",
            "SlotPolicy", "FairQuantumPolicy", "DeadlinePolicy",
            "EngineConfig"]
 
@@ -133,15 +152,68 @@ class StreamResult:
     modality: str = "event"
 
 
+@dataclasses.dataclass(frozen=True)
+class StreamStatsSnapshot:
+    """A frozen, host-side view of one stream's accounting.
+
+    The autoscaler/rebalancer read THIS, not the live mutable counters:
+    every derived rate inside is computed from one consistent point in
+    time. Cumulative fields mirror :class:`StreamStats`; the
+    ``horizon_*`` fields and derived rates cover only the last
+    ``horizon`` completions (the sliding telemetry window), so a stream
+    that was hot an hour ago but idle now scores idle.
+    """
+
+    windows: int
+    queued: int
+    energy_mj: float
+    mean_latency_ms: float
+    realtime_fraction: float
+    deadline_windows: int         # completed windows that carried a deadline
+    deadline_missed: int          # ... collected after their deadline
+    horizon: int                  # completions the sliding fields cover (max)
+    horizon_windows: int          # completions actually in the window
+    horizon_deadline_windows: int
+    horizon_missed: int
+    windows_per_s: float          # completion rate over the sliding window
+    queue_depth_p95: float        # p95 of at-completion queue depths
+    deadline_miss_rate: float     # horizon_missed / horizon_deadline_windows
+
+
 @dataclasses.dataclass
 class StreamStats:
-    """Per-stream accounting, accumulated as windows complete."""
+    """Per-stream accounting, accumulated as windows complete.
+
+    Besides the cumulative counters, every completion is sampled into a
+    bounded sliding window (``horizon`` most recent completions: wall
+    time, queue depth left behind, deadline outcome) so
+    :meth:`snapshot` can derive recent rates -- windows/s, queue-depth
+    p95, deadline-miss rate -- without unbounded history.
+    """
 
     windows: int = 0
     energy_mj: float = 0.0
     latency_ms_sum: float = 0.0
     realtime_windows: int = 0
     queued: int = 0               # still waiting in this stream's queue
+    deadline_windows: int = 0     # completed windows that had a deadline
+    deadline_missed: int = 0      # ... that completed past it
+    horizon: int = 64             # sliding-window length (completions)
+    samples: Deque = dataclasses.field(default_factory=deque, repr=False)
+
+    def __post_init__(self):
+        self.samples = deque(self.samples, maxlen=self.horizon)
+
+    def note_completion(self, wall_t: float, queue_depth: int,
+                        missed: Optional[bool]) -> None:
+        """Record one completed window: wall-clock instant, the queue
+        depth it left behind, and its deadline outcome (``None`` = the
+        window carried no deadline)."""
+        if missed is not None:
+            self.deadline_windows += 1
+            if missed:
+                self.deadline_missed += 1
+        self.samples.append((wall_t, queue_depth, missed))
 
     @property
     def mean_latency_ms(self) -> float:
@@ -156,6 +228,62 @@ class StreamStats:
         """Average power while processing (energy over busy time)."""
         return (self.energy_mj / (self.latency_ms_sum * 1e-3)
                 if self.latency_ms_sum else 0.0)
+
+    def snapshot(self) -> StreamStatsSnapshot:
+        """Freeze a consistent view with derived sliding-horizon rates."""
+        samples = list(self.samples)
+        n = len(samples)
+        span = samples[-1][0] - samples[0][0] if n >= 2 else 0.0
+        wps = (n - 1) / span if span > 0.0 else 0.0
+        depths = sorted(s[1] for s in samples)
+        p95 = (float(depths[max(0, math.ceil(0.95 * n) - 1)])
+               if depths else 0.0)
+        dated = [s[2] for s in samples if s[2] is not None]
+        missed = sum(1 for m in dated if m)
+        return StreamStatsSnapshot(
+            windows=self.windows, queued=self.queued,
+            energy_mj=self.energy_mj,
+            mean_latency_ms=self.mean_latency_ms,
+            realtime_fraction=self.realtime_fraction,
+            deadline_windows=self.deadline_windows,
+            deadline_missed=self.deadline_missed,
+            horizon=self.horizon, horizon_windows=n,
+            horizon_deadline_windows=len(dated), horizon_missed=missed,
+            windows_per_s=wps, queue_depth_p95=p95,
+            deadline_miss_rate=missed / len(dated) if dated else 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class LaneTelemetry:
+    """One engine lane, aggregated for the fleet control plane.
+
+    ``backlog_per_slot`` is the autoscaler's grow signal (queued windows
+    per batch slot); ``deadline_miss_rate`` pools every stream's sliding
+    horizon (missed / with-deadline completions), so it reacts to recent
+    pressure, not lifetime averages. ``streams`` holds the consistent
+    per-stream :class:`StreamStatsSnapshot` rows the aggregate was
+    computed from.
+    """
+
+    modality: str
+    slots: int
+    occupied: int                 # slots currently pinned to a stream
+    waiting: int                  # streams in the waiting line
+    queued: int                   # windows queued across the lane
+    in_flight: int                # dispatched-but-uncollected windows
+    windows: int                  # completed windows (cumulative)
+    windows_per_s: float          # summed sliding-horizon completion rate
+    deadline_miss_rate: float     # pooled over the streams' horizons
+    streams: Dict[Hashable, StreamStatsSnapshot] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def backlog_per_slot(self) -> float:
+        return self.queued / self.slots if self.slots else 0.0
+
+    @property
+    def occupancy(self) -> float:
+        return self.occupied / self.slots if self.slots else 0.0
 
 
 class _FreeSlot:
@@ -462,6 +590,12 @@ class StreamHandle:
     @property
     def modality(self) -> str:
         return self._lane.modality
+
+    @property
+    def engine(self) -> "StreamEngine":
+        """The owning engine (the completion surface for this stream's
+        results, and the lane-level control surface the fleet drives)."""
+        return self._engine
 
     @property
     def stats(self) -> StreamStats:
@@ -857,6 +991,11 @@ class StreamEngine:
         self.stats: Dict[str, float] = {
             "steps": 0, "windows": 0, "wall_s": 0.0,
         }
+        # The clock finite deadlines are measured against for miss
+        # telemetry (NOT for scheduling -- policies only order by
+        # deadline value). Defaults to wall time; fleet drivers and
+        # tests install a shared logical clock for determinism.
+        self.deadline_clock: Callable[[], float] = time.perf_counter
 
     # -- introspection ---------------------------------------------------
 
@@ -919,6 +1058,153 @@ class StreamEngine:
                 f"engine for modality {modality!r} "
                 f"({type(engine).__name__}) does not implement warmup()")
         warm(shape_keys)
+
+    # -- fleet control-plane hooks ---------------------------------------
+
+    def _lane_named(self, modality: Optional[str]) -> EngineLane:
+        """Resolve a lane by modality (optional when only one lane)."""
+        if modality is None:
+            if len(self._lanes) != 1:
+                raise ValueError(
+                    "modality required with multiple engines; have "
+                    f"{sorted(self._lanes)}")
+            return next(iter(self._lanes.values()))
+        if modality not in self._lanes:
+            raise ValueError(f"no engine for modality {modality!r}; "
+                             f"have {sorted(self._lanes)}")
+        return self._lanes[modality]
+
+    def telemetry(self, modality: Optional[str] = None) -> LaneTelemetry:
+        """A consistent control-plane view of one lane: aggregate queue
+        depth, in-flight count, pooled sliding-horizon deadline-miss
+        rate and completion rate, plus every stream's frozen
+        :class:`StreamStatsSnapshot` (the rows the aggregate was
+        computed from)."""
+        lane = self._lane_named(modality)
+        snaps = {sid: self.stream_stats[sid].snapshot()
+                 for sid in lane.queues}
+        in_flight = sum(
+            1
+            for step_recs in self._inflight
+            for rec in step_recs if rec.lane is lane
+            for entry in rec.entries if entry is not None)
+        h_dated = sum(s.horizon_deadline_windows for s in snaps.values())
+        h_missed = sum(s.horizon_missed for s in snaps.values())
+        return LaneTelemetry(
+            modality=lane.modality,
+            slots=len(lane.slots),
+            occupied=sum(1 for s in lane.slots if s is not _FREE),
+            waiting=len(lane.waiting),
+            queued=lane.pending(),
+            in_flight=in_flight,
+            windows=sum(s.windows for s in snaps.values()),
+            windows_per_s=sum(s.windows_per_s for s in snaps.values()),
+            deadline_miss_rate=h_missed / h_dated if h_dated else 0.0,
+            streams=snaps)
+
+    def resize_lane(self, modality: Optional[str] = None, *,
+                    slots: int, warm: bool = True) -> List[Hashable]:
+        """Change one lane's batch-slot count live; returns the streams
+        evicted from their slots (shrink only; they rejoin the FRONT of
+        the waiting line in slot order, keeping their scheduling
+        priority over never-slotted arrivals).
+
+        Safe at any point between steps, including with pipelined
+        windows in flight (collection is positional into the dispatched
+        batch, so already-dispatched steps are untouched). Carried
+        state survives: every live carry is parked and re-attached on
+        the stream's next dispatch, so a stateful stream's windows stay
+        bitwise-identical to an uninterrupted scan across the resize.
+        Policy bookkeeping (e.g. ``DeadlinePolicy`` aging counters) is
+        deliberately NOT touched: waiting streams keep their aging,
+        evicted streams start aging from the front of the line.
+
+        ``warm=True`` (default) amortizes the recompile: for every shape
+        key the engine has already compiled at the OLD slot count, the
+        corresponding new-slot-count key is precompiled through the
+        engine's per-``shape_key`` AOT warmup cache, so the first step
+        after the resize runs a warmed executable instead of stalling on
+        a mid-serve compile. On a mesh-attached engine the new count
+        must still divide over the mesh slot axis.
+        """
+        lane = self._lane_named(modality)
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        if self.mesh is not None:
+            _check_slot_divisible(slots, self.mesh,
+                                  f"lane '{lane.modality}' resize")
+        old = len(lane.slots)
+        if slots == old:
+            return []
+        # Park every live carry: the state buffer is shaped by the slot
+        # count, so it is rebuilt (lazily, from parked + zero rows) at
+        # the next stateful dispatch. Parking slices whatever the rows
+        # hold -- including pipelined async-dispatch futures.
+        if lane.state is not None:
+            for j, owner in enumerate(lane.state_streams):
+                if owner is not _FREE and owner in lane.stateful:
+                    lane.parked[owner] = jax.tree_util.tree_map(
+                        lambda a, j=j: a[j], lane.state)
+            lane.state = None
+            lane.zero_state = None
+        lane.state_streams = [_FREE] * slots
+        evicted: List[Hashable] = []
+        if slots > old:
+            lane.slots.extend([_FREE] * (slots - old))
+            lane.slot_runs.extend([0] * (slots - old))
+        else:
+            held = [(sid, run) for sid, run in
+                    zip(lane.slots, lane.slot_runs) if sid is not _FREE]
+            kept, dropped = held[:slots], held[slots:]
+            lane.slots = ([sid for sid, _ in kept]
+                          + [_FREE] * (slots - len(kept)))
+            lane.slot_runs = ([run for _, run in kept]
+                              + [0] * (slots - len(kept)))
+            evicted = [sid for sid, _ in dropped]
+            # Front of the waiting line, slot order preserved: an
+            # evicted stream was being served and must not requeue
+            # behind streams that never had a slot.
+            lane.waiting.extendleft(reversed(evicted))
+        if warm:
+            warmer = getattr(lane.engine, "warmup", None)
+            compiled = getattr(lane.engine, "compiled_shape_keys", None)
+            if warmer is not None:
+                have = (set(compiled()) if compiled is not None
+                        else set(lane.shape_keys))
+                # Engine shape keys lead with the batch size (both
+                # wings' contract): re-key every old-count key at the
+                # new count and precompile the ones not already cached.
+                want = {(slots,) + tuple(k[1:])
+                        for k in have if k and k[0] == old}
+                fresh = sorted(want - have)
+                if fresh:
+                    warmer(fresh)
+        return evicted
+
+    def drain_lane(self, modality: Optional[str] = None
+                   ) -> List[StreamResult]:
+        """Collect every in-flight pipelined step of ONE lane (oldest
+        first), leaving other lanes' dispatched work in flight.
+
+        This is the live-migration primitive: checkpointing a stream
+        requires its lane's pending results on the host, but flushing
+        the WHOLE engine would stall every other lane's pipeline. Steps
+        that still hold other lanes' records stay queued (in order);
+        steps left empty are dropped.
+        """
+        lane = self._lane_named(modality)
+        out: List[StreamResult] = []
+        remaining: Deque[List[_InflightLane]] = deque()
+        while self._inflight:
+            step_recs = self._inflight.popleft()
+            mine = [rec for rec in step_recs if rec.lane is lane]
+            rest = [rec for rec in step_recs if rec.lane is not lane]
+            if mine:
+                out.extend(self._collect(mine))
+            if rest:
+                remaining.append(rest)
+        self._inflight = remaining
+        return out
 
     # -- the session-handle API ------------------------------------------
 
@@ -1088,6 +1374,16 @@ class StreamEngine:
         if handle is None:
             raise KeyError(f"unknown stream {stream_id!r}")
         return handle
+
+    def handle(self, stream_id: Hashable) -> StreamHandle:
+        """The open :class:`StreamHandle` of a known stream id (the
+        lookup a fleet rebalancer uses to pick a migration victim from
+        telemetry rows). Raises ``KeyError`` for unknown ids."""
+        return self._handle_of(stream_id)
+
+    def has_stream(self, stream_id: Hashable) -> bool:
+        """Whether ``stream_id`` is currently open on this engine."""
+        return stream_id in self._handles
 
     def reset_state(self, stream_id: Hashable) -> None:
         """Zero a stateful stream's carried state without retiring it;
@@ -1305,7 +1601,7 @@ class StreamEngine:
                 entry = lane.queues[sid].popleft()
                 lane.slot_runs[slot] += 1
                 self.stream_stats[sid].queued -= 1
-                rec.entries[i] = (sid, entry.seq)
+                rec.entries[i] = (sid, entry.seq, entry.deadline)
         return ran
 
     def _collect(self, ran: List[_InflightLane]) -> List[StreamResult]:
@@ -1321,16 +1617,24 @@ class StreamEngine:
                 with suppress_api_deprecations():
                     results = lane.engine.infer(rec.pending)
             lane.shape_keys.add(rec.key)
+            wall_t = time.perf_counter()
             for slot, entry in enumerate(rec.entries):
                 if entry is None:
                     continue
-                sid, seq = entry
+                sid, seq, deadline = entry
                 res = results[slot]
                 st = self.stream_stats[sid]
                 st.windows += 1
                 st.energy_mj += res.energy_mj
                 st.latency_ms_sum += res.latency_ms
                 st.realtime_windows += int(res.realtime)
+                # Deadline-miss telemetry: a finite deadline is an
+                # instant on the engine's deadline_clock; collecting the
+                # window after that instant is a miss. Feeds the sliding
+                # per-stream horizon the fleet control plane reads.
+                missed = (None if deadline is None
+                          else self.deadline_clock() > deadline)
+                st.note_completion(wall_t, st.queued, missed)
                 out.append(StreamResult(
                     stream_id=sid, seq=seq, result=res,
                     modality=lane.modality))

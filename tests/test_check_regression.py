@@ -18,7 +18,9 @@ _SPEC.loader.exec_module(check_regression)
 
 def _doc(batched=600.0, looped=300.0, stateful=590.0, stateless=600.0,
          fused=200.0, separate=195.0, with_stateful=True,
-         with_fusion=True, with_sharded=True, sharded=None):
+         with_fusion=True, with_sharded=True, sharded=None,
+         with_fleet=True, static_miss=0.25, rebal_miss=0.0,
+         fleet_rebal=580.0, fleet_static=560.0, migrations=3):
     doc = {"rows": [{"batch_size": 4,
                      "batched_windows_per_s": batched,
                      "looped_windows_per_s": looped,
@@ -43,6 +45,16 @@ def _doc(batched=600.0, looped=300.0, stateful=590.0, stateless=600.0,
             "windows_per_s": wps,
             "sharded_over_single": wps / single}
             for d, wps in sorted(sharded.items())]
+    if with_fleet:
+        doc["fleet_rows"] = [{
+            "engines": 2, "streams": 4, "windows_per_stream": 6,
+            "static_miss_rate": static_miss,
+            "rebalanced_miss_rate": rebal_miss,
+            "static_windows_per_s": fleet_static,
+            "rebalanced_windows_per_s": fleet_rebal,
+            "rebalanced_over_static": fleet_rebal / fleet_static,
+            "migrations": migrations,
+            "migration_ms": 1.5}]
     return doc
 
 
@@ -161,3 +173,45 @@ def test_sharded_gates_only_common_device_counts(tmp_path):
                 _doc(sharded={1: 600.0, 2: 610.0})) == 0
     assert _run(tmp_path, _doc(sharded={1: 600.0, 2: 610.0}),
                 _doc()) == 0
+
+
+# -- the fleet control-plane cell ---------------------------------------------
+
+def test_missing_fresh_fleet_cell_fails(tmp_path):
+    assert _run(tmp_path, _doc(), _doc(with_fleet=False)) == 1
+
+
+def test_old_baseline_without_fleet_warns_and_passes(tmp_path):
+    """A baseline predating fleet_rows must not block the transition:
+    the fleet throughput gate is skipped with a warning, but the
+    fresh-only miss-rate check still gates (it needs no baseline)."""
+    assert _run(tmp_path, _doc(with_fleet=False), _doc()) == 0
+    assert _run(tmp_path, _doc(with_fleet=False),
+                _doc(static_miss=0.1, rebal_miss=0.3)) == 1
+
+
+def test_fleet_rebalancer_must_beat_static(tmp_path):
+    # Logical-clock miss rates are runner-independent: a rebalanced
+    # fleet missing MORE deadlines than static placement always fails.
+    assert _run(tmp_path, _doc(),
+                _doc(static_miss=0.1, rebal_miss=0.3)) == 1
+
+
+def test_fleet_without_migrations_is_vacuous_and_fails(tmp_path):
+    # A 0-vs-0 miss-rate "win" with no stream ever moved proves nothing
+    # about live migration; the cell must record at least one.
+    assert _run(tmp_path, _doc(),
+                _doc(static_miss=0.0, rebal_miss=0.0, migrations=0)) == 1
+
+
+def test_fleet_throughput_regression_fails(tmp_path):
+    # Rebalanced windows/s halved AND the rebalanced-over-static ratio
+    # collapsed: the control plane itself got expensive.
+    assert _run(tmp_path, _doc(),
+                _doc(fleet_rebal=250.0, fleet_static=560.0)) == 1
+
+
+def test_fleet_slow_runner_passes_via_ratio(tmp_path):
+    # Both fleet cells uniformly slower: the ratio holds, gate passes.
+    assert _run(tmp_path, _doc(),
+                _doc(fleet_rebal=290.0, fleet_static=280.0)) == 0

@@ -1,0 +1,582 @@
+"""Fleet control plane: telemetry snapshots, live lane resize, lane-drain
+migration, the checkpoint store, and the autoscaler/rebalancer policies.
+
+The mechanism contracts live in the serving layer and are pinned here
+with stub engines (scheduling isolated from numerics) plus real-engine
+bitwise checks: a resize or live migration must never change a served
+stream's results vs an uninterrupted scan. The policy layer
+(``repro.fleet``) is tested purely through the public engine surface --
+``telemetry()`` / ``resize_lane()`` / ``drain_lane()`` / handles.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import SNNConfig, init_snn
+from repro.core._api import EngineConfig, FleetConfig
+from repro.core.pipeline import ClosedLoopResult
+from repro.fleet import (CheckpointStore, FleetRebalancer, LaneAutoscaler,
+                         checkpoint_live, migrate_stream)
+from repro.serving import StreamEngine
+from repro.serving.session import StreamCheckpoint
+from repro.serving.stream import StreamStats
+
+from test_stateful_stream import (_assert_matches_oracle,
+                                  _uninterrupted_oracle, _windows)
+
+
+class StubEngine:
+    """Minimal InferenceEngine: items are opaque tokens, results canned."""
+
+    modality = "stub"
+
+    def __init__(self):
+        self.duration_us = None
+        self.infer_calls = 0
+
+    def validate(self, item):
+        pass
+
+    def prepare(self, items, *, batch_size):
+        assert len(items) == batch_size
+        return items
+
+    def shape_key(self, batch):
+        return (len(batch),)
+
+    def infer(self, batch):
+        self.infer_calls += 1
+        return [None if it is None else ClosedLoopResult(
+            label_pred=np.zeros(1, np.int64), pwm=np.zeros((1, 4)),
+            latency_ms=1.0, energy_mj=1.0, breakdown={}, realtime=True,
+            sustained_rate_hz=1.0) for it in batch]
+
+
+class WarmStub(StubEngine):
+    """StubEngine + the AOT warmup surface, recording every warm call."""
+
+    def __init__(self):
+        super().__init__()
+        self.warmed = []
+        self._compiled = set()
+
+    def warmup(self, shape_keys):
+        self.warmed.append(tuple(shape_keys))
+        self._compiled.update(shape_keys)
+
+    def compiled_shape_keys(self):
+        return set(self._compiled)
+
+    def infer(self, batch):
+        self._compiled.add((len(batch),))
+        return super().infer(batch)
+
+
+def _stub_engine(slots, *, engine=None, **cfg_kw):
+    return StreamEngine(engines=[engine or StubEngine()],
+                        config=EngineConfig(max_streams=slots, **cfg_kw))
+
+
+def _ckpt(stream_id="s", **kw):
+    return StreamCheckpoint(stream_id=stream_id, modality="stub",
+                            stateful=False, next_seq=0, duration_us=None,
+                            state=None, **kw)
+
+
+# ----------------------------------------------------------------------
+# StreamStats.snapshot(): the frozen telemetry view (satellite).
+# ----------------------------------------------------------------------
+
+def test_stats_snapshot_derived_rates():
+    st = StreamStats(horizon=8)
+    st.windows, st.queued = 3, 7
+    st.note_completion(10.0, 3, None)
+    st.note_completion(11.0, 1, True)
+    st.note_completion(12.0, 2, False)
+    snap = st.snapshot()
+    assert snap.windows == 3 and snap.queued == 7
+    assert snap.horizon_windows == 3
+    # 2 completions spanning 2 s of wall time.
+    assert snap.windows_per_s == pytest.approx(1.0)
+    # Nearest-rank p95 of depths [1, 2, 3].
+    assert snap.queue_depth_p95 == 3.0
+    # One miss out of two dated completions (undated ones don't count).
+    assert snap.horizon_deadline_windows == 2 and snap.horizon_missed == 1
+    assert snap.deadline_miss_rate == pytest.approx(0.5)
+    assert snap.deadline_windows == 2 and snap.deadline_missed == 1
+    # Frozen: a control plane reading a snapshot can never corrupt stats.
+    import dataclasses
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        snap.windows = 99
+
+
+def test_stats_snapshot_empty_and_horizon_eviction():
+    st = StreamStats(horizon=2)
+    snap = st.snapshot()
+    assert snap.windows_per_s == 0.0 and snap.queue_depth_p95 == 0.0
+    assert snap.deadline_miss_rate == 0.0
+    # Lifetime counters keep counting; the sliding window forgets.
+    st.note_completion(1.0, 9, True)
+    st.note_completion(2.0, 1, False)
+    st.note_completion(3.0, 1, False)    # evicts the miss at t=1.0
+    snap = st.snapshot()
+    assert snap.deadline_missed == 1                 # lifetime
+    assert snap.horizon_missed == 0                  # horizon forgot it
+    assert snap.deadline_miss_rate == 0.0
+    assert snap.queue_depth_p95 == 1.0
+
+
+def test_deadline_miss_telemetry_uses_engine_clock():
+    """A finite deadline is an instant on engine.deadline_clock; the
+    collect-side comparison feeds per-stream and lane miss rates."""
+    eng = _stub_engine(2)
+    eng.deadline_clock = lambda: 100.0
+    missed = eng.open(stream_id="missed")
+    met = eng.open(stream_id="met")
+    undated = eng.open(stream_id="undated")
+    missed.submit(object(), deadline=50.0)    # already past: miss
+    met.submit(object(), deadline=200.0)      # still ahead: met
+    undated.submit(object())                  # no deadline: not counted
+    eng.run()
+    assert missed.stats.snapshot().deadline_miss_rate == 1.0
+    assert met.stats.snapshot().deadline_miss_rate == 0.0
+    assert undated.stats.snapshot().horizon_deadline_windows == 0
+    lane = eng.telemetry()
+    assert lane.deadline_miss_rate == pytest.approx(0.5)
+    assert lane.windows == 3
+
+
+# ----------------------------------------------------------------------
+# LaneTelemetry: the lane-level control-plane view.
+# ----------------------------------------------------------------------
+
+def test_lane_telemetry_counts():
+    eng = _stub_engine(2)
+    handles = [eng.open(stream_id=f"s{i}") for i in range(3)]
+    for h in handles:
+        for _ in range(2):
+            h.submit(object())
+    t = eng.telemetry()
+    assert t.modality == "stub" and t.slots == 2
+    assert t.queued == 6 and t.backlog_per_slot == 3.0
+    assert t.occupied == 0 and t.waiting == 3     # nothing stepped yet
+    assert set(t.streams) == {"s0", "s1", "s2"}
+    eng.step()
+    t = eng.telemetry()
+    assert t.occupied == 2 and t.occupancy == 1.0
+    assert t.queued == 4
+    eng.run()
+    t = eng.telemetry()
+    assert t.queued == 0 and t.windows == 6
+
+
+def test_telemetry_counts_in_flight_and_requires_modality_when_plural():
+    class Stub2(StubEngine):
+        modality = "stub2"
+
+    eng = StreamEngine(engines=[StubEngine(), Stub2()],
+                       config=EngineConfig(max_streams=1,
+                                           pipeline_depth=1))
+    eng.open("stub", stream_id="a").submit(object())
+    eng.open("stub2", stream_id="b").submit(object())
+    eng.step()                  # dispatched, not yet collected
+    with pytest.raises(ValueError, match="modality required"):
+        eng.telemetry()
+    assert eng.telemetry("stub").in_flight == 1
+    assert eng.telemetry("stub2").in_flight == 1
+    eng.flush()
+    assert eng.telemetry("stub").in_flight == 0
+
+
+# ----------------------------------------------------------------------
+# resize_lane: live slot-count changes.
+# ----------------------------------------------------------------------
+
+def test_resize_grow_and_shrink_semantics():
+    eng = _stub_engine(4)
+    handles = {s: eng.open(stream_id=s) for s in "abcd"}
+    for h in handles.values():
+        for _ in range(3):
+            h.submit(object())
+    out = eng.step()                         # a..d each hold a slot
+    assert eng.resize_lane(slots=4) == []    # no-op resize
+    evicted = eng.resize_lane(slots=2)
+    assert evicted == ["c", "d"]             # slot order past the cut
+    lane = eng._lanes["stub"]
+    assert len(lane.slots) == 2 and lane.slots == ["a", "b"]
+    # Evicted streams rejoin the FRONT of the line in slot order: they
+    # were being served and outrank never-slotted arrivals.
+    eng.open(stream_id="e").submit(object())
+    assert list(lane.waiting)[:2] == ["c", "d"]
+    evicted = eng.resize_lane(slots=5)
+    assert evicted == [] and len(lane.slots) == 5
+    out.extend(eng.run())
+    # Nothing lost across either resize: every submitted window served.
+    assert len(out) == 13
+    with pytest.raises(ValueError, match=">= 1"):
+        eng.resize_lane(slots=0)
+
+
+def test_resize_prewarms_new_batch_size_through_aot_cache():
+    stub = WarmStub()
+    eng = _stub_engine(2, engine=stub)
+    eng.open(stream_id="a").submit(object())
+    eng.run()                                # compiles (2,)
+    eng.resize_lane(slots=4)
+    assert stub.warmed == [((4,),)]          # re-keyed old count only
+    eng.resize_lane(slots=2, warm=False)
+    assert stub.warmed == [((4,),)]          # warm=False skips
+    eng.resize_lane(slots=4)
+    assert stub.warmed == [((4,),)]          # already compiled: no call
+
+
+def test_resize_safe_with_other_steps_in_flight():
+    """Pipelined: results dispatched before a resize collect correctly
+    after it (collection is positional into the dispatched batch)."""
+    eng = _stub_engine(2, pipeline_depth=2)
+    handles = [eng.open(stream_id=f"s{i}") for i in range(2)]
+    for h in handles:
+        for _ in range(4):
+            h.submit(object())
+    eng.step()
+    eng.step()                               # two steps in flight
+    eng.resize_lane(slots=4)
+    out = eng.run()
+    got = sorted((r.stream_id, r.seq) for r in out)
+    assert got == sorted((f"s{i}", k) for i in range(2) for k in range(4))
+
+
+# ----------------------------------------------------------------------
+# drain_lane: the live-migration primitive.
+# ----------------------------------------------------------------------
+
+def test_drain_lane_collects_one_lane_only():
+    class Stub2(StubEngine):
+        modality = "stub2"
+
+    eng = StreamEngine(engines=[StubEngine(), Stub2()],
+                       config=EngineConfig(max_streams=1,
+                                           pipeline_depth=2))
+    a = eng.open("stub", stream_id="a")
+    b = eng.open("stub2", stream_id="b")
+    for _ in range(2):
+        a.submit(object())
+        b.submit(object())
+    eng.step()
+    eng.step()                       # two steps, each with both lanes
+    drained = eng.drain_lane("stub")
+    assert [(r.stream_id, r.seq) for r in drained] == [("a", 0), ("a", 1)]
+    # The other lane's dispatched work stays in flight, in order.
+    assert eng.in_flight == 2
+    rest = eng.flush()
+    assert [(r.stream_id, r.seq) for r in rest] == [("b", 0), ("b", 1)]
+
+
+def test_checkpoint_live_where_plain_checkpoint_refuses():
+    eng = _stub_engine(1, pipeline_depth=1)
+    h = eng.open(stream_id="s")
+    for _ in range(3):
+        h.submit(object())
+    eng.step()                       # one window in flight
+    with pytest.raises(ValueError, match="in-flight"):
+        h.checkpoint()
+    ckpt, displaced = checkpoint_live(h)
+    assert [r.seq for r in displaced] == [0]
+    assert ckpt.next_seq == 3 and [q[1] for q in ckpt.queued] == [1, 2]
+
+
+# ----------------------------------------------------------------------
+# CheckpointStore (satellite: round-trips + single-use restore).
+# ----------------------------------------------------------------------
+
+def test_store_put_get_delete_round_trip():
+    store = CheckpointStore()
+    ckpt = _ckpt(queued=(("window-0", 0, None),))
+    cid = store.put(ckpt)
+    assert cid in store and len(store) == 1 and store.ids() == [cid]
+    got = store.get(ckpt_id=cid)
+    assert got == ckpt and got is not ckpt          # a fresh copy
+    assert store.get(cid) is not got                # every get is fresh
+    assert store.delete(cid) is True
+    assert store.delete(cid) is False and cid not in store
+    with pytest.raises(KeyError):
+        store.get(cid)
+    # Explicit ids work; reuse of a live id is rejected.
+    assert store.put(_ckpt(), ckpt_id="mine") == "mine"
+    with pytest.raises(ValueError, match="already used"):
+        store.put(_ckpt(), ckpt_id="mine")
+
+
+def test_store_proves_serializability_at_put():
+    store = CheckpointStore()
+    with pytest.raises(Exception):
+        store.put(_ckpt(queued=((lambda: None, 0, None),)))
+    assert len(store) == 0
+
+
+def test_store_rejects_double_restore():
+    src, dst1, dst2 = _stub_engine(1), _stub_engine(1), _stub_engine(1)
+    h = src.open(stream_id="s")
+    for _ in range(2):
+        h.submit(object())
+    src.step()
+    store = CheckpointStore()
+    cid = store.put(h.checkpoint())
+    new = store.restore_into(dst1, cid)
+    assert new.stream_id == "s" and new.queued == 1
+    assert [r.seq for r in dst1.run()] == [1]
+    # The id is consumed: a second restore would fork the stream.
+    with pytest.raises(ValueError, match="single-use"):
+        store.restore_into(dst2, cid)
+    with pytest.raises(ValueError, match="single-use"):
+        store.get(cid)
+    with pytest.raises(ValueError, match="already used"):
+        store.put(_ckpt(), ckpt_id=cid)
+
+
+def test_store_failed_restore_keeps_checkpoint():
+    src, dst = _stub_engine(1), _stub_engine(1)
+    h = src.open(stream_id="s")
+    h.submit(object())
+    store = CheckpointStore()
+    cid = store.put(h.checkpoint())
+    dst.open(stream_id="s")          # occupy the id on the target
+    with pytest.raises(ValueError):
+        store.restore_into(dst, cid)
+    assert cid in store              # not consumed by the failure
+    got = store.restore_into(dst, cid, stream_id="s2")
+    assert got.stream_id == "s2" and cid not in store
+
+
+# ----------------------------------------------------------------------
+# LaneAutoscaler.
+# ----------------------------------------------------------------------
+
+def test_autoscaler_grows_on_sustained_backlog_only():
+    eng = _stub_engine(2)
+    asc = LaneAutoscaler(eng, config=FleetConfig(
+        grow_backlog=2.0, grow_patience=2, max_slots=8))
+    for i in range(2):
+        h = eng.open(stream_id=f"s{i}")
+        for _ in range(3):
+            h.submit(object())
+    assert asc.observe().action == "hold"    # first over-threshold tick
+    decision = asc.observe()                 # sustained: grow fires
+    assert decision.action == "grow"
+    assert (decision.old_slots, decision.new_slots) == (2, 4)
+    assert eng.telemetry().slots == 4
+    assert asc.decisions == [decision]
+
+
+def test_autoscaler_blip_resets_patience():
+    eng = _stub_engine(2)
+    asc = LaneAutoscaler(eng, config=FleetConfig(grow_backlog=2.0,
+                                                 grow_patience=2))
+    h = eng.open(stream_id="s")
+    for _ in range(4):
+        h.submit(object())
+    assert asc.observe().action == "hold"    # backlogged once
+    eng.run()                                # backlog clears: a blip
+    assert asc.observe().action == "hold"
+    for _ in range(4):
+        h.submit(object())
+    assert asc.observe().action == "hold"    # streak restarted at 1
+    assert asc.observe().action == "grow"
+
+
+def test_autoscaler_shrinks_on_idle_and_respects_bounds():
+    eng = _stub_engine(8)
+    asc = LaneAutoscaler(eng, config=FleetConfig(
+        shrink_patience=2, min_slots=2, max_slots=8))
+    assert asc.observe().action == "hold"
+    assert asc.observe().action == "shrink"
+    assert eng.telemetry().slots == 4
+    asc.observe()
+    assert asc.observe().new_slots == 2
+    # Floor: min_slots holds no matter how long the lane idles.
+    for _ in range(6):
+        decision = asc.observe()
+    assert decision.action == "hold" and eng.telemetry().slots == 2
+    # And a busy lane is never "idle", whatever its occupancy.
+    h = eng.open(stream_id="s")
+    h.submit(object())
+    asc._shrink_streak = 99
+    assert asc.observe().action == "hold"
+
+
+# ----------------------------------------------------------------------
+# migrate_stream + FleetRebalancer (stub level).
+# ----------------------------------------------------------------------
+
+def test_migrate_stream_moves_queue_and_displaced_results():
+    src = _stub_engine(1, pipeline_depth=1)
+    dst = _stub_engine(1)
+    h = src.open(stream_id="mig")
+    other = src.open(stream_id="other")
+    for _ in range(3):
+        h.submit(object())
+        other.submit(object())
+    src.step()                       # one step in flight (mig slotted)
+    store = CheckpointStore()
+    record = migrate_stream(h, dst, store=store)
+    assert record.stream_id == "mig" and record.ckpt_id is not None
+    assert record.migration_ms > 0.0
+    assert h.closed and dst.has_stream("mig")
+    # The drain's early results belong to the caller.
+    assert {r.stream_id for r in record.displaced} == {"mig"}
+    # Remaining windows continue on the target with their seq numbers.
+    served = [r.seq for r in dst.run() if r.stream_id == "mig"]
+    displaced = [r.seq for r in record.displaced]
+    assert sorted(displaced + served) == [0, 1, 2]
+    # The source keeps serving its other streams.
+    assert [r.stream_id for r in src.run()] == ["other"] * 3
+
+
+def test_rebalancer_moves_hot_to_cold_with_hysteresis():
+    hot, cold = _stub_engine(1), _stub_engine(4)
+    streams = [hot.open(stream_id=f"h{i}") for i in range(3)]
+    for h in streams:
+        for _ in range(4):
+            h.submit(object())
+    reb = FleetRebalancer(
+        {"hot": hot, "cold": cold},
+        config=FleetConfig(imbalance=1.0, cooldown=2, miss_weight=0.0))
+    report = reb.observe()
+    assert report.migrated
+    [record] = report.moved
+    assert record.stream_id.startswith("h")
+    assert cold.has_stream(record.stream_id)
+    assert not hot.has_stream(record.stream_id)
+    assert report.loads["hot"] > report.loads["cold"]
+    # Cooldown: the next ticks hold even though the gap persists.
+    assert not reb.observe().migrated
+    assert not reb.observe().migrated
+    assert reb.observe().migrated        # cooldown elapsed
+    assert len(reb.migrations) == 2
+
+
+def test_rebalancer_dead_band_prevents_thrash():
+    a, b = _stub_engine(2), _stub_engine(2)
+    ha = a.open(stream_id="a")
+    ha.submit(object())
+    reb = FleetRebalancer({"a": a, "b": b},
+                          config=FleetConfig(imbalance=1.0))
+    report = reb.observe()               # gap 0.5 <= dead-band 1.0
+    assert not report.migrated and "balanced" in report.reason
+    assert len(reb.migrations) == 0
+    with pytest.raises(ValueError, match=">= 2 engines"):
+        FleetRebalancer({"a": a})
+
+
+# ----------------------------------------------------------------------
+# Real-engine bitwise contracts: resize and live migration never change
+# a stream's served windows vs an uninterrupted scan.
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cfg():
+    return SNNConfig(height=32, width=32, time_bins=4, conv1_features=4,
+                     conv2_features=8, hidden=32, num_classes=11)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_snn(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.mark.parametrize("depth", [0, 1], ids=["sync", "pipelined"])
+def test_resize_mid_stream_is_bitwise(cfg, params, depth):
+    """Grow then shrink a lane mid-serve: every stateful stream's windows
+    stay bitwise-identical to one uninterrupted scan (the carry is
+    parked across the resize, evicted streams resume correctly)."""
+    streams = {f"s{i}": _windows(4, seed=60 + i) for i in range(3)}
+    ids, per_window = _uninterrupted_oracle(params, cfg, streams)
+    eng = StreamEngine(params, cfg, EngineConfig(max_streams=2,
+                                                 pipeline_depth=depth))
+    handles = {sid: eng.open(stream_id=sid, stateful=True)
+               for sid in sorted(streams)}
+    for k in range(4):
+        for sid in sorted(streams):
+            handles[sid].submit(streams[sid][k])
+    out = [*eng.step(), *eng.step()]
+    eng.resize_lane(slots=4)          # grow mid-serve
+    out.extend(eng.step())
+    evicted = eng.resize_lane(slots=2)    # shrink: evicts live streams
+    assert isinstance(evicted, list)
+    out.extend(eng.run())
+    assert len(out) == 12
+    _assert_matches_oracle(out, ids, per_window)
+
+
+@pytest.mark.parametrize("depth", [0, 1], ids=["sync", "pipelined"])
+def test_live_migration_is_bitwise(cfg, params, depth):
+    """migrate_stream mid-serve (windows in flight when pipelined): the
+    stream's windows across source + target engines equal one
+    uninterrupted scan, and the store round-trip is the transport."""
+    streams = {"mig": _windows(4, seed=70), "stay": _windows(4, seed=71)}
+    ids, per_window = _uninterrupted_oracle(params, cfg, streams)
+    src = StreamEngine(params, cfg, EngineConfig(max_streams=2,
+                                                 pipeline_depth=depth))
+    dst = StreamEngine(params, cfg, EngineConfig(max_streams=2))
+    handles = {sid: src.open(stream_id=sid, stateful=True)
+               for sid in sorted(streams)}
+    for k in range(4):
+        for sid in sorted(streams):
+            handles[sid].submit(streams[sid][k])
+    out = [*src.step(), *src.step()]
+    record = migrate_stream(handles["mig"], dst, store=CheckpointStore())
+    out.extend(record.displaced)
+    out.extend(src.run())
+    out.extend(dst.run())
+    assert len(out) == 8
+    assert {r.seq for r in out if r.stream_id == "mig"} == {0, 1, 2, 3}
+    _assert_matches_oracle(out, ids, per_window)
+
+
+def test_store_restore_across_device_counts(tmp_path):
+    """A store written on a 1-device engine restores on a 2-device
+    sharded engine bitwise (satellite: different-device-count restore
+    goes through the store, and the consumed id stays rejected)."""
+    from test_sharded_engine import _run_sub
+    store_file = tmp_path / "store.pkl"
+    _run_sub(f"""
+        import pickle
+        from repro.fleet import CheckpointStore
+        ws = windows(4, seed=81)
+        ref = StreamEngine(PARAMS, CFG, EngineConfig(max_streams=2))
+        h = ref.open(stream_id="mig", stateful=True)
+        for w in ws:
+            h.submit(w)
+        want = {{r.seq: np.asarray(r.result.logits) for r in ref.run()}}
+        src = StreamEngine(PARAMS, CFG, EngineConfig(max_streams=2))
+        hs = src.open(stream_id="mig", stateful=True)
+        hs.submit(ws[0]); hs.submit(ws[1])
+        src.run()
+        store = CheckpointStore()
+        cid = store.put(hs.checkpoint())
+        with open({str(store_file)!r}, "wb") as f:
+            pickle.dump((store, cid, want), f)
+        print("OK")
+    """, devices=1)
+    _run_sub(f"""
+        import pickle
+        with open({str(store_file)!r}, "rb") as f:
+            store, cid, want = pickle.load(f)
+        ws = windows(4, seed=81)
+        eng = StreamEngine(
+            PARAMS, CFG,
+            EngineConfig(max_streams=2, mesh=make_mesh(2)))
+        h = store.restore_into(eng, cid)
+        h.submit(ws[2]); h.submit(ws[3])
+        got = {{r.seq: np.asarray(r.result.logits) for r in eng.run()}}
+        assert set(got) == {{2, 3}}, sorted(got)
+        for k in (2, 3):
+            np.testing.assert_array_equal(got[k], want[k], err_msg=str(k))
+        try:
+            store.restore_into(eng, cid)
+        except ValueError as e:
+            assert "single-use" in str(e), e
+        else:
+            raise AssertionError("double restore accepted")
+        print("OK")
+    """, devices=2)

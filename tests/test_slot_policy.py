@@ -235,6 +235,74 @@ def test_deadline_aging_counts_rounds_not_slot_fills():
     assert waited and max(waited) == 1      # one round -> aged once
 
 
+def test_deadline_bookkeeping_survives_resize():
+    """A lane resize (the fleet autoscaler's move) must not disturb the
+    policy's aging/anti-starvation bookkeeping: waiting streams keep
+    their counters, evicted streams rejoin the line and age normally,
+    and retire() still forgets them (the PR 6 forget regression,
+    extended to cover resize)."""
+    policy = DeadlinePolicy(max_wait=16)
+    eng = _stub_engine(2, policy=policy)
+    for sid, dl in (("a", 1.0), ("b", 2.0), ("aged", 9.0)):
+        for _ in range(4):
+            eng.submit(sid, object(), deadline=dl)
+    eng.step()                          # a,b slotted; "aged" aged once
+    assert policy._waited["aged"] == 1
+    evicted = eng.resize_lane(slots=1)
+    assert evicted == ["b"]
+    # The shrink touched no policy state: the counter survived.
+    assert policy._waited["aged"] == 1
+    eng.step()                          # "aged" and evicted "b" both wait
+    assert policy._waited["aged"] == 2
+    assert policy._waited["b"] == 1
+    eng.resize_lane(slots=4)            # grow: counters still intact
+    assert policy._waited["aged"] == 2
+    # Retiring the evicted stream still releases its bookkeeping.
+    eng.retire("b")
+    assert "b" not in policy._waited
+    eng.run()
+    assert not policy._waited
+
+
+def test_deadline_aged_stream_wins_slot_freed_by_grow():
+    """Growing a lane serves the passed-over stream immediately: its
+    aging counter is consumed by winning the new slot, exactly as if the
+    slot had been freed by rotation."""
+    policy = DeadlinePolicy()
+    eng = _stub_engine(1, policy=policy)
+    for _ in range(2):
+        eng.submit("hog", object(), deadline=0.0)
+    eng.submit("aged", object(), deadline=5.0)
+    eng.step()
+    assert policy._waited["aged"] == 1
+    eng.resize_lane(slots=2)
+    served = {r.stream_id for r in eng.step()}
+    assert served == {"hog", "aged"}
+    assert "aged" not in policy._waited
+
+
+def test_deadline_max_wait_bound_holds_across_resizes():
+    """The hard anti-starvation bound keeps counting across slot-count
+    changes: an undeadlined stream aged past max_wait is served next
+    even though every resize reshuffled the slots around it."""
+    policy = DeadlinePolicy(fair_quantum=2, max_wait=4)
+    eng = _stub_engine(1, policy=policy)
+    eng.submit("slack", object())               # no deadline
+    served_slack = False
+    for step_i in range(30):
+        eng.submit("urgent", object(), deadline=0.0)
+        if step_i in (3, 7):                    # churn the capacity
+            eng.resize_lane(slots=2)
+        elif step_i in (5, 9):
+            eng.resize_lane(slots=1)
+        for r in eng.step():
+            if r.stream_id == "slack":
+                served_slack = True
+        if served_slack:
+            break
+    assert served_slack, "resize churn starved the undeadlined stream"
+
+
 def test_fair_quantum_and_policy_mutually_exclusive():
     with pytest.raises(ValueError):
         _stub_engine(1, policy=DeadlinePolicy(), fair_quantum=2)

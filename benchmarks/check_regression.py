@@ -31,6 +31,15 @@ baseline with the runner-independent sharded-vs-single-device ratio as
 the fallback -- forced host devices time-slice one CPU, so the ratio
 measures sharded-step *overhead* (it must not collapse), not scaling.
 
+The ``fault_rows`` cell (recovery-enabled serving at injected fault-rate
+0 vs 5%) splits the same way as ``fleet_rows``: the retry/quarantine
+counters come off a seeded injector drawing in call order, so they are
+DETERMINISTIC on any runner and enforced on the FRESH artifact alone
+(at least one retry at 5%, zero recovery events at 0%, bounded median
+recovery ticks); the wall-clock side -- faulted windows/s -- is gated
+against the baseline with the runner-independent faulted-over-clean
+ratio as the fallback. A fresh run missing the cell FAILS.
+
 The ``fleet_rows`` cell (static vs rebalanced two-engine fleet) splits
 in two. Its deadline-miss rates are measured on a logical clock, so
 ``rebalanced_miss_rate <= static_miss_rate`` (with at least one real
@@ -98,6 +107,9 @@ def main(argv=None) -> int:
     ap.add_argument("--stateful-ratio-floor", type=float, default=0.95,
                     help="hard floor on fresh stateful/stateless "
                          "throughput (runner-independent)")
+    ap.add_argument("--recovery-ticks-max", type=float, default=8.0,
+                    help="bound on the fault cell's median recovery "
+                         "cost in engine steps (deterministic)")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
@@ -234,6 +246,49 @@ def main(argv=None) -> int:
                 float(lbase["rebalanced_over_static"]),
                 float(lfresh["rebalanced_over_static"]),
                 "rebalanced-over-static ratio", args.tolerance)
+
+    # The fault-tolerance cell: same transition policy (missing fresh
+    # FAIL, missing baseline WARN). The recovery counters are seeded
+    # and step-counted (deterministic on any runner), so the
+    # faults-were-exercised checks need only the FRESH run and are
+    # enforced unconditionally; the throughput gate is
+    # baseline-relative with the faulted-over-clean ratio (both sides
+    # off the same machine) as the runner-independent fallback.
+    if "fault_rows" not in fresh_doc:
+        print("FAIL: fresh artifact has no fault_rows cell")
+        ok = False
+    else:
+        tfresh = fresh_doc["fault_rows"][0]
+        rate = float(tfresh["fault_rate"])
+        retries = int(tfresh["retries"])
+        rec_ticks = float(tfresh["recovery_ticks_median"])
+        if retries < 1:
+            print(f"FAIL: fault cell at rate {rate:g} recorded no "
+                  f"retries -- the injector never engaged the recovery "
+                  f"layer (vacuous cell)")
+            ok = False
+        elif rec_ticks > args.recovery_ticks_max:
+            print(f"FAIL: median recovery cost {rec_ticks:.1f} engine "
+                  f"steps > bound {args.recovery_ticks_max:.1f} -- "
+                  f"retried windows take too long to land")
+            ok = False
+        else:
+            print(f"OK: fault cell exercised {retries} retries at rate "
+                  f"{rate:g}, median recovery {rec_ticks:.1f} steps "
+                  f"(<= {args.recovery_ticks_max:.1f})")
+        if "fault_rows" not in base_doc:
+            print("WARN: baseline has no fault_rows cell (predates the "
+                  "fault-tolerance layer); skipping the fault "
+                  "throughput gate -- refresh the baseline")
+        else:
+            tbase = base_doc["fault_rows"][0]
+            ok &= _gate(
+                f"faulted windows/s @ rate={rate:g}",
+                float(tbase["faulted_windows_per_s"]),
+                float(tfresh["faulted_windows_per_s"]),
+                float(tbase["faulted_over_clean"]),
+                float(tfresh["faulted_over_clean"]),
+                "faulted-over-clean ratio", args.tolerance)
 
     return 0 if ok else 1
 

@@ -15,7 +15,9 @@ the same artifact; ``fusion_rows`` adds the cross-modal fusion cell
 the two wings on separate engines); ``fleet_rows`` adds the fleet
 control-plane cell (deadline-miss rate of a skewed two-engine fleet
 with vs without the telemetry-driven rebalancer, plus live-migration
-cost in ms). ``hetero_rows`` measures the two
+cost in ms); ``fault_rows`` adds the fault-tolerance cell (stateful
+throughput at injected fault-rate 0 vs 5%, retry/quarantine counters,
+median recovery cost in engine steps). ``hetero_rows`` measures the two
 accelerator wings through the unified engine protocol -- event-SNN vs
 frame-TCN throughput, alone and mixed in one engine -- and writes
 ``BENCH_hetero.json``.
@@ -718,11 +720,119 @@ def sharded_rows(device_counts=(1, 2, 4), slots=8, windows_per_stream=8,
     return rows
 
 
+def fault_rows(streams=2, windows_per_stream=8, fault_rate=0.05,
+               repeats=REPEATS, out_json="BENCH_stream.json"):
+    """Fault-tolerance cell: stateful serving throughput with the
+    recovery layer on, at injected fault-rate 0 vs ``fault_rate``
+    (seeded step errors through a :class:`~repro.fleet.faults.
+    FaultInjector`), plus the median recovery cost in engine steps.
+
+    The fault schedule is seeded and drawn in call order, and backoff
+    counts logical engine steps, so the retry/quarantine counters and
+    recovery-tick metrics are DETERMINISTIC on any runner -- the
+    regression gate enforces them on the fresh artifact alone (>=1
+    retry at 5%%, zero recovery events at 0%%). Wall-clock throughput
+    follows the usual methodology (warmup, medians of ``repeats``),
+    with the faulted-over-clean ratio as the runner-independent
+    fallback. Appended to the ``stream_rows`` artifact under
+    ``fault_rows``."""
+    from repro.core._api import FaultConfig, RecoveryConfig
+    from repro.fleet import FaultInjector
+
+    cfg = SNNConfig(height=32, width=32, time_bins=8, conv1_features=4,
+                    conv2_features=8, hidden=32, num_classes=11)
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    windows = {
+        s: [ev.synthetic_gesture_events(rng, (s + k) % 11,
+                                        mean_events=3000,
+                                        height=32, width=32)
+            for k in range(windows_per_stream)]
+        for s in range(streams)
+    }
+    n_total = streams * windows_per_stream
+    config = EngineConfig(
+        max_streams=streams,
+        recovery=RecoveryConfig(max_retries=4, backoff_steps=1,
+                                dead_after=100))
+
+    def serve(rate):
+        inj = FaultInjector(FaultConfig(seed=7, step_error_rate=rate))
+        eng = StreamEngine(
+            engines=[inj.wrap(BatchedClosedLoop.from_config(
+                params, cfg, config))],
+            config=config)
+        handles = {s: eng.open(modality="event", stream_id=s,
+                               stateful=True)
+                   for s in range(streams)}
+        for s in range(streams):
+            for w in windows[s]:
+                handles[s].submit(w)
+        # landed[(sid, seq)] = engine step at which the result emitted;
+        # with the fault_log's per-failure steps this yields the
+        # recovery cost of every retried window in logical steps.
+        landed, step = {}, 0
+        t0 = time.perf_counter()
+        while eng.pending() or eng._inflight:
+            step += 1
+            for r in eng.step():
+                if r.ok:
+                    landed[(r.stream_id, r.seq)] = step
+        wall = time.perf_counter() - t0
+        assert len(landed) == n_total       # no quarantine at this seed
+        first_fail = {}
+        for f in eng.fault_log:
+            if f["kind"] == "retry":
+                first_fail.setdefault((f["stream"], f["seq"]), f["step"])
+        recovery = [landed[k] - s for k, s in first_fail.items()]
+        tel = eng.telemetry("event")
+        return (n_total / wall, tel.retries, tel.quarantined,
+                float(np.median(recovery)) if recovery else 0.0)
+
+    serve(0.0)                       # warm-up: compile
+    s_clean, s_fault = [], []
+    retries = quarantined = 0
+    recovery_ticks = 0.0
+    for _ in range(repeats):
+        wps, r0, q0, _ = serve(0.0)
+        s_clean.append(wps)
+        assert r0 == 0 and q0 == 0   # rate 0 engages no recovery
+        wps, retries, quarantined, recovery_ticks = serve(fault_rate)
+        s_fault.append(wps)
+
+    wps_clean = float(np.median(s_clean))
+    wps_fault = float(np.median(s_fault))
+    ratio = wps_fault / wps_clean
+    rows = [(f"fault_recovery_r{fault_rate:g}", 1e6 / wps_fault,
+             f"clean_wps={wps_clean:.1f};faulted_wps={wps_fault:.1f};"
+             f"retries={retries};recovery_ticks={recovery_ticks:.1f}")]
+    artifact = [{"streams": streams,
+                 "windows_per_stream": windows_per_stream,
+                 "fault_rate": fault_rate,
+                 "clean_windows_per_s": wps_clean,
+                 "faulted_windows_per_s": wps_fault,
+                 "faulted_over_clean": ratio,
+                 "retries": int(retries),
+                 "quarantined": int(quarantined),
+                 "recovery_ticks_median": recovery_ticks}]
+    if out_json:
+        try:
+            with open(out_json) as f:
+                doc = json.load(f)
+        except FileNotFoundError:
+            doc = {"benchmark": "stream_closed_loop"}
+        doc["fault_rows"] = artifact
+        with open(out_json, "w") as f:
+            json.dump(doc, f, indent=2)
+    return rows
+
+
 def main():
     for name, us, derived in (lif_rows() + ternary_rows() + fc_fusion_rows()
                               + stream_rows() + stateful_rows()
                               + fusion_rows() + fleet_rows()
-                              + hetero_rows() + sharded_rows()):
+                              + hetero_rows() + sharded_rows()
+                              + fault_rows()):
         print(f"{name},{us:.1f},{derived}")
 
 

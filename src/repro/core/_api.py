@@ -26,8 +26,99 @@ import dataclasses
 import warnings
 from typing import Any, Mapping, Optional, Union
 
-__all__ = ["EngineConfig", "FleetConfig", "suppress_api_deprecations",
-           "warn_deprecated_call"]
+__all__ = ["EngineConfig", "FleetConfig", "FaultConfig", "RecoveryConfig",
+           "suppress_api_deprecations", "warn_deprecated_call"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryConfig:
+    """Fault-recovery policy for a serving engine, in one frozen value.
+
+    Attached as ``EngineConfig.recovery``; with the default ``None`` the
+    engine keeps its pre-recovery semantics bitwise (an engine exception
+    propagates, non-finite outputs are served as-is). With a config set:
+
+      * ``max_retries`` -- how many times one window may fail an engine
+        step before it is quarantined to the lane's dead-letter queue
+        (its ``StreamResult`` is emitted with ``status="failed"`` and
+        the stream's carry rolls back to its pre-window value).
+      * ``backoff_steps`` -- engine steps a lane sits out after a failed
+        step before it is dispatched again. Measured in steps, not wall
+        time, so recovery schedules are deterministic and replayable.
+      * ``dead_after`` -- consecutive failed lane steps after which the
+        lane is declared dead: it stops calling its engine and fails
+        queued windows fast (keeping paired fusion ticks completing,
+        degraded) until ``replace_lane_engine`` swaps a rebuilt engine
+        in.
+      * ``checkpoint_every`` -- the :class:`~repro.fleet.supervisor.
+        LaneSupervisor` auto-checkpoint cadence, in supervisor ticks.
+      * ``quarantine_nonfinite`` -- treat non-finite logits as poison:
+        the window is quarantined immediately (no retry -- NaNs are
+        deterministic, a retry would just recompute them).
+    """
+
+    max_retries: int = 2
+    backoff_steps: int = 1
+    dead_after: int = 4
+    checkpoint_every: int = 4
+    quarantine_nonfinite: bool = True
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries}")
+        if self.backoff_steps < 0:
+            raise ValueError(
+                f"backoff_steps must be >= 0, got {self.backoff_steps}")
+        if self.dead_after < 1:
+            raise ValueError(
+                f"dead_after must be >= 1, got {self.dead_after}")
+        if self.checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1, got "
+                f"{self.checkpoint_every}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """A deterministic fault schedule for the
+    :class:`~repro.fleet.faults.FaultInjector`.
+
+    Rates are per *injection site visit* (one engine call), drawn from a
+    ``numpy`` generator seeded with ``seed`` in call order -- the same
+    seed over the same workload replays the same faults, which is what
+    makes the chaos soak assertable.
+
+      * ``step_error_rate`` -- probability an engine call raises
+        :class:`~repro.fleet.faults.InjectedFault` (surfacing at
+        dispatch in synchronous mode, at collect in pipelined mode).
+      * ``nan_rate`` -- probability a returned batch has one slot's
+        logits poisoned with NaN (the quarantine path).
+      * ``stall_rate`` / ``stall_ms`` -- probability an engine call
+        stalls for ``stall_ms`` wall milliseconds (a straggler, not an
+        error: surfaces as deadline misses, never as an exception).
+      * ``modalities`` -- restrict injection to these modalities
+        (``None`` = every wrapped engine).
+    """
+
+    seed: int = 0
+    step_error_rate: float = 0.0
+    nan_rate: float = 0.0
+    stall_rate: float = 0.0
+    stall_ms: float = 1.0
+    modalities: Optional[tuple] = None
+
+    def __post_init__(self):
+        for name in ("step_error_rate", "nan_rate", "stall_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        if self.stall_ms < 0.0:
+            raise ValueError(
+                f"stall_ms must be >= 0, got {self.stall_ms}")
+        if self.modalities is not None:
+            object.__setattr__(self, "modalities",
+                               tuple(self.modalities))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +147,11 @@ class EngineConfig:
         slot axis over the mesh's data axis, one collective-free jit'd
         step per lane across all devices, bitwise-identical to the
         single-device engine.
+      * ``recovery`` -- a :class:`RecoveryConfig` opting the engine
+        into fault recovery (bounded retry with deterministic backoff,
+        poison-window quarantine, dead-lane fail-fast). ``None`` (the
+        default) keeps the pre-recovery failure semantics bitwise: an
+        engine exception propagates to the caller.
 
     Frozen: a config is a value, shareable between engines and safe to
     put in tests' parametrize tables. ``replace`` derives variants
@@ -70,8 +166,14 @@ class EngineConfig:
     fuse_fc: bool = False
     window_ms: float = 300.0
     mesh: Optional[Any] = None             # jax.sharding.Mesh
+    recovery: Optional["RecoveryConfig"] = None
 
     def __post_init__(self):
+        if self.recovery is not None and not isinstance(
+                self.recovery, RecoveryConfig):
+            raise TypeError(
+                f"recovery must be a RecoveryConfig, got "
+                f"{type(self.recovery).__name__}")
         if self.pipeline_depth < 0:
             raise ValueError(
                 f"pipeline_depth must be >= 0, got {self.pipeline_depth}")
@@ -115,6 +217,10 @@ class FleetConfig:
       * ``cooldown`` -- observation ticks after a migration during which
         the rebalancer holds still, letting the moved load register in
         both engines' telemetry before it re-evaluates (anti-thrash).
+      * ``fault_weight`` -- how many queued-windows-per-slot one unit of
+        fault rate (retries + quarantines per completed window) is worth
+        in the load score; a dead lane additionally scores a flat
+        ``fault_weight`` penalty, so the rebalancer evacuates it.
     """
 
     grow_backlog: float = 2.0
@@ -127,6 +233,7 @@ class FleetConfig:
     miss_weight: float = 10.0
     imbalance: float = 1.0
     cooldown: int = 4
+    fault_weight: float = 5.0
 
     def __post_init__(self):
         if self.min_slots < 1:
@@ -149,6 +256,9 @@ class FleetConfig:
                 f"{self.shrink_occupancy}")
         if self.imbalance < 0.0 or self.miss_weight < 0.0:
             raise ValueError("imbalance and miss_weight must be >= 0")
+        if self.fault_weight < 0.0:
+            raise ValueError(
+                f"fault_weight must be >= 0, got {self.fault_weight}")
         if self.cooldown < 0:
             raise ValueError(f"cooldown must be >= 0, got {self.cooldown}")
 

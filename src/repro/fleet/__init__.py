@@ -22,20 +22,40 @@ control plane that drives them, in three cooperating pieces:
     and migrate streams hot-to-cold through the store, with an
     imbalance dead-band and a post-move cooldown so it never thrashes.
 
-Every knob lives in :class:`~repro.core._api.FleetConfig`; the serving
-layer stays policy-free. Ev-Edge (PAPERS.md) is the reference point for
+Fault tolerance rides the same surfaces:
+
+  * :class:`~repro.fleet.faults.FaultInjector` -- seeded, replayable
+    fault schedules (step errors, NaN poison, stalls, lane kills)
+    wrapped around any engine, so every recovery path is testable.
+  * :class:`~repro.fleet.supervisor.LaneSupervisor` -- journals
+    submissions, auto-checkpoints watched streams every K ticks into
+    the (capacity-bounded, LRU) :class:`CheckpointStore`, and on lane
+    death rebuilds the lane and restores+replays -- bitwise-identical
+    for every window ever reported successful.
+  * the rebalancer's load score charges ``fault_weight`` for a lane's
+    retry/quarantine churn (flat penalty when dead), so unhealthy
+    lanes shed load before they fail outright.
+
+Every knob lives in :class:`~repro.core._api.FleetConfig` (injection
+schedules in :class:`~repro.core._api.FaultConfig`); the serving layer
+stays policy-free. Ev-Edge (PAPERS.md) is the reference point for
 reactive scheduling on heterogeneous event platforms.
 """
-from repro.core._api import FleetConfig
+from repro.core._api import FaultConfig, FleetConfig
 from repro.fleet.autoscale import LaneAutoscaler, ScaleDecision
+from repro.fleet.faults import (FaultInjector, FaultyEngine, InjectedFault,
+                                LaneStall)
 from repro.fleet.migrate import MigrationRecord, checkpoint_live, migrate_stream
 from repro.fleet.rebalance import FleetRebalancer, RebalanceReport, load_score
 from repro.fleet.store import CheckpointStore
+from repro.fleet.supervisor import LaneSupervisor
 
 __all__ = [
-    "FleetConfig",
+    "FleetConfig", "FaultConfig",
     "LaneAutoscaler", "ScaleDecision",
+    "FaultInjector", "FaultyEngine", "InjectedFault", "LaneStall",
     "MigrationRecord", "checkpoint_live", "migrate_stream",
     "FleetRebalancer", "RebalanceReport", "load_score",
     "CheckpointStore",
+    "LaneSupervisor",
 ]

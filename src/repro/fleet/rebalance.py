@@ -11,11 +11,19 @@ hot-to-cold through the :class:`~repro.fleet.store.CheckpointStore`.
 The load score is deliberately simple and dimensionless::
 
     score = queued_windows / slots + miss_weight * deadline_miss_rate
+            + fault_weight * fault_rate          (+ fault_weight if dead)
 
 Backlog per slot measures *pressure* (how far behind the lane is per
 unit of capacity); the sliding-horizon miss rate measures *harm*
 (deadlines actually slipping, the thing the paper's closed-loop latency
 story cares about); ``miss_weight`` converts harm into pressure units.
+The fault terms make unhealthy lanes score hot: ``fault_rate`` is the
+lane's retries+quarantines per window attempt, and a dead lane takes a
+flat ``fault_weight`` penalty on top -- so the rebalancer drains load
+AWAY from a degrading engine before its streams start failing. A dead
+lane is additionally never chosen as a migration *target*, and a dead
+hot lane is left for the :class:`~repro.fleet.supervisor.LaneSupervisor`
+(migrating off it needs recovery, not a drain).
 
 Anti-thrash, twice over: the ``imbalance`` dead-band means small gaps
 are never acted on (a migration costs a lane drain and a restore), and
@@ -37,9 +45,14 @@ __all__ = ["FleetRebalancer", "RebalanceReport", "load_score"]
 
 
 def load_score(telemetry, config: FleetConfig) -> float:
-    """One lane's scalar load: backlog pressure + weighted miss harm."""
-    return (telemetry.backlog_per_slot
-            + config.miss_weight * telemetry.deadline_miss_rate)
+    """One lane's scalar load: backlog pressure + weighted miss harm
+    + weighted fault churn (+ a flat penalty for a dead lane)."""
+    score = (telemetry.backlog_per_slot
+             + config.miss_weight * telemetry.deadline_miss_rate
+             + config.fault_weight * getattr(telemetry, "fault_rate", 0.0))
+    if getattr(telemetry, "dead", False):
+        score += config.fault_weight
+    return score
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,23 +103,39 @@ class FleetRebalancer:
 
     def observe(self) -> RebalanceReport:
         """One control tick: score, compare, maybe migrate one stream."""
-        scores = self.loads()
+        tels = {eid: e.telemetry(self.modality)
+                for eid, e in self.engines.items()}
+        scores = {eid: load_score(t, self.config)
+                  for eid, t in tels.items()}
         if self._cooldown > 0:
             self._cooldown -= 1
             return RebalanceReport(
                 (), (), scores,
                 f"cooldown ({self._cooldown + 1} ticks left)")
         hot_id = max(scores, key=scores.__getitem__)
-        cold_id = min(scores, key=scores.__getitem__)
+        # A dead lane cannot accept a restore (its engine raises), so it
+        # is never a migration target -- even when it scores coldest.
+        alive = [eid for eid, t in tels.items()
+                 if not getattr(t, "dead", False)]
+        if not alive:
+            return RebalanceReport(
+                (), (), scores, "every lane is dead (supervisor's job)")
+        cold_id = min(alive, key=scores.__getitem__)
         gap = scores[hot_id] - scores[cold_id]
         if hot_id == cold_id or gap <= self.config.imbalance:
             return RebalanceReport(
                 (), (), scores,
                 f"balanced (gap {gap:.2f} <= "
                 f"dead-band {self.config.imbalance})")
+        if getattr(tels[hot_id], "dead", False):
+            # Draining a dead lane needs recovery (abort + rebuild),
+            # which is the LaneSupervisor's move, not a live migration.
+            return RebalanceReport(
+                (), (), scores,
+                f"hot lane {hot_id} is dead (supervisor's job)")
         hot = self.engines[hot_id]
         cold = self.engines[cold_id]
-        telemetry = hot.telemetry(self.modality)
+        telemetry = tels[hot_id]
         # The victim: the hot engine's deepest queue moves the most
         # pressure per migration. Skip streams with nothing queued
         # (moving them changes no score) and ids already open on the

@@ -19,10 +19,20 @@ enforced here rather than hoped for:
 The store is in-process (a dict of pickled blobs). That is deliberate:
 the serialization boundary is the contract, and a durable backend
 (file, object store) only has to replace ``_blobs``.
+
+``capacity`` bounds the store: auto-checkpointing
+(:class:`~repro.fleet.supervisor.LaneSupervisor` puts a fresh blob per
+watched stream every K ticks) must not grow it without bound, so a full
+store evicts its least-recently-used blob at ``put``. Every eviction
+drops an un-restored checkpoint -- consumed blobs are already gone --
+and is counted in ``stats["evicted"]``; a supervisor that later needs
+an evicted blob fails loudly, so size ``capacity`` to at least the
+watched-stream count.
 """
 from __future__ import annotations
 
 import pickle
+from collections import OrderedDict
 from typing import Dict, Hashable, List, Optional
 
 __all__ = ["CheckpointStore"]
@@ -30,12 +40,17 @@ __all__ = ["CheckpointStore"]
 
 class CheckpointStore:
     """Pickled :class:`~repro.serving.session.StreamCheckpoint` blobs
-    keyed by checkpoint id, with consumed-id tracking."""
+    keyed by checkpoint id, with consumed-id tracking and an optional
+    LRU capacity bound."""
 
-    def __init__(self):
-        self._blobs: Dict[str, bytes] = {}
+    def __init__(self, capacity: Optional[int] = None):
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._blobs: "OrderedDict[str, bytes]" = OrderedDict()
         self._consumed: set = set()
         self._count = 0
+        self.stats: Dict[str, int] = {"evicted": 0}
 
     def __len__(self) -> int:
         return len(self._blobs)
@@ -61,6 +76,14 @@ class CheckpointStore:
         if ckpt_id in self._blobs or ckpt_id in self._consumed:
             raise ValueError(f"checkpoint id {ckpt_id!r} already used")
         self._blobs[ckpt_id] = pickle.dumps(ckpt)
+        if self.capacity is not None:
+            while len(self._blobs) > self.capacity:
+                # LRU victim: least recently put/get blob. It was never
+                # restored (consumed blobs are already gone), so the
+                # eviction is recorded -- the signal a supervisor sizing
+                # its store too small will eventually trip over.
+                self._blobs.popitem(last=False)
+                self.stats["evicted"] += 1
         return ckpt_id
 
     def get(self, ckpt_id: str):
@@ -73,6 +96,7 @@ class CheckpointStore:
                 "the stream)")
         if ckpt_id not in self._blobs:
             raise KeyError(f"no checkpoint {ckpt_id!r} in store")
+        self._blobs.move_to_end(ckpt_id)
         return pickle.loads(self._blobs[ckpt_id])
 
     def delete(self, ckpt_id: str) -> bool:

@@ -8,8 +8,8 @@ from repro.serving.serve import ServeConfig, ServeStats, generate, quantize_for_
 from repro.serving.scheduler import BatchScheduler, Request
 from repro.serving.session import (FusionSession, StreamCheckpoint,
                                    late_logit_fusion)
-from repro.serving.stream import (DeadlinePolicy, EngineConfig,
+from repro.serving.stream import (DeadLetter, DeadlinePolicy, EngineConfig,
                                   FairQuantumPolicy, LaneTelemetry,
-                                  SlotPolicy, StreamEngine, StreamHandle,
-                                  StreamResult, StreamStats,
+                                  RecoveryConfig, SlotPolicy, StreamEngine,
+                                  StreamHandle, StreamResult, StreamStats,
                                   StreamStatsSnapshot)

@@ -123,6 +123,17 @@ class FusionSession:
     OTHER streams sharing the engine are never swallowed: they
     accumulate on ``unclaimed`` for the caller.
 
+    **Graceful degradation** (with ``EngineConfig.recovery`` set): a
+    wing's quarantined window or dead lane surfaces as a ``failed``
+    per-wing row, and the session emits a single-wing tick instead of
+    stalling -- ``status="degraded"``, carrying the surviving wing's
+    full result with the downed wing and its error noted in the
+    breakdown. Both wings failing a tick emits a ``failed`` row. Tick
+    pairing and ordering are preserved throughout (every tick emits
+    exactly one row, fused, degraded, or failed, in sequence order);
+    ``ticks_degraded``/``wing_failures`` count the damage and
+    :meth:`wing_health` snapshots per-wing liveness for telemetry.
+
     ``stateful=True`` opts both wings into carried state (the event
     wing's LIF membranes chain across ticks; the frame wing's carry is
     trivially empty), and ``checkpoint()`` / ``restore`` compose the
@@ -168,6 +179,9 @@ class FusionSession:
         self._pending = {"event": {}, "frame": {}}
         self._emit_next = 0
         self.ticks_fused = 0
+        self.ticks_degraded = 0
+        self.ticks_failed = 0
+        self.wing_failures = {"event": 0, "frame": 0}
         self.unclaimed: List[StreamResult] = []
 
     # -- submission ------------------------------------------------------
@@ -203,9 +217,9 @@ class FusionSession:
         foreign = []
         for r in results:
             if r.stream_id == self.event.stream_id:
-                self._pending["event"][r.seq] = r.result
+                self._pending["event"][r.seq] = r
             elif r.stream_id == self.frame.stream_id:
-                self._pending["frame"][r.seq] = r.result
+                self._pending["frame"][r.seq] = r
             else:
                 foreign.append(r)
         return foreign
@@ -214,18 +228,53 @@ class FusionSession:
         """Emit every buffered tick whose two halves have both landed,
         in tick order. ``step()``/``run()`` call this for you; call it
         directly when routing results between several sessions sharing
-        one engine (``other.absorb(...)`` then ``other.drain()``)."""
+        one engine (``other.absorb(...)`` then ``other.drain()``).
+
+        A tick with one failed wing emits degraded (the surviving
+        wing's result, flagged); both wings failed emits a failed row.
+        """
         out = []
         while (self._emit_next in self._pending["event"]
                and self._emit_next in self._pending["frame"]):
             e = self._pending["event"].pop(self._emit_next)
             f = self._pending["frame"].pop(self._emit_next)
-            out.append(StreamResult(
-                stream_id=self.session_id, seq=self._emit_next,
-                result=self._fuse(e, f), modality="fusion"))
+            out.append(self._emit_tick(e, f))
             self._emit_next += 1
-            self.ticks_fused += 1
         return out
+
+    def _emit_tick(self, e: StreamResult, f: StreamResult) -> StreamResult:
+        seq = self._emit_next
+        for wing, row in (("event", e), ("frame", f)):
+            if not row.ok:
+                self.wing_failures[wing] += 1
+        if e.ok and f.ok:
+            self.ticks_fused += 1
+            return StreamResult(
+                stream_id=self.session_id, seq=seq,
+                result=self._fuse(e.result, f.result), modality="fusion")
+        if e.ok or f.ok:
+            # Single-wing degraded tick: actuation continues on the
+            # surviving wing's full result, the downed wing is flagged
+            # in the breakdown, and the session does not stall.
+            ok_wing, ok_row = ("event", e) if e.ok else ("frame", f)
+            bad_wing, bad_row = ("frame", f) if e.ok else ("event", e)
+            self.ticks_degraded += 1
+            degraded = dataclasses.replace(
+                ok_row.result,
+                breakdown={**ok_row.result.breakdown,
+                           "degraded_wing": bad_wing,
+                           "surviving_wing": ok_wing,
+                           "wing_error": bad_row.error})
+            return StreamResult(
+                stream_id=self.session_id, seq=seq, result=degraded,
+                modality="fusion", status="degraded",
+                error=f"{bad_wing} wing failed: {bad_row.error}")
+        self.ticks_failed += 1
+        return StreamResult(
+            stream_id=self.session_id, seq=seq, result=None,
+            modality="fusion", status="failed",
+            error=(f"both wings failed: event: {e.error}; "
+                   f"frame: {f.error}"))
 
     def _fuse(self, e: ClosedLoopResult,
               f: ClosedLoopResult) -> ClosedLoopResult:
@@ -269,9 +318,28 @@ class FusionSession:
 
     @property
     def stats(self) -> dict:
-        """Per-wing accounting plus the fused-tick count."""
+        """Per-wing accounting plus the fused/degraded tick counts."""
         return {"event": self.event.stats, "frame": self.frame.stats,
-                "ticks_fused": self.ticks_fused}
+                "ticks_fused": self.ticks_fused,
+                "ticks_degraded": self.ticks_degraded,
+                "ticks_failed": self.ticks_failed,
+                "wing_failures": dict(self.wing_failures)}
+
+    def wing_health(self) -> dict:
+        """Per-wing liveness snapshot: the wing's lane's fault telemetry
+        plus this session's observed wing failures. Feeds dashboards and
+        the fleet control plane's unhealthy-lane scoring."""
+        out = {}
+        for wing, handle in (("event", self.event), ("frame", self.frame)):
+            tel = self.engine.telemetry(handle.modality)
+            out[wing] = {
+                "dead": tel.dead,
+                "retries": tel.retries,
+                "quarantined": tel.quarantined,
+                "fault_rate": tel.fault_rate,
+                "failures_seen": self.wing_failures[wing],
+            }
+        return out
 
     def reset_state(self) -> None:
         """Gesture boundary across the whole session: zero both wings'

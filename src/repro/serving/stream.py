@@ -108,6 +108,38 @@ handed back (and therefore the wall-clock attribution) changes. Call
 tail. Trade-off vs the synchronous default: windows are consumed from
 their queues at dispatch, so a device-side failure surfaces at the later
 collect, after the batch can no longer be retried by simply re-stepping.
+
+Fault recovery (``EngineConfig.recovery``): with a
+:class:`~repro.core._api.RecoveryConfig` attached, an engine failure is
+a per-lane event, not an engine-wide crash:
+
+  * a failed lane step is *retried* -- the synchronous two-phase
+    dispatch leaves the failed lane's queues untouched, and a pipelined
+    collect failure re-queues the poisoned records' windows at their
+    seq positions with each stream's carry rolled back to its
+    pre-window value -- after ``backoff_steps`` engine steps of lane
+    cooldown (deterministic: backoff is counted in steps, not wall
+    time);
+  * a window failing ``max_retries`` times, or returning non-finite
+    logits, is *quarantined*: moved to the lane's dead-letter queue,
+    its ``StreamResult`` emitted with ``status="failed"``, the carry
+    rolled back, the stream kept alive (subsequent windows chain from
+    the pre-quarantine carry);
+  * ``dead_after`` consecutive failed lane steps declare the lane
+    *dead*: it stops calling its engine and fails queued windows fast
+    (``status="failed"`` without touching the device), which keeps
+    paired :class:`~repro.serving.session.FusionSession` ticks
+    completing in degraded single-wing mode until
+    ``replace_lane_engine`` installs a rebuilt engine (the
+    :class:`~repro.fleet.supervisor.LaneSupervisor` automates rebuild +
+    checkpoint-restore + replay).
+
+Every retry/quarantine/dead transition is appended to
+``StreamEngine.fault_log`` and counted on ``StreamStats`` /
+:class:`LaneTelemetry`, so the fleet rebalancer scores unhealthy lanes.
+With ``recovery=None`` (default) every failure path is bitwise-identical
+to the pre-recovery engine: exceptions propagate, outputs are served
+as-is.
 """
 from __future__ import annotations
 
@@ -120,8 +152,10 @@ from typing import (Any, Callable, Deque, Dict, Hashable, List, Mapping,
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core._api import (EngineConfig, suppress_api_deprecations,
+from repro.core._api import (EngineConfig, RecoveryConfig,
+                             suppress_api_deprecations,
                              warn_deprecated_call)
 from repro.core.energy import KrakenModel
 from repro.core.engine import InferenceEngine
@@ -131,9 +165,9 @@ from repro.core.pipeline import (BatchedClosedLoop, ClosedLoopResult,
 from repro.core.snn import SNNConfig
 
 __all__ = ["StreamResult", "StreamStats", "StreamStatsSnapshot",
-           "LaneTelemetry", "StreamEngine", "StreamHandle",
+           "LaneTelemetry", "DeadLetter", "StreamEngine", "StreamHandle",
            "SlotPolicy", "FairQuantumPolicy", "DeadlinePolicy",
-           "EngineConfig"]
+           "EngineConfig", "RecoveryConfig"]
 
 # Distinguishes "kwarg not passed" from an explicit None in the legacy
 # construction shim (an explicitly-passed legacy kwarg must both warn
@@ -144,12 +178,40 @@ _UNSET_KW = object()
 @dataclasses.dataclass
 class StreamResult:
     """One served window: which stream, which window index, and the
-    closed-loop outcome (prediction, PWM, latency/energy breakdown)."""
+    closed-loop outcome (prediction, PWM, latency/energy breakdown).
+
+    ``status`` is ``"ok"`` for a normally served window. Under fault
+    recovery a quarantined or dead-lane-failed window is still emitted
+    -- closed-loop callers need to know the tick happened -- with
+    ``status="failed"``, ``result=None`` and the failure reason in
+    ``error``; :class:`~repro.serving.session.FusionSession` emits
+    ``status="degraded"`` ticks when one wing failed.
+    """
 
     stream_id: Hashable
     seq: int                      # submission-time sequence number
-    result: ClosedLoopResult
+    result: Optional[ClosedLoopResult]
     modality: str = "event"
+    status: str = "ok"            # "ok" | "failed" | "degraded"
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+
+@dataclasses.dataclass(frozen=True)
+class DeadLetter:
+    """One quarantined window, parked on its lane's dead-letter queue:
+    enough to re-submit it by hand (the window itself, its stream and
+    sequence position) plus why it was poisoned."""
+
+    stream_id: Hashable
+    seq: int
+    modality: str
+    item: Any
+    deadline: Optional[float]
+    error: str
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,6 +240,8 @@ class StreamStatsSnapshot:
     windows_per_s: float          # completion rate over the sliding window
     queue_depth_p95: float        # p95 of at-completion queue depths
     deadline_miss_rate: float     # horizon_missed / horizon_deadline_windows
+    retries: int = 0              # failed dispatch/collect attempts
+    quarantined: int = 0          # windows moved to the dead-letter queue
 
 
 @dataclasses.dataclass
@@ -198,6 +262,8 @@ class StreamStats:
     queued: int = 0               # still waiting in this stream's queue
     deadline_windows: int = 0     # completed windows that had a deadline
     deadline_missed: int = 0      # ... that completed past it
+    retries: int = 0              # failed attempts charged to this stream
+    quarantined: int = 0          # windows dead-lettered
     horizon: int = 64             # sliding-window length (completions)
     samples: Deque = dataclasses.field(default_factory=deque, repr=False)
 
@@ -250,7 +316,8 @@ class StreamStats:
             horizon=self.horizon, horizon_windows=n,
             horizon_deadline_windows=len(dated), horizon_missed=missed,
             windows_per_s=wps, queue_depth_p95=p95,
-            deadline_miss_rate=missed / len(dated) if dated else 0.0)
+            deadline_miss_rate=missed / len(dated) if dated else 0.0,
+            retries=self.retries, quarantined=self.quarantined)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -276,6 +343,17 @@ class LaneTelemetry:
     deadline_miss_rate: float     # pooled over the streams' horizons
     streams: Dict[Hashable, StreamStatsSnapshot] = dataclasses.field(
         default_factory=dict)
+    retries: int = 0              # cumulative failed attempts on the lane
+    quarantined: int = 0          # cumulative dead-lettered windows
+    dead: bool = False            # lane declared dead (fail-fast mode)
+
+    @property
+    def fault_rate(self) -> float:
+        """Retries + quarantines per completed-or-quarantined window;
+        the rebalancer's unhealthiness signal."""
+        denom = self.windows + self.quarantined
+        return ((self.retries + self.quarantined) / denom
+                if denom else 0.0)
 
     @property
     def backlog_per_slot(self) -> float:
@@ -316,13 +394,23 @@ class _InflightLane:
     where infer completes before any queue state moves -- the retry-safe
     path); ``"handle"`` -- the engine's opaque async-dispatch handle;
     ``"batch"`` -- a prepared batch for an engine without the async
-    split, inferred (synchronously) at collect time."""
+    split, inferred (synchronously) at collect time.
+
+    Recovery bookkeeping (populated only when the engine has a
+    :class:`~repro.core._api.RecoveryConfig`): ``items`` keeps the
+    popped :class:`_Queued` objects slot-aligned so a failed record can
+    re-queue its windows under their original sequence numbers;
+    ``prev_carry`` maps each dispatched stateful stream to the device
+    slice of its PRE-window carry, the value quarantine rolls back to.
+    """
 
     lane: "EngineLane"
     key: Hashable
     entries: List[Optional[tuple]]
     kind: str
     pending: Any
+    items: Optional[List[Optional["_Queued"]]] = None
+    prev_carry: Optional[Dict[Hashable, Any]] = None
 
 
 @dataclasses.dataclass
@@ -358,6 +446,15 @@ class EngineLane:
     state_streams: List[Hashable] = dataclasses.field(default_factory=list)
     parked: Dict[Hashable, Any] = dataclasses.field(default_factory=dict)
     zero_state: Any = None
+    # Fault-recovery state (only ever mutated when the engine carries a
+    # RecoveryConfig; all-defaults otherwise).
+    dead: bool = False            # fail-fast mode until engine replaced
+    fail_streak: int = 0          # consecutive failed lane steps
+    cooldown: int = 0             # backoff steps left before redispatch
+    retries: Dict[tuple, int] = dataclasses.field(default_factory=dict)
+    dead_letter: Deque = dataclasses.field(default_factory=deque)
+    n_retries: int = 0            # cumulative, for telemetry
+    n_quarantined: int = 0
 
     def pending(self) -> int:
         return sum(len(q) for q in self.queues.values())
@@ -774,17 +871,34 @@ class StreamHandle:
         (idempotent: closing a closed handle returns 0).
 
         The slot it held is freed with its buffers dead: the next stream
-        admitted there starts from the zero state. Raises if the stream
-        still has windows in flight (``flush()`` first).
+        admitted there starts from the zero state. Closing with windows
+        in flight (pipelined) discards exactly this stream's in-flight
+        records -- their results are never emitted and count toward the
+        returned discard total -- while lane-mates sharing the
+        dispatched steps stay in flight untouched.
         ``stream_stats`` keeps the history until the id is reused; a
         later ``open`` with the same id is a brand-new stream (fresh seq
         numbering, fresh state).
         """
         if self.closed:
             return 0
-        self._check_not_inflight("closing")
         lane, sid, eng = self._lane, self.stream_id, self._engine
-        dropped = len(lane.queues.pop(sid))
+        # Scrub this stream out of any dispatched-but-uncollected step:
+        # the slot's device compute still runs, but its result slot is
+        # orphaned (skipped at collect). Lane-mates are untouched.
+        dropped = 0
+        for step_recs in self._engine._inflight:
+            for rec in step_recs:
+                if rec.lane is not lane:
+                    continue
+                for i, entry in enumerate(rec.entries):
+                    if entry is not None and entry[0] == sid:
+                        rec.entries[i] = None
+                        if rec.items is not None:
+                            rec.items[i] = None
+                        dropped += 1
+        queued_dropped = len(lane.queues.pop(sid))
+        dropped += queued_dropped
         if sid in lane.waiting:
             lane.waiting.remove(sid)
         for i, owner in enumerate(lane.slots):
@@ -796,10 +910,14 @@ class StreamHandle:
                 lane.state_streams[j] = _FREE
         lane.parked.pop(sid, None)
         lane.stateful.discard(sid)
+        for key in [k for k in lane.retries if k[0] == sid]:
+            del lane.retries[key]
         del eng._stream_lane[sid]
         eng._seq.pop(sid, None)
         eng._handles.pop(sid, None)
-        eng.stream_stats[sid].queued -= dropped
+        # In-flight scrubs were already uncounted from the queued stat
+        # at dispatch; only the still-queued windows adjust it here.
+        eng.stream_stats[sid].queued -= queued_dropped
         # Policies with per-stream bookkeeping (e.g. DeadlinePolicy's
         # aging counters) drop it via the duck-typed forget hook, so a
         # reused id cannot inherit the retired stream's state.
@@ -912,6 +1030,15 @@ class StreamEngine:
         self.config = config
         self.mesh = config.mesh
         self.pipeline_depth = config.pipeline_depth
+        self.recovery: Optional[RecoveryConfig] = config.recovery
+        # Chronological record of every fault-recovery transition:
+        # {"step", "kind": "retry"|"quarantine"|"lane_dead"|"requeue"|
+        #  "lane_replaced", "modality", "stream", "seq", "error"}.
+        # Feeds the chaos-soak assertions and the bench recovery metric.
+        self.fault_log: List[dict] = []
+        # Failed StreamResults produced during dispatch (sync retry
+        # exhaustion, dead-lane fail-fast); drained into step() output.
+        self._pending_failures: List[StreamResult] = []
         self._inflight: Deque[List[_InflightLane]] = deque()
         if engines is None:
             if params is None or cfg is None:
@@ -1100,7 +1227,16 @@ class StreamEngine:
             windows=sum(s.windows for s in snaps.values()),
             windows_per_s=sum(s.windows_per_s for s in snaps.values()),
             deadline_miss_rate=h_missed / h_dated if h_dated else 0.0,
-            streams=snaps)
+            streams=snaps,
+            retries=lane.n_retries,
+            quarantined=lane.n_quarantined,
+            dead=lane.dead)
+
+    def dead_letters(self, modality: Optional[str] = None
+                     ) -> List[DeadLetter]:
+        """The lane's quarantined windows, oldest first (a copy; the
+        queue itself is engine-owned)."""
+        return list(self._lane_named(modality).dead_letter)
 
     def resize_lane(self, modality: Optional[str] = None, *,
                     slots: int, warm: bool = True) -> List[Hashable]:
@@ -1191,20 +1327,137 @@ class StreamEngine:
         the WHOLE engine would stall every other lane's pipeline. Steps
         that still hold other lanes' records stay queued (in order);
         steps left empty are dropped.
+
+        Exception-safe: a collect failure (engine raise without
+        recovery configured) leaves the in-flight deque consistent --
+        already-collected records removed, everything else (this lane's
+        uncollected records and every other lane's) still in flight, in
+        dispatch order.
         """
         lane = self._lane_named(modality)
         out: List[StreamResult] = []
+        done: Deque[List[_InflightLane]] = deque()
+        try:
+            while self._inflight:
+                step_recs = self._inflight[0]
+                # Collect this lane's records one at a time, removing
+                # each from the step as it lands, so an exception
+                # leaves exactly the uncollected suffix in place.
+                i = 0
+                while i < len(step_recs):
+                    rec = step_recs[i]
+                    if rec.lane is lane:
+                        out.extend(self._collect_one(rec))
+                        step_recs.pop(i)
+                    else:
+                        i += 1
+                self._inflight.popleft()
+                if step_recs:
+                    done.append(step_recs)
+        finally:
+            # Steps that still hold other lanes' records go back in
+            # front of whatever was not reached, preserving dispatch
+            # order whether we finished or an exception unwound us.
+            self._inflight.extendleft(reversed(done))
+        return out
+
+    def abort_lane(self, modality: Optional[str] = None) -> int:
+        """Drop one lane's in-flight records WITHOUT collecting them
+        (the lane's engine is presumed broken -- collecting would block
+        on, or re-raise from, poisoned device work) and re-queue their
+        windows at their sequence positions; returns the re-queued
+        count. Other lanes' dispatched steps stay in flight.
+
+        The lane's carried state is dropped wholesale -- it lived on
+        the dead engine. Unsupervised stateful streams restart cold;
+        supervised ones are restored from their last checkpoint by the
+        :class:`~repro.fleet.supervisor.LaneSupervisor`, which is the
+        caller this hook exists for (followed by
+        ``replace_lane_engine``).
+        """
+        lane = self._lane_named(modality)
+        requeue: List[tuple] = []
         remaining: Deque[List[_InflightLane]] = deque()
         while self._inflight:
             step_recs = self._inflight.popleft()
-            mine = [rec for rec in step_recs if rec.lane is lane]
-            rest = [rec for rec in step_recs if rec.lane is not lane]
-            if mine:
-                out.extend(self._collect(mine))
+            rest = [r for r in step_recs if r.lane is not lane]
+            for rec in step_recs:
+                if rec.lane is not lane:
+                    continue
+                for i, entry in enumerate(rec.entries):
+                    if entry is None:
+                        continue
+                    if rec.items is not None and rec.items[i] is not None:
+                        requeue.append((entry[0], rec.items[i]))
             if rest:
                 remaining.append(rest)
         self._inflight = remaining
-        return out
+        lane.state = None
+        lane.zero_state = None
+        lane.state_streams = [_FREE] * len(lane.slots)
+        lane.parked.clear()
+        self._requeue(lane, requeue)
+        return len(requeue)
+
+    def replace_lane_engine(self, modality: Optional[str] = None, *,
+                            engine: InferenceEngine) -> None:
+        """Swap one lane's engine for a rebuilt instance, clearing the
+        lane's fault state (dead flag, fail streak, cooldown, retry
+        counters -- the dead-letter queue is kept: it is history, not
+        state). Streams, queues, slots, and policy bookkeeping survive;
+        carried state does NOT (it lived on the old engine) -- restore
+        stateful streams from checkpoints afterwards.
+
+        The lane must have no windows in flight (``abort_lane`` or
+        ``drain_lane`` first). The replacement must serve the same
+        modality, agree on the latched ``duration_us`` (an unlatched
+        replacement inherits it), support carried state if any open
+        stream on the lane is stateful, and accept the engine's mesh
+        when one is attached.
+        """
+        lane = self._lane_named(modality)
+        for step_recs in self._inflight:
+            for rec in step_recs:
+                if rec.lane is lane and any(
+                        e is not None for e in rec.entries):
+                    raise ValueError(
+                        f"lane {lane.modality!r} has in-flight windows; "
+                        f"abort_lane() or drain_lane() before replacing "
+                        f"its engine")
+        if engine.modality != lane.modality:
+            raise ValueError(
+                f"replacement engine serves modality "
+                f"{engine.modality!r}, lane is {lane.modality!r}")
+        if lane.stateful and not hasattr(engine, "init_state"):
+            raise ValueError(
+                f"lane {lane.modality!r} has stateful streams but the "
+                f"replacement engine has no carried-state support")
+        if lane.engine.duration_us is not None:
+            if engine.duration_us is None:
+                engine.duration_us = lane.engine.duration_us
+            elif engine.duration_us != lane.engine.duration_us:
+                raise ValueError(
+                    f"replacement duration_us={engine.duration_us} != "
+                    f"lane duration_us={lane.engine.duration_us}")
+        if self.mesh is not None:
+            attach = getattr(engine, "attach_mesh", None)
+            if attach is None:
+                raise ValueError(
+                    f"replacement engine for lane {lane.modality!r} has "
+                    f"no attach_mesh; this engine is sharded")
+            attach(self.mesh)
+        lane.engine = engine
+        lane.supports_state = hasattr(engine, "init_state")
+        lane.shape_keys = set()
+        lane.state = None
+        lane.zero_state = None
+        lane.state_streams = [_FREE] * len(lane.slots)
+        lane.parked.clear()
+        lane.dead = False
+        lane.fail_streak = 0
+        lane.cooldown = 0
+        lane.retries.clear()
+        self._log_fault("lane_replaced", lane, None, None, None)
 
     # -- the session-handle API ------------------------------------------
 
@@ -1506,20 +1759,23 @@ class StreamEngine:
         t0 = time.perf_counter()
         if self.pipeline_depth == 0:
             ran = self._dispatch(eager=True)
-            if not ran:
+            failed = self._take_failures()
+            if not ran and not failed:
                 return []
-            out = self._collect(ran)
+            out = failed + self._collect(ran)
         else:
             ran = self._dispatch(eager=False)
             if ran:
                 self._inflight.append(ran)
-            out = []
+            out = self._take_failures()
             while len(self._inflight) > self.pipeline_depth:
-                out.extend(self._collect(self._inflight.popleft()))
+                out.extend(self._collect_step(self._inflight[0]))
+                self._inflight.popleft()
             if not ran and self._inflight:
                 # No new work: drain one in-flight step so a caller
                 # looping on step() always makes progress.
-                out.extend(self._collect(self._inflight.popleft()))
+                out.extend(self._collect_step(self._inflight[0]))
+                self._inflight.popleft()
             if not ran and not out:
                 return []
         # A no-op call (nothing dispatched, nothing collected) does not
@@ -1542,6 +1798,19 @@ class StreamEngine:
         ran: List[_InflightLane] = []
         state_commits: List[tuple] = []
         for lane in self._lanes.values():
+            if self.recovery is not None:
+                if lane.dead:
+                    # Fail-fast: a dead lane never calls its engine;
+                    # queued windows are dead-lettered immediately so
+                    # paired fusion ticks keep completing (degraded)
+                    # until replace_lane_engine installs a rebuild.
+                    self._fail_fast_lane(lane)
+                    continue
+                if lane.cooldown > 0:
+                    # Deterministic backoff: sit out whole engine steps
+                    # (not wall time) after a failed lane step.
+                    lane.cooldown -= 1
+                    continue
             self.policy.assign(lane)
             heads = [
                 lane.queues[sid][0].item if sid is not _FREE else None
@@ -1549,51 +1818,76 @@ class StreamEngine:
             ]
             if all(w is None for w in heads):
                 continue
-            batch = lane.engine.prepare(heads, batch_size=len(lane.slots))
-            key = lane.engine.shape_key(batch)
-            state_in, state_commit = self._lane_state_in(lane)
-            dispatch = getattr(lane.engine, "infer_dispatch", None)
-            collect = getattr(lane.engine, "infer_collect", None)
-            has_split = dispatch is not None and collect is not None
-            new_state = None
-            if eager or (state_in is not None and not has_split):
-                # Synchronous infer. A stateful engine WITHOUT the async
-                # split also lands here under pipelining: its carry must
-                # advance in dispatch order, so its infer cannot wait
-                # for the (later) collect.
-                if state_in is None:
-                    # Stateless lanes ride the engines' legacy call form
-                    # by design; the deprecation nudge is for end users.
-                    with suppress_api_deprecations():
-                        results = lane.engine.infer(batch)
-                    kind, pending = "results", results
+            try:
+                batch = lane.engine.prepare(heads,
+                                            batch_size=len(lane.slots))
+                key = lane.engine.shape_key(batch)
+                state_in, state_commit = self._lane_state_in(lane)
+                dispatch = getattr(lane.engine, "infer_dispatch", None)
+                collect = getattr(lane.engine, "infer_collect", None)
+                has_split = dispatch is not None and collect is not None
+                new_state = None
+                if eager or (state_in is not None and not has_split):
+                    # Synchronous infer. A stateful engine WITHOUT the
+                    # async split also lands here under pipelining: its
+                    # carry must advance in dispatch order, so its infer
+                    # cannot wait for the (later) collect.
+                    if state_in is None:
+                        # Stateless lanes ride the engines' legacy call
+                        # form by design; the deprecation nudge is for
+                        # end users.
+                        with suppress_api_deprecations():
+                            results = lane.engine.infer(batch)
+                        kind, pending = "results", results
+                    else:
+                        results, new_state = lane.engine.infer(batch,
+                                                               state_in)
+                        kind, pending = "results", results
+                elif has_split:
+                    if state_in is None:
+                        kind, pending = "handle", dispatch(batch)
+                    else:
+                        # Async dispatch: new_state is a pytree of
+                        # device futures, threaded into the NEXT
+                        # dispatch without ever blocking on (or copying
+                        # to) the host.
+                        pending, new_state = dispatch(batch, state_in)
+                        kind = "handle"
                 else:
-                    results, new_state = lane.engine.infer(batch, state_in)
-                    kind, pending = "results", results
-            elif has_split:
-                if state_in is None:
-                    kind, pending = "handle", dispatch(batch)
-                else:
-                    # Async dispatch: new_state is a pytree of device
-                    # futures, threaded into the NEXT dispatch without
-                    # ever blocking on (or copying to) the host.
-                    pending, new_state = dispatch(batch, state_in)
-                    kind = "handle"
-            else:
-                kind, pending = "batch", batch
+                    kind, pending = "batch", batch
+            except Exception as exc:
+                if self.recovery is None:
+                    raise
+                # Queues are untouched (heads were only peeked): charge
+                # a retry to every window in the attempted batch, put
+                # the lane on cooldown, and keep serving other lanes.
+                self._note_lane_failure(lane, heads, exc)
+                continue
+            prev_carry = None
+            if self.recovery is not None and state_in is not None:
+                # The rollback target quarantine restores: each
+                # dispatched stateful stream's pre-window carry, as a
+                # lazy device slice of the state that was fed in.
+                prev_carry = {}
+                for slot, sid in enumerate(lane.slots):
+                    if (sid is not _FREE and sid in lane.stateful
+                            and heads[slot] is not None):
+                        prev_carry[sid] = jax.tree_util.tree_map(
+                            lambda a, s=slot: a[s], state_in)
             if state_commit is not None:
                 state_commits.append((state_commit, new_state))
             entries = [None if w is None else slot
                        for slot, w in enumerate(heads)]
             ran.append(_InflightLane(
                 lane=lane, key=key, entries=entries, kind=kind,
-                pending=pending))
+                pending=pending, prev_carry=prev_carry))
         # Commit: every lane dispatched -- pop the served heads and
         # advance each lane's carried state.
         for commit, new_state in state_commits:
             commit(new_state)
         for rec in ran:
             lane = rec.lane
+            rec.items = [None] * len(rec.entries)
             for i, slot in enumerate(rec.entries):
                 if slot is None:
                     continue
@@ -1602,13 +1896,33 @@ class StreamEngine:
                 lane.slot_runs[slot] += 1
                 self.stream_stats[sid].queued -= 1
                 rec.entries[i] = (sid, entry.seq, entry.deadline)
+                rec.items[i] = entry
         return ran
 
     def _collect(self, ran: List[_InflightLane]) -> List[StreamResult]:
         """Block on a dispatched step's device results and emit them."""
         out: List[StreamResult] = []
         for rec in ran:
-            lane = rec.lane
+            out.extend(self._collect_one(rec))
+        return out
+
+    def _collect_step(self, step_recs: List[_InflightLane]
+                      ) -> List[StreamResult]:
+        """Collect one in-flight step's records, removing each from the
+        (still-enqueued) step list as it lands -- so an exception from
+        an engine without recovery configured leaves exactly the
+        uncollected suffix in flight instead of desynchronizing the
+        shared deque (pop-or-restore)."""
+        out: List[StreamResult] = []
+        while step_recs:
+            out.extend(self._collect_one(step_recs[0]))
+            step_recs.pop(0)
+        return out
+
+    def _collect_one(self, rec: _InflightLane) -> List[StreamResult]:
+        """Collect one lane's record of one dispatched step."""
+        lane = rec.lane
+        try:
             if rec.kind == "results":
                 results = rec.pending
             elif rec.kind == "handle":
@@ -1616,36 +1930,241 @@ class StreamEngine:
             else:
                 with suppress_api_deprecations():
                     results = lane.engine.infer(rec.pending)
-            lane.shape_keys.add(rec.key)
-            wall_t = time.perf_counter()
-            for slot, entry in enumerate(rec.entries):
-                if entry is None:
-                    continue
-                sid, seq, deadline = entry
-                res = results[slot]
-                st = self.stream_stats[sid]
-                st.windows += 1
-                st.energy_mj += res.energy_mj
-                st.latency_ms_sum += res.latency_ms
-                st.realtime_windows += int(res.realtime)
-                # Deadline-miss telemetry: a finite deadline is an
-                # instant on the engine's deadline_clock; collecting the
-                # window after that instant is a miss. Feeds the sliding
-                # per-stream horizon the fleet control plane reads.
-                missed = (None if deadline is None
-                          else self.deadline_clock() > deadline)
-                st.note_completion(wall_t, st.queued, missed)
-                out.append(StreamResult(
-                    stream_id=sid, seq=seq, result=res,
-                    modality=lane.modality))
-                self.stats["windows"] += 1
+        except Exception as exc:
+            if self.recovery is None:
+                raise
+            return self._recover_record(rec, exc)
+        lane.shape_keys.add(rec.key)
+        lane.fail_streak = 0
+        out: List[StreamResult] = []
+        wall_t = time.perf_counter()
+        rcfg = self.recovery
+        for slot, entry in enumerate(rec.entries):
+            if entry is None:
+                continue
+            sid, seq, deadline = entry
+            res = results[slot]
+            if (rcfg is not None and rcfg.quarantine_nonfinite
+                    and res.logits is not None
+                    and not np.all(np.isfinite(np.asarray(res.logits)))):
+                # Poison: NaNs are deterministic, a retry would just
+                # recompute them -- quarantine immediately, roll the
+                # carry back, keep the stream alive.
+                out.append(self._quarantine_entry(
+                    rec, slot, "non-finite logits"))
+                continue
+            lane.retries.pop((sid, seq), None)
+            st = self.stream_stats[sid]
+            st.windows += 1
+            st.energy_mj += res.energy_mj
+            st.latency_ms_sum += res.latency_ms
+            st.realtime_windows += int(res.realtime)
+            # Deadline-miss telemetry: a finite deadline is an
+            # instant on the engine's deadline_clock; collecting the
+            # window after that instant is a miss. Feeds the sliding
+            # per-stream horizon the fleet control plane reads.
+            missed = (None if deadline is None
+                      else self.deadline_clock() > deadline)
+            st.note_completion(wall_t, st.queued, missed)
+            out.append(StreamResult(
+                stream_id=sid, seq=seq, result=res,
+                modality=lane.modality))
+            self.stats["windows"] += 1
         return out
+
+    # -- fault recovery --------------------------------------------------
+
+    def _log_fault(self, kind: str, lane: EngineLane,
+                   sid: Optional[Hashable], seq: Optional[int],
+                   error: Optional[str]) -> None:
+        self.fault_log.append({
+            "step": int(self.stats["steps"]), "kind": kind,
+            "modality": lane.modality, "stream": sid, "seq": seq,
+            "error": error})
+
+    def _take_failures(self) -> List[StreamResult]:
+        out, self._pending_failures = self._pending_failures, []
+        return out
+
+    def _rollback_carry(self, rec: _InflightLane,
+                        sid: Hashable) -> None:
+        """Restore a stream's carry to its pre-window value (captured
+        at this record's dispatch) and orphan any state rows it owns."""
+        lane = rec.lane
+        if rec.prev_carry is None or sid not in rec.prev_carry:
+            return
+        lane.parked[sid] = rec.prev_carry[sid]
+        for j, owner in enumerate(lane.state_streams):
+            if owner is not _FREE and owner == sid:
+                lane.state_streams[j] = _FREE
+
+    def _scrub_stream_inflight(self, lane: EngineLane, sid: Hashable,
+                               skip: Optional[_InflightLane] = None
+                               ) -> List[tuple]:
+        """Remove a stream's windows from the lane's still-in-flight
+        records (their device results chained on a rolled-back carry
+        and must not be served); returns ``(sid, _Queued)`` rows to
+        re-queue."""
+        requeue: List[tuple] = []
+        for step_recs in self._inflight:
+            for r in step_recs:
+                if r is skip or r.lane is not lane:
+                    continue
+                for i, entry in enumerate(r.entries):
+                    if entry is not None and entry[0] == sid:
+                        r.entries[i] = None
+                        if r.items is not None and r.items[i] is not None:
+                            requeue.append((sid, r.items[i]))
+                            r.items[i] = None
+        return requeue
+
+    def _requeue(self, lane: EngineLane, entries: List[tuple]) -> None:
+        """Put failed windows back on their streams' queues at their
+        sequence positions (stable merge by seq -- re-queued windows
+        precede later submissions, and re-queues from successive failed
+        records interleave correctly)."""
+        by_sid: Dict[Hashable, List[_Queued]] = {}
+        for sid, q in entries:
+            by_sid.setdefault(sid, []).append(q)
+        for sid, qs in by_sid.items():
+            if sid not in lane.queues:
+                continue             # stream closed while in flight
+            lane.queues[sid] = deque(sorted(
+                list(lane.queues[sid]) + qs, key=lambda e: e.seq))
+            self.stream_stats[sid].queued += len(qs)
+            if sid not in lane.slots and sid not in lane.waiting:
+                lane.waiting.append(sid)
+            for q in qs:
+                self._log_fault("requeue", lane, sid, q.seq, None)
+
+    def _quarantine_entry(self, rec: _InflightLane, slot: int,
+                          error: str) -> StreamResult:
+        """Dead-letter one window of a collected record: emit its
+        failed result, roll back the stream's carry, and pull the
+        stream's still-in-flight successors (they chained on the
+        poisoned carry) back onto the queue."""
+        lane = rec.lane
+        sid, seq, deadline = rec.entries[slot]
+        item = None
+        if rec.items is not None and rec.items[slot] is not None:
+            item = rec.items[slot].item
+        lane.retries.pop((sid, seq), None)
+        lane.dead_letter.append(DeadLetter(
+            stream_id=sid, seq=seq, modality=lane.modality, item=item,
+            deadline=deadline, error=error))
+        lane.n_quarantined += 1
+        self.stream_stats[sid].quarantined += 1
+        self._log_fault("quarantine", lane, sid, seq, error)
+        if sid in lane.stateful:
+            self._rollback_carry(rec, sid)
+            self._requeue(lane,
+                          self._scrub_stream_inflight(lane, sid, skip=rec))
+        return StreamResult(
+            stream_id=sid, seq=seq, result=None, modality=lane.modality,
+            status="failed", error=error)
+
+    def _recover_record(self, rec: _InflightLane,
+                        exc: Exception) -> List[StreamResult]:
+        """A record failed at collect (pipelined): retry its windows --
+        re-queued at their seq positions with carries rolled back -- or
+        quarantine the ones that exhausted ``max_retries``; put the
+        lane on backoff and maybe declare it dead."""
+        lane = rec.lane
+        rcfg = self.recovery
+        err = f"{type(exc).__name__}: {exc}"
+        out: List[StreamResult] = []
+        requeue: List[tuple] = []
+        for slot, entry in enumerate(rec.entries):
+            if entry is None:
+                continue
+            sid, seq, _deadline = entry
+            count = lane.retries.get((sid, seq), 0) + 1
+            if count > rcfg.max_retries:
+                out.append(self._quarantine_entry(rec, slot, err))
+                continue
+            lane.retries[(sid, seq)] = count
+            lane.n_retries += 1
+            self.stream_stats[sid].retries += 1
+            self._log_fault("retry", lane, sid, seq, err)
+            if sid in lane.stateful:
+                self._rollback_carry(rec, sid)
+                requeue.extend(
+                    self._scrub_stream_inflight(lane, sid, skip=rec))
+            if rec.items is not None and rec.items[slot] is not None:
+                requeue.append((sid, rec.items[slot]))
+        self._requeue(lane, requeue)
+        lane.fail_streak += 1
+        lane.cooldown = max(lane.cooldown, rcfg.backoff_steps)
+        if lane.fail_streak >= rcfg.dead_after and not lane.dead:
+            lane.dead = True
+            self._log_fault("lane_dead", lane, None, None, err)
+        return out
+
+    def _note_lane_failure(self, lane: EngineLane, heads: List,
+                           exc: Exception) -> None:
+        """A lane's synchronous dispatch failed with its queues still
+        untouched (two-phase dispatch only peeks until every lane's
+        infer returns): charge a retry to each window in the attempted
+        batch, quarantine the ones over budget, back the lane off."""
+        rcfg = self.recovery
+        err = f"{type(exc).__name__}: {exc}"
+        for slot, sid in enumerate(lane.slots):
+            if sid is _FREE or heads[slot] is None:
+                continue
+            entry = lane.queues[sid][0]
+            count = lane.retries.get((sid, entry.seq), 0) + 1
+            if count > rcfg.max_retries:
+                lane.queues[sid].popleft()
+                self.stream_stats[sid].queued -= 1
+                lane.retries.pop((sid, entry.seq), None)
+                lane.dead_letter.append(DeadLetter(
+                    stream_id=sid, seq=entry.seq, modality=lane.modality,
+                    item=entry.item, deadline=entry.deadline, error=err))
+                lane.n_quarantined += 1
+                self.stream_stats[sid].quarantined += 1
+                self._log_fault("quarantine", lane, sid, entry.seq, err)
+                self._pending_failures.append(StreamResult(
+                    stream_id=sid, seq=entry.seq, result=None,
+                    modality=lane.modality, status="failed", error=err))
+                continue
+            lane.retries[(sid, entry.seq)] = count
+            lane.n_retries += 1
+            self.stream_stats[sid].retries += 1
+            self._log_fault("retry", lane, sid, entry.seq, err)
+        lane.fail_streak += 1
+        lane.cooldown = max(lane.cooldown, rcfg.backoff_steps)
+        if lane.fail_streak >= rcfg.dead_after and not lane.dead:
+            lane.dead = True
+            self._log_fault("lane_dead", lane, None, None, err)
+
+    def _fail_fast_lane(self, lane: EngineLane) -> None:
+        """Dead-lane mode: dead-letter everything queued without
+        touching the engine, emitting failed results immediately so
+        closed-loop callers (and fusion pairing) keep ticking."""
+        for sid in list(lane.queues):
+            q = lane.queues[sid]
+            while q:
+                entry = q.popleft()
+                self.stream_stats[sid].queued -= 1
+                lane.dead_letter.append(DeadLetter(
+                    stream_id=sid, seq=entry.seq, modality=lane.modality,
+                    item=entry.item, deadline=entry.deadline,
+                    error="lane dead"))
+                lane.n_quarantined += 1
+                self.stream_stats[sid].quarantined += 1
+                self._log_fault("quarantine", lane, sid, entry.seq,
+                                "lane dead")
+                self._pending_failures.append(StreamResult(
+                    stream_id=sid, seq=entry.seq, result=None,
+                    modality=lane.modality, status="failed",
+                    error="lane dead"))
 
     def flush(self) -> List[StreamResult]:
         """Collect every in-flight pipelined step (oldest first)."""
         out: List[StreamResult] = []
         while self._inflight:
-            out.extend(self._collect(self._inflight.popleft()))
+            out.extend(self._collect_step(self._inflight[0]))
+            self._inflight.popleft()
         return out
 
     @property

@@ -1,0 +1,258 @@
+"""Chaos soak: seeded fault churn over real engines, bitwise oracles.
+
+The acceptance bar from the fault-tolerance ISSUE, pinned end to end:
+under seeded injected faults (step exceptions, NaN poison, lane kills)
+every window ever reported successful is bitwise-identical to the
+uninterrupted-scan oracle -- sync and pipelined -- with retries,
+quarantines, a supervisor restore, and degraded fusion ticks all
+actually exercised; and a fault-rate-0 run through the recovery-enabled
+engine is bitwise-identical to the pre-PR (no-recovery) engine.
+
+Everything here is deterministic: the injector is seeded and draws in
+call order, backoff counts engine steps (not wall time), and the
+assertions never read clocks -- so a failure replays exactly.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import SNNConfig, init_snn
+from repro.core._api import EngineConfig, FaultConfig, RecoveryConfig
+from repro.core.pipeline import BatchedClosedLoop, ClosedLoopResult
+from repro.fleet import CheckpointStore, FaultInjector, LaneSupervisor
+from repro.serving import FusionSession, StreamEngine
+
+from test_faults import Stub
+from test_stateful_stream import (_assert_matches_oracle,
+                                  _uninterrupted_oracle, _windows)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return SNNConfig(height=32, width=32, time_bins=4, conv1_features=4,
+                     conv2_features=8, hidden=32, num_classes=11)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_snn(jax.random.PRNGKey(0), cfg)
+
+
+def _soak(params, cfg, config, *, streams, fault=None, max_steps=400):
+    """Submit every stream's windows on one engine (faulted when a
+    FaultConfig is given) and step until quiescent; returns
+    (engine, all results)."""
+    if fault is not None:
+        inj = FaultInjector(fault)
+        wrap = lambda e: inj.wrap(e)
+    else:
+        wrap = lambda e: e
+    eng = StreamEngine(
+        engines=[wrap(BatchedClosedLoop.from_config(params, cfg, config))],
+        config=config)
+    handles = {sid: eng.open(modality="event", stream_id=sid,
+                             stateful=True)
+               for sid in streams}
+    got = []
+    for k in range(max(len(ws) for ws in streams.values())):
+        for sid, ws in streams.items():
+            if k < len(ws):
+                handles[sid].submit(ws[k])
+        got.extend(eng.step())
+    for _ in range(max_steps):
+        out = eng.step()
+        got.extend(out)
+        if not out and not eng.pending() and not eng._inflight:
+            break
+    got.extend(eng.flush())
+    return eng, got
+
+
+def _streams(n_streams, n_windows, seed=0):
+    return {f"s{i}": _windows(n_windows, seed=seed + 31 * i)
+            for i in range(n_streams)}
+
+
+# ----------------------------------------------------------------------
+# Stateful churn under step errors: every window survives retries and
+# the whole scan stays bitwise, sync and pipelined.
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth", [0, 2])
+def test_soak_stateful_step_errors_bitwise(params, cfg, depth):
+    streams = _streams(2, 6, seed=3)
+    config = EngineConfig(
+        max_streams=2, pipeline_depth=depth,
+        recovery=RecoveryConfig(max_retries=4, backoff_steps=1,
+                                dead_after=50))
+    eng, got = _soak(params, cfg, config, streams=streams,
+                     fault=FaultConfig(seed=9, step_error_rate=0.15))
+    tel = eng.telemetry("event")
+    assert tel.retries >= 1                       # churn actually happened
+    assert tel.quarantined == 0                   # seeded: no exhaustion
+    ok = [r for r in got if r.ok]
+    per_stream = {}
+    for r in ok:
+        per_stream.setdefault(r.stream_id, []).append(r.seq)
+    assert all(sorted(v) == list(range(6)) for v in per_stream.values())
+    ids, per_window = _uninterrupted_oracle(params, cfg, streams)
+    _assert_matches_oracle(ok, ids, per_window)
+
+
+# ----------------------------------------------------------------------
+# Stateless churn under errors + NaN poison: quarantines fire, and every
+# successful window still equals its per-window oracle.
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth", [0, 2])
+def test_soak_stateless_nan_and_errors(params, cfg, depth):
+    streams = _streams(2, 8, seed=17)
+
+    def run(fault):
+        if fault is not None:
+            inj = FaultInjector(fault)
+            wrap = inj.wrap
+        else:
+            wrap = lambda e: e
+        config = EngineConfig(
+            max_streams=2, pipeline_depth=depth,
+            recovery=None if fault is None else RecoveryConfig(
+                max_retries=1, backoff_steps=0, dead_after=50))
+        eng = StreamEngine(
+            engines=[wrap(BatchedClosedLoop.from_config(
+                params, cfg, config))],
+            config=config)
+        hs = {sid: eng.open(modality="event", stream_id=sid)
+              for sid in streams}
+        got = []
+        for k in range(8):
+            for sid in streams:
+                hs[sid].submit(streams[sid][k])
+            got.extend(eng.step())
+        for _ in range(200):
+            out = eng.step()
+            got.extend(out)
+            if not out and not eng.pending() and not eng._inflight:
+                break
+        got.extend(eng.flush())
+        return eng, got
+
+    _, clean = run(None)
+    baseline = {(r.stream_id, r.seq): r.result for r in clean}
+    eng, got = run(FaultConfig(seed=2, step_error_rate=0.1, nan_rate=0.1))
+    tel = eng.telemetry("event")
+    assert tel.retries >= 1 and tel.quarantined >= 1
+    assert len(eng.dead_letters("event")) == tel.quarantined
+    ok = [r for r in got if r.ok]
+    assert ok                                      # the soak served windows
+    for r in ok:                                   # zero divergence
+        ref = baseline[(r.stream_id, r.seq)]
+        np.testing.assert_array_equal(r.result.label_pred, ref.label_pred)
+        np.testing.assert_array_equal(r.result.pwm, ref.pwm)
+        np.testing.assert_array_equal(r.result.logits, ref.logits)
+    # Quarantined windows emitted exactly one failed row each.
+    failed = [r for r in got if r.status == "failed"]
+    assert len(failed) == tel.quarantined
+
+
+# ----------------------------------------------------------------------
+# Supervised churn: random step errors PLUS a lane kill; the supervisor
+# restores and the whole scan stays bitwise, bounded recovery.
+# ----------------------------------------------------------------------
+
+def test_soak_supervised_lane_kill_recovers_bitwise(params, cfg):
+    ws = _windows(10, seed=23)
+    config = EngineConfig(
+        max_streams=1,
+        recovery=RecoveryConfig(max_retries=0, backoff_steps=0,
+                                dead_after=1, checkpoint_every=3))
+    inj = FaultInjector(FaultConfig(seed=5))
+    make = lambda: inj.wrap(BatchedClosedLoop.from_config(
+        params, cfg, config))
+    eng = StreamEngine(engines=[make()], config=config)
+    sup = LaneSupervisor(eng, store=CheckpointStore(capacity=4),
+                         rebuild=lambda modality: make())
+    h = sup.watch(eng.open(modality="event", stateful=True))
+    got = []
+    recovery_ticks = None
+    for k, w in enumerate(ws):
+        sup.submit(h.stream_id, w)
+        if k == 6:
+            inj.kill("event")
+        got.extend(sup.tick(eng.step()))
+        if k == 7:
+            inj.revive("event")
+        if recovery_ticks is None and sup.stats["restores"]:
+            recovery_ticks = k - 6                # ticks from kill to restore
+    for _ in range(10):
+        got.extend(sup.tick(eng.step()))
+    assert sup.stats["restores"] >= 1
+    assert recovery_ticks is not None and recovery_ticks <= 2  # bounded
+    ok = [r for r in got if r.ok]
+    assert sorted(r.seq for r in ok) == list(range(len(ws)))
+    ids, per_window = _uninterrupted_oracle(params, cfg,
+                                            {h.stream_id: ws})
+    _assert_matches_oracle(ok, ids, per_window)
+
+
+# ----------------------------------------------------------------------
+# Fusion under churn: a killed wing degrades (never stalls) and fused
+# ticks resume after the lane is replaced.
+# ----------------------------------------------------------------------
+
+def test_soak_fusion_wing_kill_degrades_then_resumes():
+    inj = FaultInjector(FaultConfig(seed=1))
+    eng = StreamEngine(
+        engines=[inj.wrap(Stub("event")), inj.wrap(Stub("frame"))],
+        config=EngineConfig(max_streams=1,
+                            recovery=RecoveryConfig(max_retries=0,
+                                                    backoff_steps=0,
+                                                    dead_after=1)))
+    sess = FusionSession(eng)
+    rows = []
+    for t in range(12):
+        if t == 4:
+            inj.kill("frame")
+        if t == 8:
+            inj.revive("frame")
+            eng.replace_lane_engine("frame", engine=inj.wrap(Stub("frame")))
+        sess.submit(t, 100 + t)
+        rows.extend(sess.step())
+    rows.extend(sess.absorb(eng.flush()) or sess.drain())
+    rows.extend(sess.drain())
+    # Every tick emitted exactly once, in order, fused or degraded.
+    assert [r.seq for r in rows] == list(range(12))
+    statuses = [r.status for r in rows]
+    assert statuses[:4] == ["ok"] * 4
+    assert "degraded" in statuses                 # the wing-down stretch
+    assert statuses[-4:] == ["ok"] * 4            # resumed after replace
+    assert sess.ticks_degraded >= 1
+    assert all(r.result.breakdown["degraded_wing"] == "frame"
+               for r in rows if r.status == "degraded")
+
+
+# ----------------------------------------------------------------------
+# Fault-rate zero: the recovery-enabled engine is bitwise the pre-PR
+# engine, with zero recovery machinery engaged.
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth", [0, 2])
+def test_fault_rate_zero_is_bitwise_pre_pr(params, cfg, depth):
+    streams = _streams(2, 4, seed=41)
+    plain_cfg = EngineConfig(max_streams=2, pipeline_depth=depth)
+    rec_cfg = EngineConfig(max_streams=2, pipeline_depth=depth,
+                           recovery=RecoveryConfig())
+    _, plain = _soak(params, cfg, plain_cfg, streams=streams, fault=None)
+    eng, guarded = _soak(params, cfg, rec_cfg, streams=streams,
+                         fault=FaultConfig(seed=0))   # all rates zero
+    assert eng.fault_log == []
+    tel = eng.telemetry("event")
+    assert tel.retries == 0 and tel.quarantined == 0 and not tel.dead
+    assert len(plain) == len(guarded)
+    for a, b in zip(plain, guarded):
+        assert (a.stream_id, a.seq, a.status) == (b.stream_id, b.seq,
+                                                  b.status)
+        np.testing.assert_array_equal(a.result.label_pred,
+                                      b.result.label_pred)
+        np.testing.assert_array_equal(a.result.pwm, b.result.pwm)
+        np.testing.assert_array_equal(a.result.logits, b.result.logits)

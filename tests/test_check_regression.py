@@ -20,7 +20,9 @@ def _doc(batched=600.0, looped=300.0, stateful=590.0, stateless=600.0,
          fused=200.0, separate=195.0, with_stateful=True,
          with_fusion=True, with_sharded=True, sharded=None,
          with_fleet=True, static_miss=0.25, rebal_miss=0.0,
-         fleet_rebal=580.0, fleet_static=560.0, migrations=3):
+         fleet_rebal=580.0, fleet_static=560.0, migrations=3,
+         with_fault=True, fault_clean=24.0, fault_faulted=23.0,
+         fault_retries=4, fault_quarantined=0, fault_recovery=4.0):
     doc = {"rows": [{"batch_size": 4,
                      "batched_windows_per_s": batched,
                      "looped_windows_per_s": looped,
@@ -55,6 +57,15 @@ def _doc(batched=600.0, looped=300.0, stateful=590.0, stateless=600.0,
             "rebalanced_over_static": fleet_rebal / fleet_static,
             "migrations": migrations,
             "migration_ms": 1.5}]
+    if with_fault:
+        doc["fault_rows"] = [{
+            "streams": 2, "windows_per_stream": 8, "fault_rate": 0.05,
+            "clean_windows_per_s": fault_clean,
+            "faulted_windows_per_s": fault_faulted,
+            "faulted_over_clean": fault_faulted / fault_clean,
+            "retries": fault_retries,
+            "quarantined": fault_quarantined,
+            "recovery_ticks_median": fault_recovery}]
     return doc
 
 
@@ -215,3 +226,46 @@ def test_fleet_slow_runner_passes_via_ratio(tmp_path):
     # Both fleet cells uniformly slower: the ratio holds, gate passes.
     assert _run(tmp_path, _doc(),
                 _doc(fleet_rebal=290.0, fleet_static=280.0)) == 0
+
+
+# -- the fault-recovery cell ---------------------------------------------------
+
+def test_missing_fresh_fault_cell_fails(tmp_path):
+    assert _run(tmp_path, _doc(), _doc(with_fault=False)) == 1
+
+
+def test_old_baseline_without_fault_warns_and_passes(tmp_path):
+    """A baseline predating fault_rows must not block the transition:
+    the faulted-throughput gate is skipped with a warning, but the
+    fresh-only checks (exercised retries, bounded recovery) still
+    gate -- they need no baseline."""
+    assert _run(tmp_path, _doc(with_fault=False), _doc()) == 0
+    assert _run(tmp_path, _doc(with_fault=False),
+                _doc(fault_recovery=20.0)) == 1
+
+
+def test_fault_cell_without_retries_is_vacuous_and_fails(tmp_path):
+    # A clean-vs-faulted "parity" where no fault ever fired proves
+    # nothing about the recovery path; the cell must exercise it.
+    assert _run(tmp_path, _doc(), _doc(fault_retries=0)) == 1
+
+
+def test_fault_recovery_ticks_bound_gates(tmp_path):
+    # Recovery latency is step-counted (runner-independent): a window
+    # that takes 20 engine steps to land after its first retry fails.
+    assert _run(tmp_path, _doc(), _doc(fault_recovery=20.0)) == 1
+    assert _run(tmp_path, _doc(), _doc(fault_recovery=20.0),
+                extra=("--recovery-ticks-max", "24")) == 0
+
+
+def test_fault_throughput_regression_fails(tmp_path):
+    # Faulted throughput collapsed AND the faulted-over-clean ratio
+    # collapsed (clean side held): recovery itself got expensive.
+    assert _run(tmp_path, _doc(),
+                _doc(fault_faulted=8.0, fault_clean=24.0)) == 1
+
+
+def test_fault_slow_runner_passes_via_ratio(tmp_path):
+    # Both fault cells uniformly slower: the ratio holds, gate passes.
+    assert _run(tmp_path, _doc(),
+                _doc(fault_clean=12.0, fault_faulted=11.5)) == 0

@@ -1,0 +1,472 @@
+"""Fault injection + recovery: the failure semantics, pinned one path
+at a time.
+
+Layers under test:
+
+  * ``FaultInjector``/``FaultyEngine`` -- seeded determinism, scripted
+    faults, kill/revive, protocol transparency.
+  * ``StreamEngine`` recovery -- sync retry with backoff, retry
+    exhaustion -> quarantine (dead letter + failed row + live stream),
+    NaN quarantine with carry rollback (the chained-scan contract),
+    lane death -> fail-fast -> ``replace_lane_engine``.
+  * Satellites -- pipelined ``infer_collect`` pop-or-restore (recovery
+    OFF: the pre-existing desync bug), ``close()`` idempotency and
+    close-during-in-flight, ``CheckpointStore`` LRU eviction.
+  * ``LaneSupervisor`` -- journal/checkpoint/restore/replay, bitwise
+    vs the uninterrupted oracle, dedupe of replayed successes.
+  * ``FusionSession`` -- single-wing degraded ticks and wing health.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import SNNConfig, init_snn
+from repro.core._api import EngineConfig, FaultConfig, RecoveryConfig
+from repro.core.pipeline import BatchedClosedLoop, ClosedLoopResult
+from repro.fleet import (CheckpointStore, FaultInjector, InjectedFault,
+                         LaneSupervisor)
+from repro.serving import FusionSession, StreamEngine
+
+from test_stateful_stream import (_assert_matches_oracle,
+                                  _uninterrupted_oracle, _windows)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return SNNConfig(height=32, width=32, time_bins=4, conv1_features=4,
+                     conv2_features=8, hidden=32, num_classes=11)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_snn(jax.random.PRNGKey(0), cfg)
+
+
+class Stub:
+    """Minimal sync engine; each item is an int token, logits encode it
+    so results are checkable and per-window deterministic."""
+
+    def __init__(self, modality="stub"):
+        self.modality = modality
+        self.duration_us = None
+        self.infer_calls = 0
+
+    def validate(self, item):
+        pass
+
+    def prepare(self, items, *, batch_size):
+        return items
+
+    def shape_key(self, batch):
+        return (len(batch),)
+
+    def _result(self, it):
+        logits = np.full((1, 4), float(it), np.float32)
+        return ClosedLoopResult(
+            label_pred=np.zeros(1, np.int64), pwm=np.zeros((1, 4)),
+            latency_ms=1.0, energy_mj=1.0, breakdown={}, realtime=True,
+            sustained_rate_hz=1.0, logits=logits)
+
+    def infer(self, batch):
+        self.infer_calls += 1
+        return [None if it is None else self._result(it) for it in batch]
+
+
+class SplitStub(Stub):
+    """Stub + the async dispatch/collect split; ``fail_collects`` makes
+    the next N ``infer_collect`` calls raise (raw, not injector-driven:
+    the pop-or-restore satellite predates the recovery layer)."""
+
+    def __init__(self, modality="stub"):
+        super().__init__(modality)
+        self.fail_collects = 0
+        self.collect_calls = 0
+
+    def infer_dispatch(self, batch):
+        return list(batch)
+
+    def infer_collect(self, pending):
+        self.collect_calls += 1
+        if self.fail_collects > 0:
+            self.fail_collects -= 1
+            raise RuntimeError("device fell over")
+        return [None if it is None else self._result(it) for it in pending]
+
+
+def _engine(slots=2, *, stub=None, recovery=None, **cfg_kw):
+    return StreamEngine(
+        engines=[stub or Stub()],
+        config=EngineConfig(max_streams=slots, recovery=recovery, **cfg_kw))
+
+
+# ----------------------------------------------------------------------
+# FaultInjector: determinism, scripting, transparency.
+# ----------------------------------------------------------------------
+
+def _drive(seed, n=40):
+    """One fixed call sequence against a seeded injector; returns which
+    calls faulted and how."""
+    inj = FaultInjector(FaultConfig(seed=seed, step_error_rate=0.2,
+                                    nan_rate=0.2))
+    eng = inj.wrap(Stub())
+    trace = []
+    for i in range(n):
+        try:
+            res = eng.infer([i])
+            trace.append("nan" if not np.all(np.isfinite(res[0].logits))
+                         else "ok")
+        except InjectedFault:
+            trace.append("err")
+    return trace, dict(inj.counters)
+
+
+def test_injector_is_deterministic_per_seed():
+    t1, c1 = _drive(seed=3)
+    t2, c2 = _drive(seed=3)
+    assert t1 == t2 and c1 == c2
+    assert c1["errors"] > 0 and c1["nans"] > 0   # both modes exercised
+    t3, _ = _drive(seed=4)
+    assert t3 != t1                               # seed actually matters
+
+
+def test_scripted_faults_and_kill_revive():
+    inj = FaultInjector(FaultConfig(seed=0))      # all rates 0
+    stub = Stub()
+    eng = inj.wrap(stub)
+    assert np.isfinite(eng.infer([7])[0].logits).all()
+    inj.fail_next(kind="error")
+    with pytest.raises(InjectedFault):
+        eng.infer([7])
+    inj.fail_next(kind="nan")
+    assert not np.isfinite(eng.infer([7])[0].logits).any()
+    inj.kill("stub")
+    with pytest.raises(InjectedFault, match="killed"):
+        eng.infer([7])
+    assert stub.infer_calls == 2                  # kill never reaches inner
+    inj.revive("stub")
+    assert np.isfinite(eng.infer([7])[0].logits).all()
+    # Scripted faults for another modality don't fire here.
+    inj.fail_next("frame", kind="error")
+    eng.infer([7])
+    assert inj._scripted                          # still queued
+
+
+def test_proxy_is_transparent():
+    inj = FaultInjector()
+    plain, split = inj.wrap(Stub()), inj.wrap(SplitStub())
+    # Capability probe: the split surfaces only when the inner has it.
+    assert getattr(plain, "infer_dispatch", None) is None
+    assert split.infer_collect(split.infer_dispatch([3]))[0] is not None
+    # Attribute writes land on the inner engine (duration latching).
+    plain.duration_us = 1000
+    assert plain.inner.duration_us == 1000
+
+
+# ----------------------------------------------------------------------
+# Engine recovery: retry, quarantine, rollback, lane death.
+# ----------------------------------------------------------------------
+
+def test_sync_retry_recovers_the_window():
+    inj = FaultInjector()
+    stub = Stub()
+    eng = _engine(stub=inj.wrap(stub),
+                  recovery=RecoveryConfig(max_retries=2, backoff_steps=1))
+    h = eng.open(modality="stub")
+    h.submit(5)
+    inj.fail_next(kind="error")
+    assert eng.step() == []                       # failed step: no result
+    assert eng.step() == []                       # backoff step: lane idle
+    [r] = eng.step()                              # retried and served
+    assert r.ok and r.seq == 0
+    assert np.unique(r.result.logits).item() == 5.0
+    assert eng.telemetry("stub").retries == 1
+    assert h.stats.snapshot().retries == 1
+    assert [f["kind"] for f in eng.fault_log] == ["retry"]
+
+
+def test_retry_exhaustion_quarantines_but_stream_survives():
+    inj = FaultInjector()
+    eng = _engine(stub=inj.wrap(Stub()),
+                  recovery=RecoveryConfig(max_retries=1, backoff_steps=0,
+                                          dead_after=10))
+    h = eng.open(modality="stub")
+    h.submit(5)
+    inj.fail_next(kind="error", count=2)          # initial try + 1 retry
+    assert eng.step() == []
+    [r] = eng.step()
+    assert r.status == "failed" and r.result is None and not r.ok
+    [dl] = eng.dead_letters("stub")
+    assert dl.item == 5 and dl.seq == 0 and dl.stream_id == h.stream_id
+    assert eng.telemetry("stub").quarantined == 1
+    # The stream is alive: the next window is served normally.
+    h.submit(6)
+    [r2] = eng.step()
+    assert r2.ok and r2.seq == 1
+
+
+def test_nan_output_quarantines_immediately():
+    inj = FaultInjector()
+    eng = _engine(stub=inj.wrap(Stub()), recovery=RecoveryConfig())
+    h = eng.open(modality="stub")
+    h.submit(3)
+    inj.fail_next(kind="nan")
+    [r] = eng.step()
+    assert r.status == "failed" and "non-finite" in r.error
+    assert eng.telemetry("stub").retries == 0     # no retry: deterministic
+    h.submit(4)
+    [r2] = eng.step()
+    assert r2.ok
+
+
+def test_quarantine_rolls_carry_back_to_pre_window_value(params, cfg):
+    """w0 ok, w1 NaN-poisoned (failed), w2 ok: the surviving scan must
+    equal the uninterrupted chained scan of [w0, w2] -- the quarantined
+    window leaves no trace in the carry."""
+    ws = _windows(3, seed=11)
+    config = EngineConfig(max_streams=1, recovery=RecoveryConfig())
+    inj = FaultInjector()
+    inner = BatchedClosedLoop.from_config(params, cfg, config)
+    eng = StreamEngine(engines=[inj.wrap(inner)], config=config)
+    h = eng.open(modality="event", stateful=True)
+    h.submit(ws[0])
+    [r0] = eng.step()
+    h.submit(ws[1])
+    inj.fail_next(kind="nan")
+    [r1] = eng.step()
+    assert r1.status == "failed"
+    h.submit(ws[2])
+    [r2] = eng.step()
+    assert r2.ok
+    ids, per_window = _uninterrupted_oracle(params, cfg,
+                                            {h.stream_id: [ws[0], ws[2]]})
+    _assert_matches_oracle(
+        [r0, dataclasses.replace(r2, seq=1)], ids, per_window)
+
+
+def test_lane_death_fail_fast_then_replace(params=None, cfg=None):
+    inj = FaultInjector()
+    stub = Stub()
+    eng = _engine(stub=inj.wrap(stub),
+                  recovery=RecoveryConfig(max_retries=0, backoff_steps=0,
+                                          dead_after=2))
+    h = eng.open(modality="stub")
+    inj.kill("stub")
+    for i in range(2):                            # two failed lane steps
+        h.submit(i)
+        [r] = eng.step()
+        assert r.status == "failed"
+    assert eng.telemetry("stub").dead
+    calls = stub.infer_calls
+    h.submit(9)
+    [r] = eng.step()                              # fail-fast: no engine call
+    assert r.status == "failed" and stub.infer_calls == calls
+    assert any(f["kind"] == "lane_dead" for f in eng.fault_log)
+    # Install a fresh engine: the lane serves again (kill() tracked the
+    # old proxy; the replacement is clean).
+    inj.revive("stub")
+    eng.replace_lane_engine("stub", engine=Stub())
+    assert not eng.telemetry("stub").dead
+    h.submit(10)
+    [r] = eng.step()
+    assert r.ok and np.unique(r.result.logits).item() == 10.0
+
+
+def test_pipelined_retry_keeps_carry_intact(params, cfg):
+    """A failed pipelined collect requeues its windows and re-dispatches
+    with the rolled-back carry: every successful window still equals the
+    uninterrupted scan."""
+    ws = _windows(4, seed=5)
+    config = EngineConfig(max_streams=1, pipeline_depth=2,
+                          recovery=RecoveryConfig(max_retries=2,
+                                                  backoff_steps=0))
+    inj = FaultInjector()
+    inner = BatchedClosedLoop.from_config(params, cfg, config)
+    eng = StreamEngine(engines=[inj.wrap(inner)], config=config)
+    h = eng.open(modality="event", stateful=True)
+    for w in ws:
+        h.submit(w)
+    inj.fail_next(kind="error")                   # first collect fails
+    got = []
+    for _ in range(16):
+        got.extend(eng.step())
+    got.extend(eng.flush())
+    ok = [r for r in got if r.ok]
+    assert len(ok) == len(ws)                     # every window recovered
+    assert eng.telemetry("event").retries >= 1
+    ids, per_window = _uninterrupted_oracle(params, cfg, {h.stream_id: ws})
+    _assert_matches_oracle(ok, ids, per_window)
+
+
+# ----------------------------------------------------------------------
+# Satellite: pipelined infer_collect pop-or-restore (recovery OFF).
+# ----------------------------------------------------------------------
+
+def test_collect_exception_leaves_inflight_consistent():
+    """Regression: with no recovery configured, an ``infer_collect``
+    exception must leave exactly the uncollected suffix in flight --
+    retrying the step collects every window exactly once."""
+    stub = SplitStub()
+    eng = _engine(slots=2, stub=stub, pipeline_depth=1)
+    h = eng.open(modality="stub")
+    h.submit(1)
+    assert eng.step() == []                       # dispatched, depth 1
+    h.submit(2)
+    stub.fail_collects = 1
+    with pytest.raises(RuntimeError, match="fell over"):
+        eng.step()
+    # The failed record is still in flight (not lost, not duplicated).
+    assert len(eng._inflight) == 2
+    out = []
+    for _ in range(4):
+        out.extend(eng.step())
+    out.extend(eng.flush())
+    assert sorted(r.seq for r in out) == [0, 1]
+    assert all(r.ok for r in out)
+
+
+# ----------------------------------------------------------------------
+# Satellite: close() idempotency and close-during-in-flight.
+# ----------------------------------------------------------------------
+
+def test_close_is_idempotent():
+    eng = _engine()
+    h = eng.open(modality="stub")
+    h.submit(1)
+    assert h.close() == 1
+    assert h.close() == 0                         # double close: no-op
+    assert h.closed
+
+
+def test_close_with_inflight_drains_own_records_only():
+    eng = _engine(slots=2, stub=Stub(), pipeline_depth=2)
+    a = eng.open(modality="stub", stream_id="a")
+    b = eng.open(modality="stub", stream_id="b")
+    for i in range(2):
+        a.submit(10 + i)
+        b.submit(20 + i)
+    eng.step()
+    eng.step()                                    # both steps in flight
+    assert a.close() == 2                         # both a-windows in flight
+    out = eng.flush()
+    # The lane-mate's windows all land; nothing is emitted for "a".
+    assert sorted((r.stream_id, r.seq) for r in out) == [("b", 0), ("b", 1)]
+    assert [np.unique(r.result.logits).item() for r in out] == [20.0, 21.0]
+
+
+# ----------------------------------------------------------------------
+# Satellite: CheckpointStore capacity bound + LRU eviction.
+# ----------------------------------------------------------------------
+
+def test_store_lru_eviction_and_stats():
+    store = CheckpointStore(capacity=2)
+    i1, i2 = store.put({"n": 1}), store.put({"n": 2})
+    assert store.get(i1) == {"n": 1}              # refreshes i1's recency
+    i3 = store.put({"n": 3})                      # evicts i2 (LRU), not i1
+    assert store.stats["evicted"] == 1
+    assert i2 not in store and i1 in store and i3 in store
+    with pytest.raises(KeyError):
+        store.get(i2)
+    # Consumed blobs free capacity without counting as evictions.
+    store.consume(i1)
+    store.put({"n": 4})
+    assert store.stats["evicted"] == 1
+    with pytest.raises(ValueError):
+        CheckpointStore(capacity=0)
+
+
+# ----------------------------------------------------------------------
+# LaneSupervisor: checkpoint/restore/replay, bitwise.
+# ----------------------------------------------------------------------
+
+def test_supervisor_restores_bitwise_after_lane_death(params, cfg):
+    ws = _windows(8, seed=7)
+    config = EngineConfig(
+        max_streams=1,
+        recovery=RecoveryConfig(max_retries=0, backoff_steps=0,
+                                dead_after=1, checkpoint_every=2))
+    inj = FaultInjector()
+    make = lambda: inj.wrap(BatchedClosedLoop.from_config(
+        params, cfg, config))
+    eng = StreamEngine(engines=[make()], config=config)
+    sup = LaneSupervisor(eng, store=CheckpointStore(capacity=4),
+                         rebuild=lambda modality: make())
+    h = sup.watch(eng.open(modality="event", stateful=True))
+    sid = h.stream_id
+    got = []
+    for k, w in enumerate(ws):
+        sup.submit(sid, w)
+        if k == 4:
+            inj.kill("event")                     # lane dies mid-flight
+        got.extend(sup.tick(eng.step()))
+        if k == 5:
+            inj.revive("event")                   # rebuilds come up clean
+    for _ in range(8):                            # drain the replay
+        got.extend(sup.tick(eng.step()))
+    assert sup.stats["restores"] >= 1
+    assert sup.stats["checkpoints"] >= 1
+    assert sup.stats["replayed"] >= 1
+    ok = [r for r in got if r.ok]
+    # Every window eventually succeeded, each (sid, seq) exactly once.
+    assert sorted(r.seq for r in ok) == list(range(len(ws)))
+    ids, per_window = _uninterrupted_oracle(params, cfg, {sid: ws})
+    _assert_matches_oracle(ok, ids, per_window)
+
+
+def test_supervisor_raises_on_evicted_checkpoint():
+    eng = _engine(stub=Stub(), recovery=RecoveryConfig(checkpoint_every=1))
+    store = CheckpointStore(capacity=1)
+    sup = LaneSupervisor(eng, store=store, rebuild=lambda m: Stub())
+    h = sup.watch(eng.open(modality="stub"))
+    sup.tick(eng.step())                          # checkpoint lands
+    store.put({"squatter": True})                 # evicts the checkpoint
+    eng._lanes["stub"].dead = True                # simulate lane death
+    with pytest.raises(RuntimeError, match="evicted"):
+        sup.recover("stub")
+
+
+# ----------------------------------------------------------------------
+# FusionSession: degraded single-wing ticks + wing health.
+# ----------------------------------------------------------------------
+
+def test_fusion_degrades_to_surviving_wing():
+    inj = FaultInjector()
+    event, frame = Stub("event"), Stub("frame")
+    eng = StreamEngine(
+        engines=[inj.wrap(event), inj.wrap(frame)],
+        config=EngineConfig(max_streams=1,
+                            recovery=RecoveryConfig(max_retries=0,
+                                                    backoff_steps=0,
+                                                    dead_after=2)))
+    sess = FusionSession(eng)
+    sess.submit(1, 101)
+    [r] = sess.step()
+    assert r.status == "ok" and r.modality == "fusion"
+    assert sess.ticks_fused == 1
+    inj.kill("frame")                             # frame wing goes down
+    degraded = []
+    for t in range(3):
+        sess.submit(2 + t, 102 + t)
+        degraded.extend(sess.step())
+    assert len(degraded) == 3
+    assert all(r.status == "degraded" for r in degraded)
+    # The surviving wing's result carries the tick, flagged.
+    d = degraded[0]
+    assert np.unique(d.result.logits).item() == 2.0      # event wing's
+    assert d.result.breakdown["degraded_wing"] == "frame"
+    assert sess.ticks_degraded == 3
+    assert sess.wing_failures == {"event": 0, "frame": 3}
+    health = sess.wing_health()
+    assert health["frame"]["dead"] and not health["event"]["dead"]
+    assert health["frame"]["failures_seen"] == 3
+    # Both wings down: the tick fails outright but still emits in order.
+    inj.kill("event")
+    sess.submit(5, 105)
+    sess.submit(6, 106)
+    rows = []
+    for _ in range(3):
+        rows.extend(sess.step())
+    assert [r.status for r in rows] == ["failed", "failed"]
+    assert [r.seq for r in rows] == [4, 5]
+    assert sess.ticks_failed == 2

@@ -20,10 +20,19 @@ ratio itself (``--stateful-ratio-floor``, default 0.95): carried state
 must cost less than 5% of stateless throughput on ANY runner, since both
 sides of the ratio run on the same machine.
 
-The ``fusion_rows`` cell (cross-modal FusionSession ticks/s) follows the
-same pattern: absolute fused ticks/s against the baseline, with the
-runner-independent fused-vs-separate ratio (one engine serving both
-wings vs two single-wing engines, same machine) as the fallback.
+The ``fusion_rows`` cells (cross-modal FusionSession ticks/s, one row
+per session count) follow the same pattern per row: absolute fused
+ticks/s against the baseline, with the runner-independent
+fused-vs-separate ratio (one co-scheduled megastep engine serving both
+wings vs two single-wing engines, same machine) as the fallback -- PLUS
+a hard fresh-only floor on that ratio itself (``--fusion-ratio-floor``,
+default 1.1) at >= 2 sessions: fused serving must actually beat the
+separate wings on ANY runner, since both sides run on the same machine.
+
+The ``hetero_rows`` cell (mixed event+frame engine vs the per-wing
+engines) is gated on absolute mixed windows/s against the baseline,
+with the runner-independent mixed-over-serial ratio (the mixed engine
+vs the harmonic mean of the two wings, same machine) as the fallback.
 
 The ``sharded_rows`` cells (slot-axis-sharded serving at each device
 count) are gated per device count: absolute windows/s against the
@@ -110,6 +119,9 @@ def main(argv=None) -> int:
     ap.add_argument("--recovery-ticks-max", type=float, default=8.0,
                     help="bound on the fault cell's median recovery "
                          "cost in engine steps (deterministic)")
+    ap.add_argument("--fusion-ratio-floor", type=float, default=1.1,
+                    help="hard floor on fresh fused/separate ticks-per-s "
+                         "at >= 2 sessions (runner-independent)")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
@@ -161,26 +173,77 @@ def main(argv=None) -> int:
                   f"{args.stateful_ratio_floor:.2f} (state carry is "
                   f"effectively free)")
 
-    # The cross-modal fusion cell: a fresh run missing it is a harness
-    # regression; a baseline predating fusion_rows only warns (artifact
-    # transition), the same policy as stateful_rows.
+    # The cross-modal fusion cells, one row per session count: a fresh
+    # run missing them is a harness regression; a baseline predating
+    # fusion_rows (or a swept session count) only warns (artifact
+    # transition). The baseline-relative gate runs per session count
+    # present in both artifacts -- but the hard fused-over-separate
+    # floor needs only the FRESH run (both sides of the ratio came off
+    # the same machine), so it is enforced unconditionally at >= 2
+    # sessions (a single session cannot amortize the shared step).
     if "fusion_rows" not in fresh_doc:
         print("FAIL: fresh artifact has no fusion_rows cell")
         ok = False
-    elif "fusion_rows" not in base_doc:
-        print("WARN: baseline has no fusion_rows cell (predates fusion "
-              "serving); skipping the fusion gate -- refresh the "
-              "baseline")
     else:
-        fbase = base_doc["fusion_rows"][0]
-        ffresh = fresh_doc["fusion_rows"][0]
+        fresh_by_s = {int(r["sessions"]): r
+                      for r in fresh_doc["fusion_rows"]}
+        base_by_s = {int(r["sessions"]): r
+                     for r in base_doc.get("fusion_rows", [])}
+        if not base_by_s:
+            print("WARN: baseline has no fusion_rows cell (predates "
+                  "fusion serving); skipping the fusion gate -- "
+                  "refresh the baseline")
+        for s in sorted(fresh_by_s):
+            ffresh = fresh_by_s[s]
+            fresh_ratio = float(ffresh["fused_over_separate"])
+            fbase = base_by_s.get(s)
+            if fbase is None and base_by_s:
+                print(f"WARN: baseline has no fusion_rows entry at "
+                      f"S={s} (predates the session sweep); skipping "
+                      f"its baseline-relative gate -- refresh the "
+                      f"baseline")
+            elif fbase is not None:
+                ok &= _gate(
+                    f"fused ticks/s @ S={s}",
+                    float(fbase["fused_ticks_per_s"]),
+                    float(ffresh["fused_ticks_per_s"]),
+                    float(fbase["fused_over_separate"]), fresh_ratio,
+                    "fused-vs-separate ratio", args.tolerance)
+            if s < 2:
+                continue
+            if fresh_ratio < args.fusion_ratio_floor:
+                print(f"FAIL: fused serving does not beat separate "
+                      f"wings on this very runner at S={s}: "
+                      f"fused/separate {fresh_ratio:.3f} < "
+                      f"{args.fusion_ratio_floor:.2f}")
+                ok = False
+            else:
+                print(f"OK: fused/separate {fresh_ratio:.3f} >= "
+                      f"{args.fusion_ratio_floor:.2f} @ S={s} "
+                      f"(co-scheduled megastep pays for itself)")
+
+    # The mixed-fleet hetero cell: same transition policy (missing
+    # fresh FAIL, missing baseline WARN); absolute mixed windows/s
+    # against the baseline with the runner-independent
+    # mixed-over-serial ratio (mixed engine vs the harmonic mean of
+    # the two wings, both sides off the same machine) as the fallback.
+    if "hetero_rows" not in fresh_doc:
+        print("FAIL: fresh artifact has no hetero_rows cell")
+        ok = False
+    elif "hetero_rows" not in base_doc:
+        print("WARN: baseline has no hetero_rows cell (predates the "
+              "mixed-fleet gate); skipping the hetero gate -- refresh "
+              "the baseline")
+    else:
+        hbase = base_doc["hetero_rows"][0]
+        hfresh = fresh_doc["hetero_rows"][0]
         ok &= _gate(
-            f"fused ticks/s @ S={ffresh.get('sessions')}",
-            float(fbase["fused_ticks_per_s"]),
-            float(ffresh["fused_ticks_per_s"]),
-            float(fbase["fused_over_separate"]),
-            float(ffresh["fused_over_separate"]),
-            "fused-vs-separate ratio", args.tolerance)
+            "hetero mixed windows/s",
+            float(hbase["mixed_windows_per_s"]),
+            float(hfresh["mixed_windows_per_s"]),
+            float(hbase["mixed_over_serial"]),
+            float(hfresh["mixed_over_serial"]),
+            "mixed-over-serial ratio", args.tolerance)
 
     # The sharded serving cells: one row per forced-host-device count,
     # keyed on "devices" rather than "batch_size". Same transition

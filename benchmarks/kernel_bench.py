@@ -311,120 +311,125 @@ def stateful_rows(batch_sizes=(1, 4, 8), windows_per_stream=16,
     return rows
 
 
-def fusion_rows(sessions=2, ticks_per_session=8, repeats=REPEATS,
-                out_json="BENCH_stream.json"):
+def fusion_rows(session_counts=(1, 2, 4), ticks_per_session=8,
+                repeats=REPEATS, out_json="BENCH_stream.json"):
     """Cross-modal fusion throughput: fused event+frame streams (one
-    FusionSession per sensor head, both wings in ONE StreamEngine, one
-    jit'd call per wing per step) vs the same workload with the two
-    wings served SEPARATELY (an event-only and a frame-only engine run
-    back to back). A tick = one event window + one frame window + the
-    late-logit fuse; the fused side also pays the host-side pairing, so
-    the ratio (fused / separate) is the cost of the fusion abstraction
-    -- it should sit near (or above, thanks to shared stepping) 1.0.
-    Appended to the ``stream_rows`` artifact under ``fusion_rows`` and
-    gated by ``check_regression`` with the runner-independent ratio
-    fallback."""
+    FusionSession per sensor head, both wings in ONE StreamEngine with
+    co-scheduled ticks, the cross-wing megastep, and depth-1 pipelined
+    dispatch -- one fused jit'd call per step) vs the same workload with
+    the two wings served SEPARATELY (an event-only and a frame-only
+    engine run back to back, the pre-fusion serving shape). A tick = one
+    event window + one frame window + the late-logit fuse; the ratio
+    (fused / separate) is what the fusion fast path buys over decoupled
+    wings and is gated by ``check_regression`` both against the baseline
+    and with a runner-independent fresh-only floor (>= 1.1 at >= 2
+    sessions). Swept over session counts; appended to the
+    ``stream_rows`` artifact under ``fusion_rows``."""
     scfg = SNNConfig(height=32, width=32, time_bins=8, conv1_features=4,
                      conv2_features=8, hidden=32, num_classes=11)
     tcfg = TCNConfig(height=32, width=32, conv1_features=4,
                      conv2_features=8, hidden=32, num_classes=11)
     snn_params = init_snn(jax.random.PRNGKey(0), scfg)
     tcn_params = init_tcn(jax.random.PRNGKey(1), tcfg)
-    rng = np.random.default_rng(0)
-    ticks = {s: [(ev.synthetic_gesture_events(rng, (s + k) % 11,
-                                              mean_events=3000,
-                                              height=32, width=32),
-                  fr.synthetic_gesture_frames(rng, (s + k) % 11,
-                                              height=32, width=32))
-                 for k in range(ticks_per_session)]
-             for s in range(sessions)}
-    n_ticks = sessions * ticks_per_session
+    rows, artifact = [], []
+    for sessions in session_counts:
+        rng = np.random.default_rng(0)
+        ticks = {s: [(ev.synthetic_gesture_events(rng, (s + k) % 11,
+                                                  mean_events=3000,
+                                                  height=32, width=32),
+                      fr.synthetic_gesture_frames(rng, (s + k) % 11,
+                                                  height=32, width=32))
+                     for k in range(ticks_per_session)]
+                 for s in range(sessions)}
+        n_ticks = sessions * ticks_per_session
 
-    def fused_cell():
-        eng = StreamEngine(
-            engines=[BatchedClosedLoop(snn_params, scfg),
-                     FrameTCNEngine(tcn_params, tcfg)],
-            config=EngineConfig(max_streams=sessions))
-        sess = {s: FusionSession(eng, session_id=f"head{s}")
-                for s in range(sessions)}
+        def fused_cell():
+            eng = StreamEngine(
+                engines=[BatchedClosedLoop(snn_params, scfg),
+                         FrameTCNEngine(tcn_params, tcfg)],
+                config=EngineConfig(max_streams=sessions, megastep=True,
+                                    pipeline_depth=1))
+            sess = {s: FusionSession(eng, session_id=f"head{s}")
+                    for s in range(sessions)}
 
-        def submit_all():
-            for s in range(sessions):
-                for ev_w, fr_w in ticks[s]:
-                    sess[s].submit(ev_w, fr_w)
+            def submit_all():
+                for s in range(sessions):
+                    for ev_w, fr_w in ticks[s]:
+                        sess[s].submit(ev_w, fr_w)
 
-        def drain_all():
-            # One engine drain; rows routed across the sharing sessions
-            # (each absorb() keeps its own rows, hands the rest on).
-            rows = eng.run()
-            n = 0
-            for s in sess.values():
-                rows = s.absorb(rows)
-                n += len(s.drain())
-            assert not rows
-            return n
+            def drain_all():
+                # One engine drain; rows routed across the sharing
+                # sessions (each absorb() keeps its own rows, hands the
+                # rest on).
+                rows_ = eng.run()
+                n = 0
+                for s in sess.values():
+                    rows_ = s.absorb(rows_)
+                    n += len(s.drain())
+                assert not rows_
+                return n
 
-        submit_all()            # warm-up: compile both wings' shapes
-        drain_all()
+            submit_all()        # warm-up: compile the fused megastep
+            drain_all()
 
-        def measure():
-            submit_all()
-            t0 = time.perf_counter()
-            n = drain_all()
-            assert n == n_ticks
-            return n / (time.perf_counter() - t0)
+            def measure():
+                submit_all()
+                t0 = time.perf_counter()
+                n = drain_all()
+                assert n == n_ticks
+                return n / (time.perf_counter() - t0)
 
-        return measure
+            return measure
 
-    def separate_cell():
-        ev_eng = StreamEngine(
-            engines=[BatchedClosedLoop(snn_params, scfg)],
-            config=EngineConfig(max_streams=sessions))
-        fr_eng = StreamEngine(
-            engines=[FrameTCNEngine(tcn_params, tcfg)],
-            config=EngineConfig(max_streams=sessions))
-        ev_h = {s: ev_eng.open(stream_id=f"dvs{s}")
-                for s in range(sessions)}
-        fr_h = {s: fr_eng.open(stream_id=f"cam{s}")
-                for s in range(sessions)}
+        def separate_cell():
+            ev_eng = StreamEngine(
+                engines=[BatchedClosedLoop(snn_params, scfg)],
+                config=EngineConfig(max_streams=sessions))
+            fr_eng = StreamEngine(
+                engines=[FrameTCNEngine(tcn_params, tcfg)],
+                config=EngineConfig(max_streams=sessions))
+            ev_h = {s: ev_eng.open(stream_id=f"dvs{s}")
+                    for s in range(sessions)}
+            fr_h = {s: fr_eng.open(stream_id=f"cam{s}")
+                    for s in range(sessions)}
 
-        def submit_all():
-            for s in range(sessions):
-                for ev_w, fr_w in ticks[s]:
-                    ev_h[s].submit(ev_w)
-                    fr_h[s].submit(fr_w)
+            def submit_all():
+                for s in range(sessions):
+                    for ev_w, fr_w in ticks[s]:
+                        ev_h[s].submit(ev_w)
+                        fr_h[s].submit(fr_w)
 
-        submit_all()            # warm-up
-        ev_eng.run()
-        fr_eng.run()
+            submit_all()        # warm-up
+            ev_eng.run()
+            fr_eng.run()
 
-        def measure():
-            submit_all()
-            t0 = time.perf_counter()
-            n = len(ev_eng.run())
-            n_f = len(fr_eng.run())
-            assert n == n_f == n_ticks
-            return n / (time.perf_counter() - t0)
+            def measure():
+                submit_all()
+                t0 = time.perf_counter()
+                n = len(ev_eng.run())
+                n_f = len(fr_eng.run())
+                assert n == n_f == n_ticks
+                return n / (time.perf_counter() - t0)
 
-        return measure
+            return measure
 
-    cells = (fused_cell(), separate_cell())
-    samples = ([], [])
-    for _ in range(repeats):
-        samples[0].append(cells[0]())
-        samples[1].append(cells[1]())
+        cells = (fused_cell(), separate_cell())
+        samples = ([], [])
+        for _ in range(repeats):
+            samples[0].append(cells[0]())
+            samples[1].append(cells[1]())
 
-    tps_fused = float(np.median(samples[0]))
-    tps_sep = float(np.median(samples[1]))
-    ratio = tps_fused / tps_sep
-    rows = [(f"stream_fusion_S{sessions}", 1e6 / tps_fused,
-             f"fused_tps={tps_fused:.1f};separate_tps={tps_sep:.1f};"
-             f"ratio={ratio:.3f}")]
-    artifact = [{"sessions": sessions,
-                 "ticks_per_session": ticks_per_session,
-                 "separate_ticks_per_s": tps_sep,
-                 "fused_ticks_per_s": tps_fused,
-                 "fused_over_separate": ratio}]
+        tps_fused = float(np.median(samples[0]))
+        tps_sep = float(np.median(samples[1]))
+        ratio = tps_fused / tps_sep
+        rows.append((f"stream_fusion_S{sessions}", 1e6 / tps_fused,
+                     f"fused_tps={tps_fused:.1f};"
+                     f"separate_tps={tps_sep:.1f};ratio={ratio:.3f}"))
+        artifact.append({"sessions": sessions,
+                         "ticks_per_session": ticks_per_session,
+                         "separate_ticks_per_s": tps_sep,
+                         "fused_ticks_per_s": tps_fused,
+                         "fused_over_separate": ratio})
     if out_json:
         try:
             with open(out_json) as f:
@@ -438,10 +443,15 @@ def fusion_rows(sessions=2, ticks_per_session=8, repeats=REPEATS,
 
 
 def hetero_rows(slots=4, windows_per_stream=8,
-                out_json="BENCH_hetero.json"):
+                out_json="BENCH_hetero.json",
+                stream_json="BENCH_stream.json"):
     """Unified-engine throughput: the event-SNN wing vs the frame-TCN wing
     (each alone on its own StreamEngine), and both mixed in one engine
-    (one jit'd call per wing per step)."""
+    (one jit'd call per wing per step). ``mixed_over_serial`` compares
+    the mixed engine against serving the same two-wing workload serially
+    (the harmonic mean of the per-wing rates); it is folded into the
+    ``BENCH_stream.json`` artifact as a ``hetero_rows`` cell so
+    ``check_regression`` gates the mixed-fleet path."""
     scfg = SNNConfig(height=32, width=32, time_bins=8, conv1_features=4,
                      conv2_features=8, hidden=32, num_classes=11)
     tcfg = TCNConfig(height=32, width=32, conv1_features=4,
@@ -489,21 +499,37 @@ def hetero_rows(slots=4, windows_per_stream=8,
     wps_event = run([mk_event()], ev_subs)
     wps_frame = run([mk_frame()], fr_subs)
     wps_mixed = run([mk_event(), mk_frame()], ev_subs + fr_subs)
+    # Serving the mixed workload serially (all-event then all-frame)
+    # moves windows at the harmonic mean of the per-wing rates; the
+    # mixed engine should beat it by stepping both wings per round.
+    wps_serial = 2.0 / (1.0 / wps_event + 1.0 / wps_frame)
+    mixed_over_serial = wps_mixed / wps_serial
 
     rows = [
         ("hetero_event_snn", 1e6 / wps_event, f"wps={wps_event:.1f}"),
         ("hetero_frame_tcn", 1e6 / wps_frame, f"wps={wps_frame:.1f}"),
         ("hetero_mixed", 1e6 / wps_mixed,
-         f"wps={wps_mixed:.1f};both_engines_per_step"),
+         f"wps={wps_mixed:.1f};both_engines_per_step;"
+         f"mixed_over_serial={mixed_over_serial:.3f}"),
     ]
+    cell = {"slots_per_engine": slots,
+            "windows_per_stream": windows_per_stream,
+            "event_windows_per_s": wps_event,
+            "frame_windows_per_s": wps_frame,
+            "mixed_windows_per_s": wps_mixed,
+            "mixed_over_serial": mixed_over_serial}
     if out_json:
         with open(out_json, "w") as f:
-            json.dump({"benchmark": "hetero_engines",
-                       "slots_per_engine": slots,
-                       "windows_per_stream": windows_per_stream,
-                       "event_windows_per_s": wps_event,
-                       "frame_windows_per_s": wps_frame,
-                       "mixed_windows_per_s": wps_mixed}, f, indent=2)
+            json.dump({"benchmark": "hetero_engines", **cell}, f, indent=2)
+    if stream_json:
+        try:
+            with open(stream_json) as f:
+                doc = json.load(f)
+        except FileNotFoundError:
+            doc = {"benchmark": "stream_closed_loop"}
+        doc["hetero_rows"] = [cell]
+        with open(stream_json, "w") as f:
+            json.dump(doc, f, indent=2)
     return rows
 
 

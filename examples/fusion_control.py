@@ -8,7 +8,7 @@ are fused late -- a convex combination of the two wings' logits -- into
 a single PWM actuation per tick, with per-wing Kraken latency/energy
 attribution.
 
-Two session-API capabilities on display:
+Three session-API capabilities on display:
 
   * FusionSession -- one event handle + one frame handle bound into a
     single logical stream; each step still runs ONE jit'd call per
@@ -18,16 +18,22 @@ Two session-API capabilities on display:
     a BRAND-NEW StreamEngine, where the remaining ticks continue
     bitwise-identical to the uninterrupted run: stream migration
     between engine processes.
+  * the fused fast path -- co-scheduled fusion ticks plus the
+    cross-wing megastep (``EngineConfig(megastep=True)``) against the
+    same workload on two decoupled single-wing engines: the demo times
+    both and EXITS NONZERO if fused serving is slower, so the CI smoke
+    job enforces the perf claim, not just the semantics.
 
 Run:  PYTHONPATH=src python examples/fusion_control.py
 """
 import pickle
+import time
 
 import jax
 import numpy as np
 
 from repro.configs.colibries import SMOKE, TCN_SMOKE
-from repro.core import FrameTCNEngine, init_snn, init_tcn
+from repro.core import EngineConfig, FrameTCNEngine, init_snn, init_tcn
 from repro.core import events as ev
 from repro.core import frames as fr
 from repro.core.pipeline import BatchedClosedLoop
@@ -35,6 +41,8 @@ from repro.serving import FusionSession, StreamEngine, late_logit_fusion
 
 TICKS = 6
 CUT = 3          # migrate the stream after this many ticks
+HEADS = 2        # sensor heads in the timed fused-vs-separate race
+REPEATS = 3
 
 
 def make_engine(snn_params, tcn_params):
@@ -42,7 +50,7 @@ def make_engine(snn_params, tcn_params):
     return StreamEngine(
         engines=[BatchedClosedLoop(snn_params, SMOKE),
                  FrameTCNEngine(tcn_params, TCN_SMOKE)],
-        max_streams={"event": 1, "frame": 1},
+        config=EngineConfig(max_streams={"event": 1, "frame": 1}),
     )
 
 
@@ -109,8 +117,67 @@ def main():
     print(f"\nmigrated at tick {CUT} through a {len(blob)}-byte "
           f"checkpoint into a fresh engine: "
           f"{'bitwise-identical to the uninterrupted run' if same else 'MISMATCH'}")
-    if not same:
+
+    # -- the perf claim, enforced: fused must beat separate wings -------
+    ratio = fused_vs_separate(snn_params, tcn_params)
+    print(f"\nfused-vs-separate tick ratio over {HEADS} heads: "
+          f"{ratio:.2f}x "
+          f"({'fused serving is faster' if ratio >= 1.0 else 'FUSED IS SLOWER'})")
+    if not (same and ratio >= 1.0):
         raise SystemExit(1)
+
+
+def fused_vs_separate(snn_params, tcn_params):
+    """Median fused/separate ticks-per-second over REPEATS interleaved
+    passes: HEADS FusionSessions on one co-scheduled megastep engine vs
+    the same windows through decoupled event-only + frame-only engines."""
+    heads = {h: [sensor_head(np.random.default_rng(40 + h), k)
+                 for k in range(TICKS)] for h in range(HEADS)}
+
+    eng = StreamEngine(
+        engines=[BatchedClosedLoop(snn_params, SMOKE),
+                 FrameTCNEngine(tcn_params, TCN_SMOKE)],
+        config=EngineConfig(max_streams=HEADS, megastep=True,
+                            pipeline_depth=1))
+    sess = {h: FusionSession(eng, session_id=f"head{h}")
+            for h in range(HEADS)}
+
+    def fused_pass():
+        for h, tks in heads.items():
+            for ev_w, fr_w in tks:
+                sess[h].submit(ev_w, fr_w)
+        t0 = time.perf_counter()
+        rows = eng.run()
+        n = 0
+        for s in sess.values():
+            rows = s.absorb(rows)
+            n += len(s.drain())
+        assert n == HEADS * TICKS and not rows
+        return n / (time.perf_counter() - t0)
+
+    ev_eng = StreamEngine(engines=[BatchedClosedLoop(snn_params, SMOKE)],
+                          config=EngineConfig(max_streams=HEADS))
+    fr_eng = StreamEngine(engines=[FrameTCNEngine(tcn_params, TCN_SMOKE)],
+                          config=EngineConfig(max_streams=HEADS))
+    ev_h = {h: ev_eng.open(stream_id=f"dvs{h}") for h in range(HEADS)}
+    fr_h = {h: fr_eng.open(stream_id=f"cam{h}") for h in range(HEADS)}
+
+    def separate_pass():
+        for h, tks in heads.items():
+            for ev_w, fr_w in tks:
+                ev_h[h].submit(ev_w)
+                fr_h[h].submit(fr_w)
+        t0 = time.perf_counter()
+        n = len(ev_eng.run()) + len(fr_eng.run())
+        assert n == 2 * HEADS * TICKS
+        return (n // 2) / (time.perf_counter() - t0)
+
+    fused_pass(), separate_pass()            # warm-up: compile both sides
+    fused, separate = [], []
+    for _ in range(REPEATS):
+        fused.append(fused_pass())
+        separate.append(separate_pass())
+    return float(np.median(fused) / np.median(separate))
 
 
 if __name__ == "__main__":

@@ -152,6 +152,23 @@ class EngineConfig:
         poison-window quarantine, dead-lane fail-fast). ``None`` (the
         default) keeps the pre-recovery failure semantics bitwise: an
         engine exception propagates to the caller.
+      * ``coschedule`` -- fusion-aware co-scheduling (default on): after
+        the slot policy assigns a lane, streams paired via
+        ``StreamEngine.pair_streams`` (a :class:`~repro.serving.session.
+        FusionSession` pairs its wings automatically) pull their partner
+        into the partner's lane for the SAME step, so both wings of a
+        tick land together instead of drifting across independently
+        contended lanes. Scheduling-only: per-window results are bitwise
+        unchanged.
+      * ``megastep`` -- fuse the event and frame wings' kernels (the
+        ``fc_lif_scan`` SNN scan and the ``ternary_matmul`` conv stack)
+        into ONE jit'd dispatch per step when both lanes have work
+        (default off). Requires exactly one event and one frame lane and
+        is single-device only (incompatible with ``mesh``). Results stay
+        bitwise-identical to the two separate per-engine calls; a lane
+        without work this step (drained, dead, or backing off) falls
+        back to the ordinary per-lane dispatch, so degraded single-wing
+        ticks keep their semantics.
 
     Frozen: a config is a value, shareable between engines and safe to
     put in tests' parametrize tables. ``replace`` derives variants
@@ -167,6 +184,8 @@ class EngineConfig:
     window_ms: float = 300.0
     mesh: Optional[Any] = None             # jax.sharding.Mesh
     recovery: Optional["RecoveryConfig"] = None
+    coschedule: bool = True
+    megastep: bool = False
 
     def __post_init__(self):
         if self.recovery is not None and not isinstance(
@@ -181,6 +200,13 @@ class EngineConfig:
             raise ValueError(
                 "fair_quantum configures the DEFAULT policy only; set "
                 "the quantum on your policy instance instead")
+        if self.megastep and self.mesh is not None:
+            raise ValueError(
+                "megastep is single-device: the fused cross-wing "
+                "dispatch lowers both wings into one program and does "
+                "not compose with mesh slot-sharding; drop mesh= or "
+                "megastep=")
+
 
 @dataclasses.dataclass(frozen=True)
 class FleetConfig:

@@ -229,6 +229,22 @@ class FrameTCNEngine:
         no-op carry."""
         return {}
 
+    def _build_run(self) -> Callable:
+        """Normalize + classify + readout for one frame batch (unjitted).
+        Factored out of :meth:`_executable` so the serving layer's fused
+        cross-wing megastep can lower the SAME function next to the
+        event wing's -- one compiled program, bitwise-identical outputs.
+        """
+        cfg = self.cfg
+
+        def run(packed, pixels):
+            out = tcn_apply(packed, fr.normalize_frames(pixels), cfg)
+            logits = out["logits"]
+            return (jnp.argmax(logits, -1), pwm_from_logits(logits),
+                    logits, out["activity_per_stream"])
+
+        return run
+
     def _executable(self, key: Tuple[int, ...]) -> Callable:
         """AOT-compile (once) and return the executable for a shape key,
         ``(batch_size, height, width, duration_us)`` -- compilation is
@@ -236,13 +252,7 @@ class FrameTCNEngine:
         exe = self._exe.get(key)
         if exe is None:
             b, h, w = int(key[0]), int(key[1]), int(key[2])
-            cfg = self.cfg
-
-            def run(packed, pixels):
-                out = tcn_apply(packed, fr.normalize_frames(pixels), cfg)
-                logits = out["logits"]
-                return (jnp.argmax(logits, -1), pwm_from_logits(logits),
-                        logits, out["activity_per_stream"])
+            run = self._build_run()
 
             px_sh = pk_sh = None
             if self.mesh is not None:
@@ -307,6 +317,37 @@ class FrameTCNEngine:
     def compiled_shape_keys(self) -> set:
         """Shape keys with a compiled executable (stepped or warmed)."""
         return set(self._exe)
+
+    # -- cross-wing megastep adapters ------------------------------------
+    # Counterparts of BatchedClosedLoop's: the serving layer's fused
+    # megastep lowers this wing's run next to the event wing's in one
+    # jit'd program (see EngineConfig.megastep).
+
+    def _mega_parts(self, key):
+        """``(run_fn, abstract_args)`` for a shape key, for fused
+        cross-wing compilation (single-device only)."""
+        if self.mesh is not None:
+            raise ValueError(
+                "the fused megastep does not compose with a mesh-attached "
+                "engine")
+        b, h, w = int(key[0]), int(key[1]), int(key[2])
+        px_abs = jax.ShapeDtypeStruct((b, h, w, 1), jnp.float32)
+        pk_abs = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(jnp.shape(a),
+                                           jnp.asarray(a).dtype),
+            self.packed)
+        return self._build_run(), (pk_abs, px_abs)
+
+    def _mega_args(self, batch: fr.PaddedFrameBatch, state):
+        """Concrete argument tuple matching :meth:`_mega_parts` (the
+        CUTIE wing carries no state; ``state`` is ignored)."""
+        return (self.packed, batch.pixels)
+
+    def _mega_split(self, out, batch: fr.PaddedFrameBatch, state):
+        """Split megastep outputs into the ``(pending, state)`` pair
+        :meth:`infer_dispatch` returns (no-op carry passthrough)."""
+        preds, pwm, logits, activity = out
+        return (batch, preds, pwm, logits, activity), state
 
     def infer_dispatch(self, batch: fr.PaddedFrameBatch, state=None):
         """Launch the jit'd call without host sync; see

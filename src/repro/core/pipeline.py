@@ -491,6 +491,50 @@ class BatchedClosedLoop:
         """Shape keys with a compiled executable (stepped or warmed)."""
         return set(self._exe)
 
+    # -- cross-wing megastep adapters ------------------------------------
+    # The serving layer's fused megastep (EngineConfig.megastep) lowers
+    # this wing's run function NEXT TO the frame wing's into one jit'd
+    # program, so XLA schedules the fc_lif_scan SNN scan and the ternary
+    # conv stack together and the engine pays one dispatch per step.
+    # The run and abstract signature are exactly what `_executable`
+    # lowers on its own, which is what keeps the fused call
+    # bitwise-identical to this wing's separate executable.
+
+    def _mega_parts(self, key):
+        """``(run_fn, abstract_args)`` for a shape key, for fused
+        cross-wing compilation. Single-device only (the serving layer
+        rejects megastep + mesh before ever calling this)."""
+        if self.mesh is not None:
+            raise ValueError(
+                "the fused megastep does not compose with a mesh-attached "
+                "engine")
+        b, n_ev, duration_us = key
+        run = self._build_run(int(duration_us))
+        ev_i32 = jax.ShapeDtypeStruct((b, n_ev), jnp.int32)
+        ev_bool = jax.ShapeDtypeStruct((b, n_ev), jnp.bool_)
+        abstract = lambda tree: jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(jnp.shape(a),
+                                           jnp.asarray(a).dtype), tree)
+        return run, (abstract(self.params), ev_i32, ev_i32, ev_i32,
+                     ev_i32, ev_bool, abstract(self._zero_state_for(b)))
+
+    def _mega_args(self, batch: ev.PaddedEventBatch, state):
+        """Concrete argument tuple matching :meth:`_mega_parts`'s
+        abstract signature (``state=None`` = the cached zero state,
+        exactly as the stateless dispatch path)."""
+        if state is None:
+            state = self._zero_state_for(batch.batch_size)
+        return (self.params, batch.x, batch.y, batch.t, batch.p,
+                batch.valid, state)
+
+    def _mega_split(self, out, batch: ev.PaddedEventBatch, state):
+        """Split this wing's megastep outputs into the same
+        ``(pending, new_state)`` pair :meth:`infer_dispatch` returns, so
+        :meth:`infer_collect` (and every recovery path built on it)
+        serves fused steps unchanged."""
+        preds, pwm, logits, rates_ps, new_state = out
+        return (batch, preds, pwm, logits, rates_ps), new_state
+
     def _account(self, num_events: int,
                  rates: Dict[str, float]) -> Dict[str, Any]:
         """Kraken latency/energy for one stream's window (pure float math)."""

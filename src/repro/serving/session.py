@@ -176,6 +176,13 @@ class FusionSession:
         self.frame = frame_handle or engine.open(
             modality="frame", stream_id=f"{session_id}:frame",
             stateful=stateful, deadline=deadline)
+        pair = getattr(engine, "pair_streams", None)
+        if pair is not None:
+            # Register the wings as one fusion pair so the engine's
+            # co-scheduler lands both windows of a tick in the same
+            # step (and the megastep, when enabled, fuses their
+            # dispatch). close() unpairs via the handles.
+            pair(self.event.stream_id, self.frame.stream_id)
         self._pending = {"event": {}, "frame": {}}
         self._emit_next = 0
         self.ticks_fused = 0

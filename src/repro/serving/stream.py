@@ -242,6 +242,9 @@ class StreamStatsSnapshot:
     deadline_miss_rate: float     # horizon_missed / horizon_deadline_windows
     retries: int = 0              # failed dispatch/collect attempts
     quarantined: int = 0          # windows moved to the dead-letter queue
+    fusion_ticks: int = 0         # paired-stream ticks observed at dispatch
+    fusion_ticks_paired: int = 0  # ... whose wings shared one engine step
+    paired_tick_rate: float = 1.0  # paired / observed (1.0 when unpaired)
 
 
 @dataclasses.dataclass
@@ -264,6 +267,8 @@ class StreamStats:
     deadline_missed: int = 0      # ... that completed past it
     retries: int = 0              # failed attempts charged to this stream
     quarantined: int = 0          # windows dead-lettered
+    fusion_ticks: int = 0         # ticks of a paired (fusion) stream seen
+    fusion_ticks_paired: int = 0  # ... both wings dispatched the same step
     horizon: int = 64             # sliding-window length (completions)
     samples: Deque = dataclasses.field(default_factory=deque, repr=False)
 
@@ -317,7 +322,11 @@ class StreamStats:
             horizon_deadline_windows=len(dated), horizon_missed=missed,
             windows_per_s=wps, queue_depth_p95=p95,
             deadline_miss_rate=missed / len(dated) if dated else 0.0,
-            retries=self.retries, quarantined=self.quarantined)
+            retries=self.retries, quarantined=self.quarantined,
+            fusion_ticks=self.fusion_ticks,
+            fusion_ticks_paired=self.fusion_ticks_paired,
+            paired_tick_rate=(self.fusion_ticks_paired / self.fusion_ticks
+                              if self.fusion_ticks else 1.0))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -346,6 +355,8 @@ class LaneTelemetry:
     retries: int = 0              # cumulative failed attempts on the lane
     quarantined: int = 0          # cumulative dead-lettered windows
     dead: bool = False            # lane declared dead (fail-fast mode)
+    paired_tick_rate: float = 1.0  # fusion ticks co-scheduled, pooled
+                                   # over the lane's paired streams
 
     @property
     def fault_rate(self) -> float:
@@ -912,6 +923,7 @@ class StreamHandle:
         lane.stateful.discard(sid)
         for key in [k for k in lane.retries if k[0] == sid]:
             del lane.retries[key]
+        eng.unpair_streams(sid)
         del eng._stream_lane[sid]
         eng._seq.pop(sid, None)
         eng._handles.pop(sid, None)
@@ -1110,6 +1122,34 @@ class StreamEngine:
                 supports_state=hasattr(e, "init_state"),
                 state_streams=[_FREE] * slots)
 
+        # Fusion-aware co-scheduling: ``_pairs`` is the bidirectional
+        # stream-pairing registry (pair_streams/unpair_streams; a
+        # FusionSession pairs its wings automatically); with
+        # ``coschedule`` on, _dispatch fixes slot assignments up so
+        # paired streams share an engine step. ``_pair_dispatch`` holds
+        # the step number a paired window was dispatched at until its
+        # partner's same-seq window dispatches (the paired_tick_rate
+        # bookkeeping).
+        self.coschedule = bool(config.coschedule)
+        self._pairs: Dict[Hashable, Hashable] = {}
+        self._pair_dispatch: Dict[tuple, int] = {}
+        self._dispatch_no = 0
+        # The fused cross-wing megastep: one jit'd dispatch serving both
+        # wings' kernels, cached per (event shape key, frame shape key).
+        self.megastep = bool(config.megastep)
+        self._mega_exe: Dict[tuple, Callable] = {}
+        if self.megastep:
+            if sorted(self._lanes) != ["event", "frame"]:
+                raise ValueError(
+                    f"EngineConfig.megastep needs exactly one event and "
+                    f"one frame lane; this engine has "
+                    f"{sorted(self._lanes)}")
+            for lane in self._lanes.values():
+                if not hasattr(lane.engine, "_mega_parts"):
+                    raise ValueError(
+                        f"engine for modality {lane.modality!r} "
+                        f"({type(lane.engine).__name__}) does not "
+                        f"support the fused megastep")
         self._stream_lane: Dict[Hashable, str] = {}
         self._seq: Dict[Hashable, int] = {}
         self._handles: Dict[Hashable, StreamHandle] = {}
@@ -1186,6 +1226,69 @@ class StreamEngine:
                 f"({type(engine).__name__}) does not implement warmup()")
         warm(shape_keys)
 
+    def warmup_megastep(self, key_pairs) -> None:
+        """Precompile fused megastep executables.
+
+        ``key_pairs`` is an iterable of ``(event_shape_key,
+        frame_shape_key)`` pairs -- each wing's full shape-key tuple
+        (``(batch, max_events, duration_us)`` / ``(batch, height,
+        width, duration_us)``). The megastep keeps its own AOT cache,
+        separate from the per-engine caches, so warm it explicitly
+        before serving a fused workload.
+        """
+        if not self.megastep:
+            raise ValueError(
+                "warmup_megastep on an engine without "
+                "EngineConfig.megastep=True")
+        ev_lane, fr_lane = self._lanes["event"], self._lanes["frame"]
+        for ev_key, fr_key in key_pairs:
+            self._mega_executable(ev_lane, fr_lane, tuple(ev_key),
+                                  tuple(fr_key))
+
+    def compiled_megastep_keys(self) -> set:
+        """``(event_key, frame_key)`` pairs with a compiled fused
+        executable (stepped or warmed)."""
+        return set(self._mega_exe)
+
+    # -- fusion pairing ---------------------------------------------------
+
+    def pair_streams(self, a: Hashable, b: Hashable) -> None:
+        """Declare two open streams (on different lanes) as the wings of
+        one fusion tick: with ``coschedule`` on, the scheduler pulls
+        both into the SAME engine step whenever either wins a slot, and
+        the pair's same-step fraction is surfaced as
+        ``paired_tick_rate`` in stream/lane telemetry.
+        :class:`~repro.serving.session.FusionSession` registers its
+        wings automatically; call this directly only for hand-rolled
+        pairings. Idempotent for the same pair; re-pairing a stream to a
+        different partner requires :meth:`unpair_streams` first."""
+        for sid in (a, b):
+            if sid not in self._stream_lane:
+                raise KeyError(f"unknown stream {sid!r}")
+        if self._stream_lane[a] == self._stream_lane[b]:
+            raise ValueError(
+                f"paired streams must live on different lanes; both "
+                f"{a!r} and {b!r} are {self._stream_lane[a]!r}")
+        if self._pairs.get(a) == b:
+            return
+        for sid in (a, b):
+            if sid in self._pairs:
+                raise ValueError(
+                    f"stream {sid!r} is already paired with "
+                    f"{self._pairs[sid]!r}; unpair_streams() first")
+        self._pairs[a] = b
+        self._pairs[b] = a
+
+    def unpair_streams(self, stream_id: Hashable) -> None:
+        """Dissolve a stream's pairing (no-op for unpaired streams);
+        called automatically when either wing closes."""
+        partner = self._pairs.pop(stream_id, None)
+        if partner is not None:
+            self._pairs.pop(partner, None)
+        for key in [k for k in self._pair_dispatch
+                    if k[0] == stream_id or k[0] == partner]:
+            del self._pair_dispatch[key]
+
     # -- fleet control-plane hooks ---------------------------------------
 
     def _lane_named(self, modality: Optional[str]) -> EngineLane:
@@ -1217,6 +1320,8 @@ class StreamEngine:
             for entry in rec.entries if entry is not None)
         h_dated = sum(s.horizon_deadline_windows for s in snaps.values())
         h_missed = sum(s.horizon_missed for s in snaps.values())
+        f_ticks = sum(s.fusion_ticks for s in snaps.values())
+        f_paired = sum(s.fusion_ticks_paired for s in snaps.values())
         return LaneTelemetry(
             modality=lane.modality,
             slots=len(lane.slots),
@@ -1230,7 +1335,8 @@ class StreamEngine:
             streams=snaps,
             retries=lane.n_retries,
             quarantined=lane.n_quarantined,
-            dead=lane.dead)
+            dead=lane.dead,
+            paired_tick_rate=f_paired / f_ticks if f_ticks else 1.0)
 
     def dead_letters(self, modality: Optional[str] = None
                      ) -> List[DeadLetter]:
@@ -1446,6 +1552,16 @@ class StreamEngine:
                     f"replacement engine for lane {lane.modality!r} has "
                     f"no attach_mesh; this engine is sharded")
             attach(self.mesh)
+        if self.megastep:
+            if not hasattr(engine, "_mega_parts"):
+                raise ValueError(
+                    f"replacement engine for lane {lane.modality!r} "
+                    f"({type(engine).__name__}) does not support the "
+                    f"fused megastep this engine is configured for")
+            # Fused executables were lowered against the old engine's
+            # abstract parameter shapes; drop them so the rebuild's
+            # first fused step re-lowers against the replacement.
+            self._mega_exe.clear()
         lane.engine = engine
         lane.supports_state = hasattr(engine, "init_state")
         lane.shape_keys = set()
@@ -1787,16 +1903,20 @@ class StreamEngine:
     def _dispatch(self, *, eager: bool) -> List[_InflightLane]:
         """Assign slots and launch every lane's jit'd call.
 
-        Phase 1 peeks the queue heads and, per lane, either runs infer to
-        completion (``eager``, the synchronous retry-safe mode: an
-        exception from ANY lane leaves every queue untouched), dispatches
-        asynchronously (pipelined, engine has the async split), or just
-        prepares the batch (pipelined fallback). Phase 2 commits the pops,
-        slot run counts, and carried-state tracking only after every
-        lane's phase 1 succeeded.
+        Phase 1 assigns every servable lane's slots (then, with fusion
+        pairs registered, runs the co-scheduling fixup so paired wings
+        share this step). Phase 2 peeks the queue heads and, per lane,
+        either runs infer to completion (``eager``, the synchronous
+        retry-safe mode: an exception from ANY lane leaves every queue
+        untouched), dispatches asynchronously (pipelined, engine has the
+        async split), or just prepares the batch (pipelined fallback) --
+        with ``megastep``, both wings instead go through ONE fused jit'd
+        call. Phase 3 commits the pops, slot run counts, and
+        carried-state tracking only after every lane's dispatch
+        succeeded.
         """
-        ran: List[_InflightLane] = []
-        state_commits: List[tuple] = []
+        self._dispatch_no += 1
+        active: List[EngineLane] = []
         for lane in self._lanes.values():
             if self.recovery is not None:
                 if lane.dead:
@@ -1812,75 +1932,58 @@ class StreamEngine:
                     lane.cooldown -= 1
                     continue
             self.policy.assign(lane)
+            active.append(lane)
+        if self._pairs and self.coschedule:
+            self._coschedule(active)
+        work: List[tuple] = []
+        for lane in active:
             heads = [
                 lane.queues[sid][0].item if sid is not _FREE else None
                 for sid in lane.slots
             ]
-            if all(w is None for w in heads):
-                continue
+            if any(w is not None for w in heads):
+                work.append((lane, heads))
+        ran: List[_InflightLane] = []
+        state_commits: List[tuple] = []
+        if self.megastep and len(work) == 2:
+            # Both wings have work this step: one fused jit'd dispatch
+            # serves the whole step (megastep requires exactly the
+            # event+frame lanes, so len(work)==2 identifies them). A
+            # single-winged step falls through to the per-lane path
+            # below -- that is the degraded case, and it keeps the
+            # ordinary dispatch semantics.
             try:
-                batch = lane.engine.prepare(heads,
-                                            batch_size=len(lane.slots))
-                key = lane.engine.shape_key(batch)
-                state_in, state_commit = self._lane_state_in(lane)
-                dispatch = getattr(lane.engine, "infer_dispatch", None)
-                collect = getattr(lane.engine, "infer_collect", None)
-                has_split = dispatch is not None and collect is not None
-                new_state = None
-                if eager or (state_in is not None and not has_split):
-                    # Synchronous infer. A stateful engine WITHOUT the
-                    # async split also lands here under pipelining: its
-                    # carry must advance in dispatch order, so its infer
-                    # cannot wait for the (later) collect.
-                    if state_in is None:
-                        # Stateless lanes ride the engines' legacy call
-                        # form by design; the deprecation nudge is for
-                        # end users.
-                        with suppress_api_deprecations():
-                            results = lane.engine.infer(batch)
-                        kind, pending = "results", results
-                    else:
-                        results, new_state = lane.engine.infer(batch,
-                                                               state_in)
-                        kind, pending = "results", results
-                elif has_split:
-                    if state_in is None:
-                        kind, pending = "handle", dispatch(batch)
-                    else:
-                        # Async dispatch: new_state is a pytree of
-                        # device futures, threaded into the NEXT
-                        # dispatch without ever blocking on (or copying
-                        # to) the host.
-                        pending, new_state = dispatch(batch, state_in)
-                        kind = "handle"
-                else:
-                    kind, pending = "batch", batch
+                recs, commits = self._mega_dispatch(work, eager)
+            except Exception:
+                if self.recovery is None:
+                    raise
+                # The fused call serves both wings, so a fault in
+                # either aborts it with every queue and carry untouched
+                # (state planning commits only on success). Fall back
+                # to per-lane dispatch for this very step: the failure
+                # localizes to the wing that actually faulted and
+                # ordinary recovery (retry/cooldown/quarantine) applies
+                # to it alone, exactly as without the megastep.
+                recs = None
+            if recs is not None:
+                ran.extend(recs)
+                state_commits.extend(commits)
+                work = []
+        for lane, heads in work:
+            try:
+                rec, commit = self._dispatch_lane(lane, heads, eager)
             except Exception as exc:
                 if self.recovery is None:
                     raise
-                # Queues are untouched (heads were only peeked): charge
-                # a retry to every window in the attempted batch, put
-                # the lane on cooldown, and keep serving other lanes.
+                # Queues are untouched (heads were only peeked):
+                # charge a retry to every window in the attempted
+                # batch, put the lane on cooldown, and keep serving
+                # other lanes.
                 self._note_lane_failure(lane, heads, exc)
                 continue
-            prev_carry = None
-            if self.recovery is not None and state_in is not None:
-                # The rollback target quarantine restores: each
-                # dispatched stateful stream's pre-window carry, as a
-                # lazy device slice of the state that was fed in.
-                prev_carry = {}
-                for slot, sid in enumerate(lane.slots):
-                    if (sid is not _FREE and sid in lane.stateful
-                            and heads[slot] is not None):
-                        prev_carry[sid] = jax.tree_util.tree_map(
-                            lambda a, s=slot: a[s], state_in)
-            if state_commit is not None:
-                state_commits.append((state_commit, new_state))
-            entries = [None if w is None else slot
-                       for slot, w in enumerate(heads)]
-            ran.append(_InflightLane(
-                lane=lane, key=key, entries=entries, kind=kind,
-                pending=pending, prev_carry=prev_carry))
+            ran.append(rec)
+            if commit is not None:
+                state_commits.append(commit)
         # Commit: every lane dispatched -- pop the served heads and
         # advance each lane's carried state.
         for commit, new_state in state_commits:
@@ -1897,7 +2000,231 @@ class StreamEngine:
                 self.stream_stats[sid].queued -= 1
                 rec.entries[i] = (sid, entry.seq, entry.deadline)
                 rec.items[i] = entry
+                if self._pairs:
+                    self._note_pair_dispatch(sid, entry.seq)
         return ran
+
+    def _dispatch_lane(self, lane: EngineLane, heads: List,
+                       eager: bool) -> tuple:
+        """One lane's dispatch (phase 2 of :meth:`_dispatch`): returns
+        ``(record, state_commit_or_None)``; raises with the lane's
+        queues untouched."""
+        batch = lane.engine.prepare(heads, batch_size=len(lane.slots))
+        key = lane.engine.shape_key(batch)
+        state_in, state_commit = self._lane_state_in(lane)
+        dispatch = getattr(lane.engine, "infer_dispatch", None)
+        collect = getattr(lane.engine, "infer_collect", None)
+        has_split = dispatch is not None and collect is not None
+        new_state = None
+        if eager or (state_in is not None and not has_split):
+            # Synchronous infer. A stateful engine WITHOUT the async
+            # split also lands here under pipelining: its carry must
+            # advance in dispatch order, so its infer cannot wait for
+            # the (later) collect.
+            if state_in is None:
+                # Stateless lanes ride the engines' legacy call form by
+                # design; the deprecation nudge is for end users.
+                with suppress_api_deprecations():
+                    results = lane.engine.infer(batch)
+                kind, pending = "results", results
+            else:
+                results, new_state = lane.engine.infer(batch, state_in)
+                kind, pending = "results", results
+        elif has_split:
+            if state_in is None:
+                kind, pending = "handle", dispatch(batch)
+            else:
+                # Async dispatch: new_state is a pytree of device
+                # futures, threaded into the NEXT dispatch without ever
+                # blocking on (or copying to) the host.
+                pending, new_state = dispatch(batch, state_in)
+                kind = "handle"
+        else:
+            kind, pending = "batch", batch
+        rec = _InflightLane(
+            lane=lane, key=key,
+            entries=[None if w is None else slot
+                     for slot, w in enumerate(heads)],
+            kind=kind, pending=pending,
+            prev_carry=self._prev_carry(lane, heads, state_in))
+        commit = ((state_commit, new_state)
+                  if state_commit is not None else None)
+        return rec, commit
+
+    def _prev_carry(self, lane: EngineLane, heads: List, state_in):
+        """The rollback target quarantine restores: each dispatched
+        stateful stream's pre-window carry, as a lazy device slice of
+        the state that was fed in (recovery only)."""
+        if self.recovery is None or state_in is None:
+            return None
+        prev = {}
+        for slot, sid in enumerate(lane.slots):
+            if (sid is not _FREE and sid in lane.stateful
+                    and heads[slot] is not None):
+                prev[sid] = jax.tree_util.tree_map(
+                    lambda a, s=slot: a[s], state_in)
+        return prev
+
+    # -- fusion co-scheduling and the fused megastep ---------------------
+
+    def _coschedule(self, lanes: List[EngineLane]) -> None:
+        """Fusion-aware fixup after policy assignment: for every paired
+        stream holding a slot with queued work, pull its partner into
+        the partner's lane for this SAME step -- into a free slot when
+        one exists, else by evicting a seated stream that is not itself
+        half of a co-scheduled pair (the evictee rejoins the FRONT of
+        its waiting line, keeping its priority over never-seated
+        arrivals). Dead, cooling, or drained partner lanes are left
+        alone: a surviving wing is never blocked on a wing that cannot
+        run. Scheduling-only -- per-window results are bitwise
+        unchanged; only WHICH step serves a window moves."""
+        by_mod = {lane.modality: lane for lane in lanes}
+        for lane in lanes:
+            for sid in lane.slots:
+                if sid is _FREE or not lane.queues.get(sid):
+                    continue
+                partner = self._pairs.get(sid)
+                if partner is None:
+                    continue
+                plane = by_mod.get(self._stream_lane.get(partner))
+                if (plane is None or partner in plane.slots
+                        or not plane.queues.get(partner)):
+                    continue
+                self._seat_partner(plane, partner)
+
+    def _seat_partner(self, lane: EngineLane, sid: Hashable) -> bool:
+        """Seat ``sid`` in ``lane`` for this step (co-scheduling only);
+        returns whether a slot was won."""
+        free = next((i for i, cur in enumerate(lane.slots)
+                     if cur is _FREE), None)
+        if free is None:
+            # Evict: the first victim whose own pairing does not tie it
+            # to this step (unpaired, or its partner is not seated).
+            for i, cur in enumerate(lane.slots):
+                p = self._pairs.get(cur)
+                if p is None:
+                    free = i
+                    break
+                plane = self._lanes.get(self._stream_lane.get(p, ""))
+                if plane is None or p not in plane.slots:
+                    free = i
+                    break
+            if free is None:
+                return False
+            evicted = lane.slots[free]
+            lane.slot_runs[free] = 0
+            if lane.queues.get(evicted):
+                # Front of the line: the evictee was seated and must
+                # not requeue behind streams that never had a slot
+                # (the resize_lane eviction rule).
+                lane.waiting.appendleft(evicted)
+        lane.slots[free] = sid
+        lane.slot_runs[free] = 0
+        try:
+            lane.waiting.remove(sid)
+        except ValueError:
+            pass
+        # Mirror the policies' take-side bookkeeping: a seated stream's
+        # aging restarts exactly as if the policy had taken it.
+        forget = getattr(self.policy, "forget", None)
+        if forget is not None:
+            forget(sid)
+        return True
+
+    def _note_pair_dispatch(self, sid: Hashable, seq: int) -> None:
+        """Pair bookkeeping at dispatch commit: when both wings of a
+        paired tick have dispatched, credit a fusion tick to both
+        streams' stats (paired when the wings shared one engine step).
+        """
+        partner = self._pairs.get(sid)
+        if partner is None:
+            return
+        other_step = self._pair_dispatch.pop((partner, seq), None)
+        if other_step is None:
+            self._pair_dispatch[(sid, seq)] = self._dispatch_no
+            return
+        paired = int(other_step == self._dispatch_no)
+        for s in (sid, partner):
+            st = self.stream_stats.get(s)
+            if st is not None:
+                st.fusion_ticks += 1
+                st.fusion_ticks_paired += paired
+
+    def _mega_executable(self, ev_lane: EngineLane, fr_lane: EngineLane,
+                         ev_key, fr_key) -> Callable:
+        """AOT-compile (once) the fused two-wing executable for a pair
+        of per-wing shape keys. The program is the wings' OWN run
+        functions lowered side by side -- XLA schedules the SNN scan and
+        the ternary conv stack in one compiled call -- so each wing's
+        half stays bitwise-identical to that wing's separate executable.
+        """
+        cache_key = (ev_key, fr_key)
+        exe = self._mega_exe.get(cache_key)
+        if exe is None:
+            ev_run, ev_abs = ev_lane.engine._mega_parts(ev_key)
+            fr_run, fr_abs = fr_lane.engine._mega_parts(fr_key)
+
+            def mega(ev_args, fr_args):
+                return ev_run(*ev_args), fr_run(*fr_args)
+
+            exe = jax.jit(mega).lower(ev_abs, fr_abs).compile()
+            self._mega_exe[cache_key] = exe
+        return exe
+
+    def _mega_dispatch(self, work: List[tuple], eager: bool) -> tuple:
+        """Both wings' dispatch through one fused jit'd call; returns
+        ``(records, state_commits)`` shaped exactly as two ordinary
+        per-lane dispatches, so collection, recovery, quarantine, and
+        pipelining downstream are unchanged. Raises with every queue
+        untouched (the caller charges the failure to both lanes)."""
+        by_mod = {lane.modality: (lane, heads) for lane, heads in work}
+        ev_lane, ev_heads = by_mod["event"]
+        fr_lane, fr_heads = by_mod["frame"]
+        ev_batch = ev_lane.engine.prepare(
+            ev_heads, batch_size=len(ev_lane.slots))
+        ev_key = ev_lane.engine.shape_key(ev_batch)
+        fr_batch = fr_lane.engine.prepare(
+            fr_heads, batch_size=len(fr_lane.slots))
+        fr_key = fr_lane.engine.shape_key(fr_batch)
+        ev_state, ev_commit = self._lane_state_in(ev_lane)
+        fr_state, fr_commit = self._lane_state_in(fr_lane)
+        exe = self._mega_executable(ev_lane, fr_lane, ev_key, fr_key)
+        ev_out, fr_out = exe(
+            ev_lane.engine._mega_args(ev_batch, ev_state),
+            fr_lane.engine._mega_args(fr_batch, fr_state))
+        ev_pending, ev_new = ev_lane.engine._mega_split(
+            ev_out, ev_batch, ev_state)
+        fr_pending, fr_new = fr_lane.engine._mega_split(
+            fr_out, fr_batch, fr_state)
+        if eager:
+            # Synchronous mode stays retry-safe: materialize BOTH
+            # wings' results before any queue state moves.
+            ev_kind, ev_pending = "results", ev_lane.engine.infer_collect(
+                ev_pending)
+            fr_kind, fr_pending = "results", fr_lane.engine.infer_collect(
+                fr_pending)
+        else:
+            ev_kind = fr_kind = "handle"
+        recs: List[_InflightLane] = []
+        commits: List[tuple] = []
+        for lane, heads, key, kind, pending, state_in, commit, new in (
+                (ev_lane, ev_heads, ev_key, ev_kind, ev_pending,
+                 ev_state, ev_commit, ev_new),
+                (fr_lane, fr_heads, fr_key, fr_kind, fr_pending,
+                 fr_state, fr_commit, fr_new)):
+            recs.append(_InflightLane(
+                lane=lane, key=key,
+                entries=[None if w is None else slot
+                         for slot, w in enumerate(heads)],
+                kind=kind, pending=pending,
+                prev_carry=self._prev_carry(lane, heads, state_in)))
+            if commit is not None:
+                commits.append((commit, new))
+        # Records in lane declaration order, exactly as the per-lane
+        # path emits them, so result ordering is bitwise unchanged.
+        order = {m: i for i, m in enumerate(self._lanes)}
+        recs.sort(key=lambda r: order[r.lane.modality])
+        return recs, commits
 
     def _collect(self, ran: List[_InflightLane]) -> List[StreamResult]:
         """Block on a dispatched step's device results and emit them."""

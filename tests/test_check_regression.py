@@ -17,8 +17,10 @@ _SPEC.loader.exec_module(check_regression)
 
 
 def _doc(batched=600.0, looped=300.0, stateful=590.0, stateless=600.0,
-         fused=200.0, separate=195.0, with_stateful=True,
+         fused=230.0, separate=195.0, fusion=None, with_stateful=True,
          with_fusion=True, with_sharded=True, sharded=None,
+         with_hetero=True, hetero_mixed=1800.0, hetero_event=900.0,
+         hetero_frame=3900.0,
          with_fleet=True, static_miss=0.25, rebal_miss=0.0,
          fleet_rebal=580.0, fleet_static=560.0, migrations=3,
          with_fault=True, fault_clean=24.0, fault_faulted=23.0,
@@ -34,11 +36,21 @@ def _doc(batched=600.0, looped=300.0, stateful=590.0, stateless=600.0,
             "stateful_windows_per_s": stateful,
             "stateful_over_stateless": stateful / stateless}]
     if with_fusion:
+        fusion = {2: (fused, separate)} if fusion is None else fusion
         doc["fusion_rows"] = [{
-            "sessions": 2,
-            "separate_ticks_per_s": separate,
-            "fused_ticks_per_s": fused,
-            "fused_over_separate": fused / separate}]
+            "sessions": s,
+            "separate_ticks_per_s": sep,
+            "fused_ticks_per_s": fus,
+            "fused_over_separate": fus / sep}
+            for s, (fus, sep) in sorted(fusion.items())]
+    if with_hetero:
+        serial = 2.0 / (1.0 / hetero_event + 1.0 / hetero_frame)
+        doc["hetero_rows"] = [{
+            "slots_per_engine": 4, "windows_per_stream": 8,
+            "event_windows_per_s": hetero_event,
+            "frame_windows_per_s": hetero_frame,
+            "mixed_windows_per_s": hetero_mixed,
+            "mixed_over_serial": hetero_mixed / serial}]
     if with_sharded:
         sharded = {1: 600.0, 2: 610.0, 4: 590.0} if sharded is None else sharded
         single = sharded[min(sharded)]
@@ -92,7 +104,9 @@ def test_slow_runner_passes_via_ratio_fallback(tmp_path):
     assert _run(tmp_path, _doc(),
                 _doc(batched=300.0, looped=150.0,
                      stateful=295.0, stateless=300.0,
-                     fused=100.0, separate=97.0)) == 0
+                     fused=115.0, separate=97.0,
+                     hetero_mixed=900.0, hetero_event=450.0,
+                     hetero_frame=1950.0)) == 0
 
 
 def test_stateful_cell_regression_fails(tmp_path):
@@ -147,7 +161,67 @@ def test_fusion_regression_fails(tmp_path):
 def test_fusion_slow_runner_passes_via_ratio(tmp_path):
     # Both fusion cells uniformly slower: ratio holds, gate passes.
     assert _run(tmp_path, _doc(),
-                _doc(fused=100.0, separate=98.0)) == 0
+                _doc(fused=116.0, separate=98.0)) == 0
+
+
+def test_fusion_floor_fails_even_against_baseline_ratio(tmp_path):
+    """The fused-over-separate floor is fresh-only and absolute: a
+    fused cell that merely tracks a weak baseline ratio (here 1.05,
+    above the 0.8x-of-baseline fallback) still fails the 1.1 floor --
+    fused serving must actually beat the separate wings."""
+    assert _run(tmp_path, _doc(),
+                _doc(fused=205.0, separate=195.0)) == 1
+
+
+def test_fusion_floor_exempts_single_session(tmp_path):
+    # One session cannot amortize the shared step: S=1 is gated against
+    # the baseline but exempt from the >= 1.1 floor.
+    rows = {1: (100.0, 99.0), 2: (230.0, 195.0)}
+    assert _run(tmp_path, _doc(fusion=rows), _doc(fusion=rows)) == 0
+    slow = {1: (100.0, 99.0), 2: (205.0, 195.0)}
+    assert _run(tmp_path, _doc(fusion=rows), _doc(fusion=slow)) == 1
+
+
+def test_fusion_floor_is_configurable(tmp_path):
+    fresh = _doc(fused=205.0, separate=195.0)         # ratio 1.05
+    assert _run(tmp_path, _doc(), fresh) == 1
+    assert _run(tmp_path, _doc(), fresh,
+                extra=("--fusion-ratio-floor", "1.0")) == 0
+
+
+def test_fusion_gates_only_common_session_counts(tmp_path):
+    # A fresh sweep wider than the baseline gates the overlap and warns
+    # on the new session counts (old baseline predates the sweep).
+    assert _run(tmp_path, _doc(fusion={2: (230.0, 195.0)}),
+                _doc(fusion={2: (230.0, 195.0),
+                             4: (240.0, 195.0)})) == 0
+
+
+# -- the mixed-fleet hetero cell ----------------------------------------------
+
+def test_missing_fresh_hetero_cell_fails(tmp_path):
+    assert _run(tmp_path, _doc(), _doc(with_hetero=False)) == 1
+
+
+def test_old_baseline_without_hetero_warns_and_passes(tmp_path):
+    """A baseline predating hetero_rows must not block the transition:
+    the hetero gate is skipped with a warning, everything else gates."""
+    assert _run(tmp_path, _doc(with_hetero=False), _doc()) == 0
+    assert _run(tmp_path, _doc(with_hetero=False),
+                _doc(batched=300.0, looped=290.0)) == 1
+
+
+def test_hetero_regression_fails(tmp_path):
+    # Mixed throughput collapsed while the per-wing cells held: both
+    # the absolute floor and the mixed-over-serial ratio miss.
+    assert _run(tmp_path, _doc(), _doc(hetero_mixed=700.0)) == 1
+
+
+def test_hetero_slow_runner_passes_via_ratio(tmp_path):
+    # All three hetero cells uniformly slower: the ratio holds.
+    assert _run(tmp_path, _doc(),
+                _doc(hetero_mixed=900.0, hetero_event=450.0,
+                     hetero_frame=1950.0)) == 0
 
 
 # -- the sharded serving cells ------------------------------------------------

@@ -1,0 +1,329 @@
+"""Fusion co-scheduling + the cross-wing megastep, pinned under
+adversarial load.
+
+The two contracts of the fused fast path:
+
+  * SCHEDULING may move (paired wings pulled into the same engine step;
+    both wings dispatched through one fused jit'd call) but RESULTS may
+    not: every fused tick stays bitwise-identical to serving the wings
+    on separate single-wing engines -- at B in {1, 4, 8}, sync and
+    pipelined, stateless and stateful (carried LIF membranes), under
+    DeadlinePolicy reorder, and across a PR 8-style wing fault.
+  * The co-scheduler's effect is observable: ``paired_tick_rate`` in
+    ``StreamStats.snapshot()`` / ``LaneTelemetry`` reports the fraction
+    of fusion ticks whose two wing windows shared one engine step.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, FrameTCNEngine, SNNConfig, TCNConfig,
+                        init_snn, init_tcn)
+from repro.core import frames as fr
+from repro.core._api import RecoveryConfig
+from repro.core.pipeline import BatchedClosedLoop
+from repro.fleet import FaultInjector
+from repro.serving import (DeadlinePolicy, FusionSession, StreamEngine,
+                           late_logit_fusion)
+
+from tests.test_stateful_stream import _windows
+
+TICKS = 3
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return SNNConfig(height=32, width=32, time_bins=4, conv1_features=4,
+                     conv2_features=8, hidden=32, num_classes=11)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_snn(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def tcfg():
+    return TCNConfig(height=32, width=32, conv1_features=4,
+                     conv2_features=8, hidden=32, num_classes=11)
+
+
+@pytest.fixture(scope="module")
+def tparams(tcfg):
+    return init_tcn(jax.random.PRNGKey(1), tcfg)
+
+
+def _frames(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [fr.synthetic_gesture_frames(rng, i % 11, height=32, width=32)
+            for i in range(n)]
+
+
+def _tick_data(sessions, ticks=TICKS):
+    return [(_windows(ticks, seed=10 + i), _frames(ticks, seed=20 + i))
+            for i in range(sessions)]
+
+
+def _run_fused(params, cfg, tparams, tcfg, data, *, stateful=False,
+               **cfg_kw):
+    """Serve ``data`` through FusionSessions on one engine; returns
+    ({session_id: [ticks in seq order]}, engine)."""
+    sessions = len(data)
+    eng = StreamEngine(
+        engines=[BatchedClosedLoop(params, cfg),
+                 FrameTCNEngine(tparams, tcfg)],
+        config=EngineConfig(max_streams=sessions, **cfg_kw))
+    sess = [FusionSession(eng, session_id=f"s{i}", stateful=stateful)
+            for i in range(sessions)]
+    n_ticks = len(data[0][0])
+    for t in range(n_ticks):
+        for s, (evs, frs) in zip(sess, data):
+            s.submit(evs[t], frs[t])
+    out = {s.session_id: [] for s in sess}
+    done, guard = 0, 0
+    while done < sessions * n_ticks:
+        rows = eng.step()
+        guard += 1
+        assert guard < 50 * sessions * n_ticks
+        for s in sess:
+            rows = s.absorb(rows)
+            got = s.drain()
+            out[s.session_id].extend(got)
+            done += len(got)
+    for sid in out:
+        out[sid].sort(key=lambda r: r.seq)
+    return out, eng
+
+
+def _run_separate(params, cfg, tparams, tcfg, data, *, stateful=False):
+    """The decoupled oracle: each session's wings on their own
+    single-wing sync engines; returns {sid: (event_rows, frame_rows)}."""
+    outs = {}
+    for i, (evs, frs) in enumerate(data):
+        e1 = StreamEngine(engines=[BatchedClosedLoop(params, cfg)],
+                          config=EngineConfig(max_streams=1))
+        e2 = StreamEngine(engines=[FrameTCNEngine(tparams, tcfg)],
+                          config=EngineConfig(max_streams=1))
+        h_e = e1.open(modality="event", stateful=stateful)
+        h_f = e2.open(modality="frame", stateful=stateful)
+        res_e, res_f = [], []
+        for t in range(len(evs)):
+            h_e.submit(evs[t])
+            res_e += e1.run()
+            h_f.submit(frs[t])
+            res_f += e2.run()
+        outs[f"s{i}"] = (res_e, res_f)
+    return outs
+
+
+def _assert_ticks_match(ticks, res_e, res_f, ctx):
+    """Every fused tick bitwise-identical to fusing the separate-wing
+    rows (same rule, same inputs => byte-equal logits and pwm)."""
+    rule = late_logit_fusion()
+    assert len(ticks) == len(res_e) == len(res_f), ctx
+    for tk, re_, rf_ in zip(ticks, res_e, res_f):
+        assert tk.status == "ok", (ctx, tk.status, tk.error)
+        want = np.asarray(rule(re_.result, rf_.result))
+        assert np.array_equal(np.asarray(tk.result.logits), want), \
+            (ctx, tk.seq)
+
+
+# -- bitwise parity under the fused fast path --------------------------------
+
+@pytest.mark.parametrize("sessions", [1, 4, 8])
+@pytest.mark.parametrize("depth", [0, 1])
+@pytest.mark.parametrize("stateful", [False, True])
+def test_fused_bitwise_vs_separate(params, cfg, tparams, tcfg, sessions,
+                                   depth, stateful):
+    data = _tick_data(sessions)
+    fused, eng = _run_fused(params, cfg, tparams, tcfg, data,
+                            stateful=stateful, megastep=True,
+                            pipeline_depth=depth)
+    sep = _run_separate(params, cfg, tparams, tcfg, data,
+                        stateful=stateful)
+    for sid, ticks in fused.items():
+        _assert_ticks_match(ticks, *sep[sid],
+                            (sessions, depth, stateful, sid))
+    # Co-scheduling kept every tick's wings in one engine step.
+    for m in ("event", "frame"):
+        assert eng.telemetry(m).paired_tick_rate == 1.0
+
+
+def test_megastep_off_is_bitwise_identical_to_megastep_on(
+        params, cfg, tparams, tcfg):
+    """The megastep is a pure dispatch fusion: same engine, same
+    sessions, megastep on vs off -- byte-equal fused logits."""
+    data = _tick_data(2)
+    on, _ = _run_fused(params, cfg, tparams, tcfg, data, stateful=True,
+                       megastep=True, pipeline_depth=1)
+    off, _ = _run_fused(params, cfg, tparams, tcfg, data, stateful=True,
+                        megastep=False, pipeline_depth=1)
+    for sid in on:
+        for a, b in zip(on[sid], off[sid]):
+            assert np.array_equal(np.asarray(a.result.logits),
+                                  np.asarray(b.result.logits))
+
+
+def test_deadline_policy_reorder_keeps_pairing_and_parity(
+        params, cfg, tparams, tcfg):
+    """Contended lanes under DeadlinePolicy (EDF reorder, fewer slots
+    than sessions): the co-scheduler still lands both wings of every
+    tick in one step and results stay bitwise."""
+    sessions, slots = 4, 2
+    data = _tick_data(sessions)
+    eng = StreamEngine(
+        engines=[BatchedClosedLoop(params, cfg),
+                 FrameTCNEngine(tparams, tcfg)],
+        config=EngineConfig(max_streams=slots, policy=DeadlinePolicy(),
+                            megastep=True))
+    sess = [FusionSession(eng, session_id=f"s{i}",
+                          deadline=float(sessions - i))
+            for i in range(sessions)]
+    for t in range(TICKS):
+        for s, (evs, frs) in zip(sess, data):
+            s.submit(evs[t], frs[t])
+    out = {s.session_id: [] for s in sess}
+    done, guard = 0, 0
+    while done < sessions * TICKS:
+        rows = eng.step()
+        guard += 1
+        assert guard < 200
+        for s in sess:
+            rows = s.absorb(rows)
+            got = s.drain()
+            out[s.session_id].extend(got)
+            done += len(got)
+    sep = _run_separate(params, cfg, tparams, tcfg, data)
+    for sid, ticks in out.items():
+        ticks.sort(key=lambda r: r.seq)
+        _assert_ticks_match(ticks, *sep[sid], ("deadline", sid))
+    for m in ("event", "frame"):
+        assert eng.telemetry(m).paired_tick_rate == 1.0
+
+
+def test_wing_fault_degrades_but_survivor_stays_coscheduled(
+        params, cfg, tparams, tcfg):
+    """A PR 8-style wing fault under the megastep: the frame wing is
+    killed mid-flight; ticks degrade to the surviving event wing, whose
+    results stay bitwise vs separate serving -- the fused call falls
+    back to per-lane dispatch so the fault localizes to the bad wing."""
+    data = _tick_data(1, ticks=6)
+    inj = FaultInjector()
+    eng = StreamEngine(
+        engines=[inj.wrap(BatchedClosedLoop(params, cfg)),
+                 inj.wrap(FrameTCNEngine(tparams, tcfg))],
+        config=EngineConfig(max_streams=1, megastep=True,
+                            recovery=RecoveryConfig(max_retries=0,
+                                                    backoff_steps=0,
+                                                    dead_after=2)))
+    sess = FusionSession(eng, session_id="s0")
+    evs, frs = data[0]
+    rows = []
+    for t in range(3):                         # healthy fused ticks
+        sess.submit(evs[t], frs[t])
+        rows.extend(sess.step())
+    inj.kill("frame")
+    for t in range(3, 6):                      # degraded ticks
+        sess.submit(evs[t], frs[t])
+    guard = 0
+    while len(rows) < 6:
+        rows.extend(sess.step())
+        guard += 1
+        assert guard < 40
+    rows.sort(key=lambda r: r.seq)
+    assert [r.status for r in rows] == ["ok"] * 3 + ["degraded"] * 3
+    assert all(r.result.breakdown["degraded_wing"] == "frame"
+               for r in rows[3:])
+    # The surviving event wing's windows are bitwise vs separate.
+    sep_e, _ = _run_separate(params, cfg, tparams, tcfg,
+                             [data[0]])["s0"]
+    for r, want in zip(rows[3:], sep_e[3:]):
+        assert np.array_equal(np.asarray(r.result.logits),
+                              np.asarray(want.result.logits))
+    assert sess.ticks_degraded == 3
+    assert eng.telemetry("frame").dead
+
+
+# -- opt-in surface ----------------------------------------------------------
+
+def test_megastep_mesh_is_rejected_cleanly():
+    with pytest.raises(ValueError, match="single-device"):
+        EngineConfig(megastep=True, mesh=object())
+
+
+def test_megastep_needs_both_wings(params, cfg):
+    with pytest.raises(ValueError, match="event and one frame"):
+        StreamEngine(engines=[BatchedClosedLoop(params, cfg)],
+                     config=EngineConfig(max_streams=1, megastep=True))
+
+
+def test_megastep_needs_capable_engines(params, cfg):
+    from tests.test_slot_policy import StubEngine
+    ev_stub = StubEngine()
+    ev_stub.modality = "event"
+    fr_stub = StubEngine()
+    fr_stub.modality = "frame"
+    with pytest.raises(ValueError, match="megastep"):
+        StreamEngine(engines=[ev_stub, fr_stub],
+                     config=EngineConfig(max_streams=1, megastep=True))
+
+
+def test_megastep_warmup_precompiles(params, cfg, tparams, tcfg):
+    def mk():
+        return StreamEngine(
+            engines=[BatchedClosedLoop(params, cfg),
+                     FrameTCNEngine(tparams, tcfg)],
+            config=EngineConfig(max_streams=1, megastep=True))
+
+    (evs, frs), = _tick_data(1, ticks=1)
+    # Discover the workload's fused shape key by serving it once...
+    probe = mk()
+    s0 = FusionSession(probe, session_id="s0")
+    s0.submit(evs[0], frs[0])
+    [r] = s0.run()
+    assert r.status == "ok"
+    [key] = probe.compiled_megastep_keys()
+    # ...then AOT-warm a fresh engine with it: serving hits the cache
+    # (no new entry) and a non-megastep engine refuses the warmup.
+    eng = mk()
+    assert eng.compiled_megastep_keys() == set()
+    eng.warmup_megastep([key])
+    assert eng.compiled_megastep_keys() == {key}
+    s1 = FusionSession(eng, session_id="s0")
+    s1.submit(evs[0], frs[0])
+    [r] = s1.run()
+    assert r.status == "ok"
+    assert eng.compiled_megastep_keys() == {key}
+    plain = StreamEngine(
+        engines=[BatchedClosedLoop(params, cfg),
+                 FrameTCNEngine(tparams, tcfg)],
+        config=EngineConfig(max_streams=1))
+    with pytest.raises(ValueError, match="megastep"):
+        plain.warmup_megastep([key])
+
+
+# -- paired_tick_rate observability ------------------------------------------
+
+def test_paired_tick_rate_in_snapshot_and_telemetry(params, cfg, tparams,
+                                                    tcfg):
+    data = _tick_data(2)
+    _, eng = _run_fused(params, cfg, tparams, tcfg, data, megastep=False)
+    for sid in ("s0:event", "s0:frame", "s1:event", "s1:frame"):
+        snap = eng.stream_stats[sid].snapshot()
+        assert snap.fusion_ticks == TICKS
+        assert snap.fusion_ticks_paired == TICKS
+        assert snap.paired_tick_rate == 1.0
+    for m in ("event", "frame"):
+        assert eng.telemetry(m).paired_tick_rate == 1.0
+
+
+def test_unpaired_streams_report_unit_rate(params, cfg):
+    """Plain streams never tick the fusion counters; the rate degrades
+    to the no-signal default 1.0 rather than 0/0."""
+    eng = StreamEngine(params, cfg, EngineConfig(max_streams=1))
+    h = eng.open()
+    h.submit(_windows(1, seed=3)[0])
+    eng.run()
+    snap = eng.stream_stats[h.stream_id].snapshot()
+    assert snap.fusion_ticks == 0 and snap.paired_tick_rate == 1.0
+    assert eng.telemetry().paired_tick_rate == 1.0
